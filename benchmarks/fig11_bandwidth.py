@@ -1,0 +1,37 @@
+"""Fig. 11 analogue: measured channel bandwidth vs buffer size.
+
+Intra-thread vs cross-thread FIFO round trips (paper §VII-C) and the
+host→device transfer curve (the OpenCL write-bandwidth analogue), plus the
+fitted affine link models ξ(b) that parameterize the MILP."""
+
+from __future__ import annotations
+
+from _util import emit
+
+from repro.core.profiler import measure_device_link, measure_fifo_bandwidth
+
+
+def main() -> None:
+    intra, pts_i = measure_fifo_bandwidth(
+        cross_thread=False, sizes=(64, 256, 1024, 4096, 16384)
+    )
+    inter, pts_x = measure_fifo_bandwidth(
+        cross_thread=True, sizes=(64, 256, 1024, 4096, 16384)
+    )
+    dev, pts_d = measure_device_link()
+    for tag, pts in (("intra", pts_i), ("inter", pts_x), ("device", pts_d)):
+        for b, t in pts:
+            emit(
+                f"fig11/{tag}/bytes={b}",
+                t * 1e6,
+                f"bw={b/max(t,1e-12)/1e6:.1f}MB/s",
+            )
+    for tag, m in (("intra", intra), ("inter", inter), ("device", dev)):
+        emit(
+            f"fig11/{tag}/model", m.latency_s * 1e6,
+            f"latency={m.latency_s*1e6:.2f}us bw={m.bandwidth_Bps/1e6:.0f}MB/s",
+        )
+
+
+if __name__ == "__main__":
+    main()

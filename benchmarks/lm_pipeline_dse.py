@@ -1,0 +1,33 @@
+"""LM pipeline-stage DSE: the paper's partitioner applied to the 10 assigned
+architectures on TPU sub-meshes (chain DP over the layer graph; ICI/DCN link
+models as the stage-crossing cost)."""
+
+from __future__ import annotations
+
+from _util import emit
+
+from repro.configs import list_archs, get_config
+from repro.core.cost_model import DEFAULT_LINKS, LinkModel
+from repro.core.partitioner import explore_lm
+
+
+def main() -> None:
+    for arch in list_archs():
+        cfg = get_config(arch)
+        plans = explore_lm(
+            cfg, seq_len=4096, global_batch=256, total_chips=256,
+            stage_options=(1, 2, 4, 8),
+        )
+        best = min(plans, key=lambda p: p.bottleneck_s)
+        detail = " ".join(
+            f"s{p.num_stages}={p.bottleneck_s*1e3:.0f}ms" for p in plans
+        )
+        emit(
+            f"lm_pipeline/{arch}",
+            best.bottleneck_s * 1e6,
+            f"best_stages={best.num_stages} {detail}",
+        )
+
+
+if __name__ == "__main__":
+    main()

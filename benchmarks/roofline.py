@@ -1,0 +1,204 @@
+"""§Roofline: derive the three roofline terms per (arch × shape × mesh) from the
+dry-run artifacts (while-aware HLO analysis, artifacts/dryrun/*.json).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+  collective = ici_bytes/dev / 50 GB/s + dcn_bytes/dev / per-chip DCN share
+
+(The analyzer reports per-device totals of the post-SPMD program, so dividing the
+global quantities by `chips` is already done.)  Also reported: MODEL_FLOPS = 6·N·D
+(2·N·D·fwd-mult for inference), the useful-compute ratio MODEL/HLO, the dominant
+term, and a bottleneck note.  Output: artifacts/roofline.csv + a markdown table.
+"""
+
+from __future__ import annotations
+
+import csv
+import glob
+import json
+from pathlib import Path
+
+from _util import emit
+
+PEAK = 197e12  # bf16 FLOP/s per chip
+HBM = 819e9  # B/s per chip
+ICI = 50e9  # B/s per link (assignment constant)
+DCN_PER_CHIP = 6.25e9 / 8  # 50 Gb/s per host pair / 8 chips per host
+
+NOTES = {
+    "compute": "raise MFU: fuse/eliminate recompute (remat policy), pack causal blocks",
+    "memory": "fuse elementwise chains; bf16 residents; bigger arithmetic intensity per pass",
+    "collective": "reshard to cut all-gathers (weight-stationary), overlap or compress (int8 DCN)",
+}
+
+
+def load_cells(d="artifacts/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(f"{d}/*.json")):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def analytic_flops(cell) -> float:
+    """Useful global FLOPs for the cell: parameter matmuls (6ND train / 2ND fwd)
+    plus the sequence-mixing work 6ND misses — causal attention over the true
+    (triangular) score area, SSD intra-chunk quadratic terms, and MoE capacity
+    slack — the algorithmic minimum a perfect implementation needs."""
+    from repro.configs import SHAPE_CELLS, get_config
+
+    cfg = get_config(cell["arch"])
+    sc = SHAPE_CELLS[cell["shape"]]
+    pc = cfg.param_counts()
+    mult = 3.0 if sc.kind == "train" else 1.0
+    B = sc.global_batch
+    if sc.kind == "decode":
+        tokens = B
+        f = 2.0 * pc["active"] * tokens
+        for i in range(cfg.num_layers):
+            kind = cfg.block_kind(i)
+            if kind.mixer == "attn":
+                clen = min(sc.seq_len, cfg.sliding_window or sc.seq_len)
+                f += 4.0 * B * clen * cfg.num_heads * cfg.head_dim
+            else:
+                f += 6.0 * B * cfg.d_inner * cfg.ssm_state
+        return f
+    S = sc.seq_len
+    tokens = B * S
+    f = 2.0 * pc["active"] * tokens
+    for i in range(cfg.num_layers):
+        kind = cfg.block_kind(i)
+        if kind.mixer == "attn":
+            w = min(S, cfg.sliding_window or S)
+            area = S * w - w * w / 2 if w < S else S * S / 2
+            f += 4.0 * B * area * cfg.num_heads * cfg.head_dim
+        else:
+            Q = cfg.ssm_chunk
+            f += 4.0 * B * S * Q * cfg.d_inner / 2
+            f += 6.0 * B * S * cfg.d_inner * cfg.ssm_state
+    return f * mult
+
+
+def analytic_min_bytes(cell) -> float:
+    """Napkin lower bound on per-device HBM traffic for the step — the floor the
+    memory term is judged against (params/opt/cache/activations each touched the
+    minimal number of times)."""
+    from repro.configs import SHAPE_CELLS, get_config
+
+    cfg = get_config(cell["arch"])
+    sc = SHAPE_CELLS[cell["shape"]]
+    chips = 512 if cell.get("multi_pod") else 256
+    pc = cfg.param_counts()
+    N, Na = pc["total"], pc["active"]
+    d = cfg.d_model
+    if sc.kind == "train":
+        tokens = sc.global_batch * sc.seq_len
+        # params: fwd + remat + bwd reads (bf16) + write; adam m,v read+write f32;
+        # activations: ~8 residual-sized tensors per layer per pass, bf16
+        b = N * 2 * 4 + N * 4 * 4 + tokens * d * cfg.num_layers * 8 * 2 * 2
+    elif sc.kind == "prefill":
+        tokens = sc.global_batch * sc.seq_len
+        b = N * 2 + tokens * d * cfg.num_layers * 6 * 2
+    else:  # decode: read all active params + the whole KV/SSM cache once
+        cache = 0
+        for i in range(cfg.num_layers):
+            if cfg.block_kind(i).mixer == "attn":
+                clen = min(sc.seq_len, cfg.sliding_window or sc.seq_len)
+                cache += (
+                    sc.global_batch * clen * cfg.num_kv_heads * cfg.head_dim * 2 * 2
+                )
+            else:
+                cache += sc.global_batch * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        b = Na * 2 + cache
+    return b / chips
+
+
+def roofline_row(cell):
+    a = cell["analyzed"]
+    chips = 512 if cell.get("multi_pod") else 256
+    compute = a["flops"] / PEAK
+    # memory term: perfect-fusion traffic (TPU-realistic); the raw
+    # fusion-boundary sum is reported as memory_hi (CPU-backend upper bound)
+    memory = a.get("bytes_fused", a["bytes"]) / HBM
+    memory_hi = a["bytes"] / HBM
+    coll = a["ici_bytes"] / ICI + a["dcn_bytes"] / DCN_PER_CHIP
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    model = analytic_flops(cell) / chips  # incl. attention/SSD/MoE mixing work
+    model_6nd = cell["model_flops_global"] / chips
+    ratio = model / max(a["flops"], 1e-9)
+    bound = max(terms.values())
+    # roofline fraction: the *necessary* time (useful FLOPs at peak, or minimal
+    # HBM traffic at full bandwidth, whichever binds) over the achieved bound
+    min_bytes = analytic_min_bytes(cell)
+    necessary = max(model / PEAK, min_bytes / HBM)
+    frac_of_roofline = necessary / max(bound, 1e-12)
+    return {
+        "arch": cell["arch"],
+        "shape": cell["shape"],
+        "mesh": cell["mesh"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "memory_hi_s": memory_hi,
+        "collective_s": coll,
+        "dominant": dom,
+        "model_flops_dev": model,
+        "model_6nd_dev": model_6nd,
+        "hlo_flops_dev": a["flops"],
+        "useful_ratio": ratio,
+        "roofline_frac": frac_of_roofline,
+        "note": NOTES[dom],
+        "temp_gib": cell["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def main() -> None:
+    cells = load_cells()
+    rows, skips = [], []
+    for c in cells:
+        if c["status"] == "ok":
+            rows.append(roofline_row(c))
+        elif c["status"] == "skip":
+            skips.append(c)
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    with open(out / "roofline.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    # markdown table for EXPERIMENTS.md
+    with open(out / "roofline.md", "w") as f:
+        f.write(
+            "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+            "| dominant | 6ND/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|---|\n"
+        )
+        for r in rows:
+            f.write(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} | {r['dominant']} "
+                f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} |\n"
+            )
+        for c in skips:
+            f.write(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | SKIP | | | | | "
+                f"{c.get('reason','')[:60]} |\n"
+            )
+    for r in rows:
+        if r["mesh"] == "16x16":
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}",
+                r[r["dominant"] + "_s"] * 1e6,
+                f"dom={r['dominant']} frac={r['roofline_frac']:.2f} "
+                f"useful={r['useful_ratio']:.2f}",
+            )
+    # the three hillclimb candidates
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    worst = min(single, key=lambda r: r["roofline_frac"])
+    collb = max(single, key=lambda r: r["collective_s"])
+    emit("roofline/worst_fraction", 0, f"{worst['arch']}/{worst['shape']} frac={worst['roofline_frac']:.3f}")
+    emit("roofline/most_collective_bound", 0, f"{collb['arch']}/{collb['shape']}")
+
+
+if __name__ == "__main__":
+    main()

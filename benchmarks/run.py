@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run as
+``PYTHONPATH=src python -m benchmarks.run`` (all) or with a subset:
+``... -m benchmarks.run roofline am_vs_basic``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+SUITES = [
+    ("am_vs_basic", "table_am_vs_basic"),   # §IV: AM vs basic controller
+    ("table1", "table1_corners"),           # Table I: corner partitionings
+    ("fig11", "fig11_bandwidth"),           # Fig 11: channel bandwidths
+    ("table2", "table2_dse"),               # Table II + Fig 7/9: DSE
+    ("milp_accuracy", "milp_accuracy"),     # §VII-B: model accuracy
+    ("lm_pipeline", "lm_pipeline_dse"),     # partitioner on the 10 archs
+    ("roofline", "roofline"),               # §Roofline from dry-run artifacts
+]
+
+
+def main() -> None:
+    wanted = set(sys.argv[1:])
+    failures = 0
+    for tag, module in SUITES:
+        if wanted and tag not in wanted:
+            continue
+        print(f"# --- {tag} ({module}) ---", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module)
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {tag} FAILED:\n{traceback.format_exc()}", flush=True)
+        print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Actor-machine vs basic controller (paper §IV, Listing 4 discussion):
+condition tests per firing and wall time, same networks, same schedules."""
+
+from __future__ import annotations
+
+from _util import emit, wall
+
+from repro.apps.streams import BENCHMARKS
+from repro.runtime.scheduler import HostRuntime
+
+SIZES = {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
+
+
+def main() -> None:
+    for name, factory in BENCHMARKS.items():
+        size = SIZES[name]
+        stats = {}
+        for kind in ("am", "basic"):
+            g, _ = factory(size) if name != "FIR32" else factory(n=size)
+            rt = HostRuntime(g, None, controller=kind)
+            dt, _ = wall(rt.run_single)
+            fires = rt.total_fires()
+            tests = sum(p.tests for p in rt.profiles.values())
+            stats[kind] = (dt, tests / max(fires, 1))
+        dt_am, tpf_am = stats["am"]
+        dt_b, tpf_b = stats["basic"]
+        emit(
+            f"am_vs_basic/{name}",
+            dt_am * 1e6 / size,
+            f"tests_per_fire am={tpf_am:.2f} basic={tpf_b:.2f} "
+            f"({tpf_b/tpf_am:.2f}x fewer) time am={dt_am*1e3:.0f}ms "
+            f"basic={dt_b*1e3:.0f}ms",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""The paper's workflow end to end (§III-E/F + §V):
+
+1. profile a dataflow application on host + device,
+2. measure channel-bandwidth curves (Fig. 11),
+3. solve the MILP across thread-counts × accelerator use (Table II / Fig. 7),
+4. emit the best partition as an XCF (+ paper-style XML), and
+5. run the chosen heterogeneous partition to verify the prediction.
+
+Then the same partitioner applied to an LM layer chain on a TPU pod
+(pipeline-stage assignment via the optimal chain DP).
+
+    PYTHONPATH=src python examples/partition_explore.py
+"""
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.apps.streams import make_topfilter
+from repro.configs import get_config
+from repro.core.partitioner import best_point, explore, explore_lm, pareto
+from repro.core.profiler import (
+    measure_fifo_bandwidth,
+    profile_device,
+    profile_host,
+)
+from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+
+
+def main():
+    n = 20000
+    g, _ = make_topfilter(n)
+    print(f"== profiling {g.name} ({len(g)} actors) ==")
+    prof, _ = profile_host(g)
+    prof = profile_device(g, prof, block=2048)
+    intra, _ = measure_fifo_bandwidth(cross_thread=False, sizes=(256, 2048))
+    inter, _ = measure_fifo_bandwidth(cross_thread=True, sizes=(256, 2048))
+    prof.links["intra"], prof.links["inter"] = intra, inter
+    import os
+
+    prof.n_cores = os.cpu_count()
+    for a in sorted(g.actors):
+        sw = prof.exec_sw.get(a, 0) * 1e3
+        hw = prof.exec_hw.get(a, float("nan")) * 1e3
+        print(f"  {a:8s} sw={sw:8.2f}ms hw={hw:8.2f}ms")
+
+    print("\n== design-space exploration ==")
+    points = explore(g, prof, thread_counts=(1, 2, 3), accel_options=(False, True))
+    for p in sorted(points, key=lambda p: p.predicted):
+        print(
+            f"  threads={p.n_threads} accel={str(p.use_accel):5s} "
+            f"predicted={p.predicted*1e3:7.1f}ms hw_actors={p.hw_actors()}"
+        )
+    bp = best_point(points)
+    print("\n== best partition (XCF, paper Listing-2 format) ==")
+    print(bp.xcf.to_xml())
+
+    print("== measured run of the best partition ==")
+    g2, got = make_topfilter(n)
+    asg = bp.solution.assignment
+    t0 = time.perf_counter()
+    if any(p == "accel" for p in asg.values()):
+        HeteroRuntime(g2, asg, block=2048).run_threads()
+    else:
+        HostRuntime(g2, asg).run_threads()
+    dt = time.perf_counter() - t0
+    print(
+        f"  predicted {bp.predicted*1e3:.1f}ms, measured {dt*1e3:.1f}ms, "
+        f"{len(got)} tokens out"
+    )
+
+    print("\n== the same partitioner on an LM layer chain (256-chip pod) ==")
+    for arch in ("llama3-8b", "qwen3-moe-235b-a22b"):
+        plans = explore_lm(get_config(arch), stage_options=(1, 2, 4, 8))
+        for p in plans:
+            print(
+                f"  {arch}: stages={p.num_stages} chips/stage={p.chips_per_stage} "
+                f"pipeline bottleneck={p.bottleneck_s*1e3:.0f}ms"
+            )
+
+
+if __name__ == "__main__":
+    main()

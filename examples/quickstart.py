@@ -1,0 +1,72 @@
+"""Quickstart: train a tiny byte-level LM on text and sample from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.data.tokenizer import VOCAB, decode, encode
+from repro.distributed.sharding import make_rules, shard_ctx
+from repro.launch.mesh import make_test_mesh
+from repro.launch.serve import make_generate
+from repro.launch.steps import make_train_step
+from repro.model import lm
+from repro.optim import OptConfig, init_opt_state
+
+TEXT = (
+    "the actor machine remembers the conditions it has already tested. "
+    "a dataflow program is a network of actors connected by channels. "
+    "streamblocks compiles the same program to software and hardware. "
+) * 4
+
+
+def main():
+    cfg = ModelConfig(
+        name="bytelm", num_layers=4, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=VOCAB, tie_embeddings=True,
+    )
+    mesh = make_test_mesh()
+    rules = make_rules(cfg, mesh)
+    opt = OptConfig(lr=3e-3, warmup_steps=20, total_steps=300)
+    data = DataPipeline(
+        DataConfig(vocab_size=VOCAB, seq_len=128, global_batch=16,
+                   kind="text", text=TEXT)
+    ).start()
+
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params, opt)
+    step = make_train_step(cfg, opt)
+    jitted = jax.jit(
+        lambda p, o, b: step(p, o, b), donate_argnums=(0, 1)
+    )
+
+    with mesh:
+        for i in range(300):
+            batch = {k: jnp.asarray(v) for k, v in data.get_batch().items()}
+            with shard_ctx(mesh, rules):
+                params, opt_state, m = jitted(params, opt_state, batch)
+            if i % 50 == 0 or i == 299:
+                print(f"step {i:4d}  loss {float(m['loss']):.3f}")
+    data.stop()
+
+    prompt = "the actor machine "
+    ids = jnp.asarray([encode(prompt)[:-1]], jnp.int32)  # drop EOS
+    gen = make_generate(cfg, mesh, rules, max_new=48)
+    with mesh:
+        out, steps = gen(params, ids)
+    print("prompt:    ", prompt)
+    print("completion:", decode(list(out[0][: int(steps)])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched serving demo: prefill + idleness-terminated decode loop for an
+attention arch and an (attention-free) SSM arch.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import run_serving
+
+
+def main():
+    for arch in ("smollm-135m", "mamba2-130m", "deepseek-moe-16b"):
+        run_serving(arch, batch=4, prompt_len=16, max_new=16)
+
+
+if __name__ == "__main__":
+    main()

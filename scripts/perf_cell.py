@@ -1,0 +1,102 @@
+"""§Perf iteration driver: re-lower ONE cell with config/rule overrides and print
+the three roofline terms next to the baseline artifact.
+
+  PYTHONPATH=src python scripts/perf_cell.py qwen3-moe-235b-a22b train_4k \
+      --set batch_chunks=8 --set remat=block [--rule seq=None] [--tag exp1]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCN_PER_CHIP = 6.25e9 / 8
+
+
+def terms(a):
+    return {
+        "compute_s": a["flops"] / PEAK,
+        "memory_s": a.get("bytes_fused", a["bytes"]) / HBM,
+        "memory_hi_s": a["bytes"] / HBM,
+        "collective_s": a["ici_bytes"] / ICI + a["dcn_bytes"] / DCN_PER_CHIP,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--set", action="append", default=[], dest="sets")
+    ap.add_argument("--rule", action="append", default=[], dest="rules")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--baseline-dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    def parse_val(v):
+        if v.lstrip("-").isdigit():
+            return int(v)
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+    cfg_over = {}
+    for s in args.sets:
+        k, v = s.split("=", 1)
+        cfg_over[k] = parse_val(v)
+    rule_over = {}
+    for s in args.rules:
+        k, v = s.split("=", 1)
+        if v in ("None", "none"):
+            rule_over[k] = None
+        elif "," in v:
+            rule_over[k] = tuple(v.split(","))
+        else:
+            rule_over[k] = v
+
+    from repro.launch.dryrun import run_cell
+
+    res = run_cell(
+        args.arch, args.shape, args.multi_pod,
+        rule_overrides=rule_over or None, cfg_overrides=cfg_over or None,
+    )
+    if res["status"] != "ok":
+        print(json.dumps(res, indent=1)[:3000])
+        return
+
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    base_p = Path(args.baseline_dir) / f"{args.arch}__{args.shape}__{mesh}.json"
+    base = json.loads(base_p.read_text()) if base_p.exists() else None
+
+    t_new = terms(res["analyzed"])
+    print(f"== {args.arch}/{args.shape} ({mesh})  overrides={cfg_over} {rule_over}")
+    hdr = f"{'term':14s} {'baseline':>12s} {'experiment':>12s} {'delta':>8s}"
+    print(hdr)
+    t_base = terms(base["analyzed"]) if base and base["status"] == "ok" else None
+    for k in t_new:
+        b = t_base[k] if t_base else float("nan")
+        d = (t_new[k] / b - 1) * 100 if t_base and b else float("nan")
+        print(f"{k:14s} {b:12.4f} {t_new[k]:12.4f} {d:+7.1f}%")
+    mem = res["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+    memb = (
+        base["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        if t_base else float("nan")
+    )
+    print(f"{'temp_GiB':14s} {memb:12.2f} {mem:12.2f}")
+    print(f"{'compile_s':14s} {'':>12s} {res['t_compile_s']:12.2f}")
+    out = Path("artifacts/perf")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{args.arch}__{args.shape}__{args.tag}.json").write_text(
+        json.dumps(res, indent=1)
+    )
+
+
+if __name__ == "__main__":
+    main()

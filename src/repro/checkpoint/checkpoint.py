@@ -1,0 +1,172 @@
+"""Checkpointing: atomic, resumable, async, reshardable.
+
+Layout:  <dir>/step_<n>/  manifest.json  +  one .npy per leaf (flattened key path).
+Writes go to a temp dir and are renamed atomically; a ``latest`` marker file is
+updated last, so a crash mid-write can never corrupt the restore point — the
+fault-tolerance contract (a killed run restarts from the last complete step).
+
+Arrays are saved *unsharded* (gathered), so a restore may target a different mesh
+or rule set than the save (elastic scaling): restore() device_puts each leaf with
+the target sharding.  AsyncCheckpointer runs saves on a background thread — the
+paper's non-blocking PLink discipline applied to the checkpoint writer.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part_name(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _part_name(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(
+    ckpt_dir, step: int, tree: PyTree, *, extra: Optional[Dict] = None,
+    keep: int = 3,
+) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f".tmp_step_{step}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat = _flatten(tree)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype not in (
+            "float64", "float32", "float16", "int64", "int32", "int16",
+            "int8", "uint8", "uint16", "uint32", "uint64", "bool",
+        ):
+            arr = arr.astype(np.float32)  # exotic dtypes (bf16, fp8) via f32
+        fname = hashlib.md5(key.encode()).hexdigest()[:16] + ".npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": logical_dtype,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    final = ckpt_dir / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    (ckpt_dir / "latest").write_text(str(step))  # updated last: commit point
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.glob("step_*")
+        if p.name.split("_")[1].isdigit()
+    )
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    marker = Path(ckpt_dir) / "latest"
+    if not marker.exists():
+        return None
+    step = int(marker.read_text().strip())
+    if not (Path(ckpt_dir) / f"step_{step}" / "manifest.json").exists():
+        return None
+    return step
+
+
+def restore(
+    ckpt_dir, step: int, like: PyTree, *, shardings: Optional[PyTree] = None,
+) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``like`` (abstract or concrete), resharding
+    onto ``shardings`` when given (elastic restore onto a different mesh)."""
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_like = _flatten(like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out_flat = {}
+    for key, want in flat_like.items():
+        info = manifest["leaves"].get(key)
+        assert info is not None, f"checkpoint missing leaf {key}"
+        arr = np.load(d / info["file"])
+        assert tuple(arr.shape) == tuple(want.shape), (key, arr.shape, want.shape)
+        arr = jax.numpy.asarray(arr).astype(want.dtype)
+        sh = flat_sh.get(key)
+        out_flat[key] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+    # rebuild the tree
+    treedef = jax.tree_util.tree_structure(like)
+    keys = [
+        _SEP.join(_part_name(p) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    leaves = [out_flat[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer: save() returns immediately; the training
+    loop never blocks on IO.  wait() drains pending saves (call before exit)."""
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, extra = item
+            try:
+                save(self.ckpt_dir, step, tree, extra=extra, keep=self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+        # device_get now so the step's arrays are snapshot before donation reuse
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        self._q.put((step, host_tree, extra))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=5)

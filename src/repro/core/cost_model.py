@@ -1,0 +1,296 @@
+"""The paper's performance model (§III-F + Appendix VII-A), TPU-adapted.
+
+Implements equations (1)–(10) verbatim over profile data:
+
+  T_p        = Σ_a d_p^a · exec(a, p)                       (threads serialize)    (1)
+  T_plink    = max_a d_accel^a · exec(a, accel) + T_r + T_w (fabric parallel)      (2)
+  T_exec     = max({T_p} ∪ {T_plink}) + T_intra + T_inter                          (3)
+  τ_w(n, b)  = ξ_w(b)·⌊n/b⌋ + ξ_w(n mod b)                 (buffered transfers)    (4)
+  T_plink^w/r = Σ_{(s,t) crossing} τ(n_(s,t), b_(s,t))                             (5)
+  t_intra^p, t_intra^plink, T_intra, T_inter                                       (6–10)
+
+Link models ξ(b) are (latency, bandwidth) affine models — measured on the host
+(FIFO round-trips, §VII-C) and analytic for the TPU links (PCIe/ICI/DCN), exactly
+as the paper mixes measured CPU cycles with measured OpenCL event times.
+
+The same evaluator scores a *pipeline* of device sub-meshes (the multi-pod
+application): partitions = stages, exec(a, stage) = layer time on the stage's
+chips, the PLink link model = ICI/DCN hop between stages.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+Assignment = Mapping[str, str]  # actor -> partition id ("accel" = device)
+
+# ---------------------------------------------------------------------------
+# Link models ξ(b): seconds to transfer a buffer of b tokens (token_bytes each)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Affine transfer-time model: ξ(b) = latency + b·token_bytes / bandwidth."""
+
+    name: str
+    latency_s: float
+    bandwidth_Bps: float
+    token_bytes: int = 4
+
+    def xi(self, tokens: int) -> float:
+        if tokens <= 0:
+            return 0.0
+        return self.latency_s + tokens * self.token_bytes / self.bandwidth_Bps
+
+    def tau(self, n: int, b: int) -> float:
+        """Equation (4): time to move n tokens through buffers of capacity b."""
+        if n <= 0:
+            return 0.0
+        b = max(1, min(b, n))
+        return self.xi(b) * (n // b) + self.xi(n % b)
+
+
+# Hardware constants (assignment spec: TPU v5e-like).
+TPU_PEAK_FLOPS = 197e12  # bf16 / chip
+TPU_HBM_BW = 819e9  # B/s / chip
+TPU_ICI_BW = 50e9  # B/s / link
+TPU_DCN_BW = 6.25e9  # B/s / host pair (50 Gb/s-class inter-pod)
+PCIE_BW = 16e9  # B/s host<->device
+PCIE_LAT = 20e-6
+
+DEFAULT_LINKS = {
+    "intra": LinkModel("intra-core", 2e-8, 20e9),     # same-thread FIFO (cache)
+    "inter": LinkModel("inter-core", 1e-7, 4e9),      # cross-thread FIFO (LLC)
+    "plink": LinkModel("pcie", PCIE_LAT, PCIE_BW),     # host<->device
+    "ici": LinkModel("ici", 1e-6, TPU_ICI_BW),
+    "dcn": LinkModel("dcn", 1e-5, TPU_DCN_BW),
+}
+
+
+# ---------------------------------------------------------------------------
+# Profile container
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NetworkProfile:
+    """Everything the MILP needs (paper §V-B inputs (i)-(iv))."""
+
+    # exec(a, kind): seconds per *total workload* of actor a on partition kind.
+    #   kind "sw" = one host thread; "hw" = the device partition.
+    exec_sw: Dict[str, float] = field(default_factory=dict)
+    exec_hw: Dict[str, float] = field(default_factory=dict)
+    # tokens moved per connection over the workload: key (src, src_port, dst, dst_port)
+    tokens: Dict[Tuple[str, str, str, str], int] = field(default_factory=dict)
+    # buffer sizes per connection (for τ); default used when missing
+    buffers: Dict[Tuple[str, str, str, str], int] = field(default_factory=dict)
+    default_buffer: int = 4096
+    links: Dict[str, LinkModel] = field(default_factory=lambda: dict(DEFAULT_LINKS))
+    # True when exec_sw was measured in situ (firing times already include
+    # same-thread FIFO reads/writes): the intra term is then zero and the inter
+    # term only charges the *additional* cost of crossing a thread.
+    in_situ: bool = True
+    # Physical cores available: threads beyond this serialize (the paper pins
+    # threads to dedicated cores and never exceeds them; the DSE must know).
+    n_cores: Optional[int] = None
+
+    def exec_time(self, actor: str, partition: str, accel: str) -> float:
+        if partition == accel:
+            return self.exec_hw.get(actor, math.inf)
+        return self.exec_sw.get(actor, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Equations (1)-(10)
+# ---------------------------------------------------------------------------
+
+
+def evaluate(
+    graph,
+    assignment: Assignment,
+    prof: NetworkProfile,
+    *,
+    accel: str = "accel",
+    plink_thread: Optional[str] = None,
+) -> Dict[str, float]:
+    """Predicted execution time for one partitioning (the MILP objective)."""
+    parts = sorted({p for p in assignment.values() if p != accel})
+    threads = parts
+    p1 = plink_thread or (threads[0] if threads else None)
+    uses_accel = any(p == accel for p in assignment.values())
+
+    # (1) thread times
+    T_p: Dict[str, float] = {p: 0.0 for p in threads}
+    for a, p in assignment.items():
+        if p != accel:
+            T_p[p] += prof.exec_time(a, p, accel)
+
+    # (2) + (5): PLink
+    T_plink = 0.0
+    if uses_accel:
+        hw_times = [
+            prof.exec_time(a, accel, accel)
+            for a, p in assignment.items()
+            if p == accel
+        ]
+        t_hw = max(hw_times) if hw_times else 0.0
+        link = prof.links["plink"]
+        t_w = t_r = 0.0
+        for ch in graph.channels:
+            key = ch.key
+            n = prof.tokens.get(key, 0)
+            b = prof.buffers.get(key, prof.default_buffer)
+            s_hw = assignment[ch.src] == accel
+            t_hw_side = assignment[ch.dst] == accel
+            if t_hw_side and not s_hw:
+                t_w += link.tau(n, b)
+            elif s_hw and not t_hw_side:
+                t_r += link.tau(n, b)
+        T_plink = t_hw + t_w + t_r
+
+    # (6)-(9): intra-thread communication.  With in-situ profiles the same-
+    # thread FIFO time is already inside exec(a, p), so the term is zero.
+    intra = prof.links["intra"]
+    t_intra = {p: 0.0 for p in threads}
+    if not prof.in_situ:
+        for ch in graph.channels:
+            key = ch.key
+            n = prof.tokens.get(key, 0)
+            b = prof.buffers.get(key, prof.default_buffer)
+            ps, pt = assignment[ch.src], assignment[ch.dst]
+            if ps == pt and ps != accel:
+                t_intra[ps] += intra.tau(n, b)
+            # (7): host<->accel staging also costs the PLink's thread
+            if p1 is not None and (
+                (ps == p1 and pt == accel) or (ps == accel and pt == p1)
+            ):
+                t_intra[p1] += intra.tau(n, b)
+    T_intra = max(t_intra.values()) if t_intra else 0.0
+
+    # (10): inter-thread communication; with in-situ profiles only the *extra*
+    # cost over a same-thread channel is charged.
+    inter = prof.links["inter"]
+    T_inter = 0.0
+    for ch in graph.channels:
+        key = ch.key
+        n = prof.tokens.get(key, 0)
+        b = prof.buffers.get(key, prof.default_buffer)
+        ps, pt = assignment[ch.src], assignment[ch.dst]
+        if ps == pt:
+            continue
+        crosses_thread = (
+            ps != accel and pt != accel
+        ) or (
+            p1 is not None and (
+                (pt == accel and ps not in (p1, accel))
+                or (ps == accel and pt not in (p1, accel))
+            )
+        )
+        if crosses_thread:
+            cost = inter.tau(n, b)
+            if prof.in_situ:
+                cost = max(0.0, cost - intra.tau(n, b))
+            T_inter += cost
+
+    # (3) — with fewer cores than threads, thread times serialize; on a single
+    # core even the XLA device program shares it, so T_plink adds rather than
+    # overlapping.
+    cores = prof.n_cores
+    thread_times = list(T_p.values())
+    if cores is not None and thread_times and len(thread_times) > cores:
+        # pack thread loads onto cores (LPT bound: max(sum/cores, max))
+        total = sum(thread_times)
+        peak_sw = max(total / cores, max(thread_times))
+    else:
+        peak_sw = max(thread_times) if thread_times else 0.0
+    if cores == 1:
+        peak = peak_sw + T_plink
+    else:
+        peak = max(peak_sw, T_plink)
+    T_exec = peak + T_intra + T_inter
+    return {
+        "T_exec": T_exec,
+        "T_plink": T_plink,
+        "T_intra": T_intra,
+        "T_inter": T_inter,
+        **{f"T_{p}": v for p, v in T_p.items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# LM pipeline profiles (the TPU application of the same model)
+# ---------------------------------------------------------------------------
+
+
+def lm_layer_profile(
+    cfg,
+    *,
+    seq_len: int,
+    global_batch: int,
+    chips_per_stage: int,
+    mfu: float = 0.4,
+    train: bool = True,
+) -> Tuple[List[str], NetworkProfile]:
+    """Per-layer actor profile for an LM: actors = embed, L blocks, head.
+
+    exec_hw(a) = layer FLOPs / (chips·peak·mfu); exec_sw is effectively infinite
+    (a CPU host cannot run a 4k-token training step competitively) but finite so
+    the model stays total.  Channel tokens = activation elements per step.
+    """
+    tokens = seq_len * global_batch
+    mult = 3.0 if train else 1.0
+    d = cfg.d_model
+    names: List[str] = ["embed"]
+    prof = NetworkProfile()
+    pc = cfg.param_counts()
+
+    def hw_time(flops: float) -> float:
+        return flops / (chips_per_stage * TPU_PEAK_FLOPS * mfu)
+
+    embed_flops = 2.0 * tokens * d * mult  # gather + scale (cheap)
+    prof.exec_hw["embed"] = hw_time(embed_flops)
+    prof.exec_sw["embed"] = embed_flops / 50e9
+    for i in range(cfg.num_layers):
+        name = f"block{i}"
+        names.append(name)
+        kind = cfg.block_kind(i)
+        f = 0.0
+        if kind.mixer == "attn":
+            f += 2.0 * tokens * d * (cfg.d_attn + 2 * cfg.num_kv_heads * cfg.head_dim)
+            f += 2.0 * tokens * cfg.d_attn * d
+            f += 4.0 * tokens * seq_len * cfg.d_attn * (0.5 if train else 1.0)
+        else:
+            di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+            f += 2.0 * tokens * d * (2 * di + 2 * ds + nh) + 2.0 * tokens * di * d
+            f += 4.0 * tokens * cfg.ssm_chunk * di  # intra-chunk quadratic
+            f += 6.0 * tokens * di * ds  # state update + output
+        if kind.ffn == "dense":
+            f += 6.0 * tokens * d * cfg.d_ff
+        elif kind.ffn == "moe":
+            active = cfg.experts_per_token + cfg.num_shared_experts
+            f += 6.0 * tokens * d * cfg.moe_d_ff * active * cfg.capacity_factor
+            f += 2.0 * tokens * d * cfg.num_experts / 1e3  # router (negligible)
+        f *= mult
+        prof.exec_hw[name] = hw_time(f)
+        prof.exec_sw[name] = f / 50e9  # ~50 GFLOP/s host
+    names.append("head")
+    head_flops = 2.0 * tokens * d * cfg.padded_vocab * mult
+    prof.exec_hw["head"] = hw_time(head_flops)
+    prof.exec_sw["head"] = head_flops / 50e9
+
+    act_bytes = 2  # bf16 stream
+    for i in range(len(names) - 1):
+        key = (names[i], "OUT", names[i + 1], "IN")
+        prof.tokens[key] = tokens * d
+        prof.buffers[key] = tokens * d
+    prof.links = dict(DEFAULT_LINKS)
+    prof.links["plink"] = prof.links["ici"]  # stage crossings ride ICI/DCN
+    for k in prof.links:
+        prof.links[k] = LinkModel(
+            prof.links[k].name, prof.links[k].latency_s,
+            prof.links[k].bandwidth_Bps, token_bytes=act_bytes,
+        )
+    return names, prof

@@ -1,0 +1,121 @@
+"""Dataflow graph: actor instances connected by point-to-point channels.
+
+Mirrors a CAL ``network`` (paper Listing 1): entities + structure.  Channels are
+lossless, ordered, conceptually unbounded; a concrete FIFO depth is chosen by the
+configuration (XCF) or a default.  The graph is the unit the partitioner operates
+on and the runtimes execute.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.core.actor import Actor
+
+
+@dataclass(frozen=True)
+class Channel:
+    src: str  # actor instance name
+    src_port: str
+    dst: str
+    dst_port: str
+    depth: Optional[int] = None  # None -> runtime default
+
+    @property
+    def key(self) -> Tuple[str, str, str, str]:
+        return (self.src, self.src_port, self.dst, self.dst_port)
+
+    def __str__(self):
+        return f"{self.src}.{self.src_port}->{self.dst}.{self.dst_port}"
+
+
+class ActorGraph:
+    """A network of actor instances."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.actors: Dict[str, Actor] = {}
+        self.channels: List[Channel] = []
+
+    # -- construction -------------------------------------------------------
+    def add(self, actor: Actor) -> Actor:
+        assert actor.name not in self.actors, f"duplicate actor {actor.name}"
+        self.actors[actor.name] = actor
+        return actor
+
+    def connect(
+        self, src: str, dst: str,
+        src_port: str = "OUT", dst_port: str = "IN",
+        depth: Optional[int] = None,
+    ) -> Channel:
+        sa, da = self.actors[src], self.actors[dst]
+        sa.port(src_port)  # validates
+        da.port(dst_port)
+        # point-to-point: one writer and one reader per port
+        for c in self.channels:
+            assert not (c.src == src and c.src_port == src_port), (
+                f"port {src}.{src_port} already connected"
+            )
+            assert not (c.dst == dst and c.dst_port == dst_port), (
+                f"port {dst}.{dst_port} already connected"
+            )
+        ch = Channel(src, src_port, dst, dst_port, depth)
+        self.channels.append(ch)
+        return ch
+
+    # -- queries --------------------------------------------------------------
+    def in_channels(self, actor: str) -> List[Channel]:
+        return [c for c in self.channels if c.dst == actor]
+
+    def out_channels(self, actor: str) -> List[Channel]:
+        return [c for c in self.channels if c.src == actor]
+
+    def successors(self, actor: str) -> Set[str]:
+        return {c.dst for c in self.out_channels(actor)}
+
+    def predecessors(self, actor: str) -> Set[str]:
+        return {c.src for c in self.in_channels(actor)}
+
+    def validate(self) -> None:
+        for name, a in self.actors.items():
+            for p in a.inputs:
+                assert any(
+                    c.dst == name and c.dst_port == p.name for c in self.channels
+                ), f"unconnected input {name}.{p.name}"
+            for p in a.outputs:
+                assert any(
+                    c.src == name and c.src_port == p.name for c in self.channels
+                ), f"unconnected output {name}.{p.name}"
+
+    def topo_order(self) -> List[str]:
+        """Topological order ignoring back-edges (graph may be cyclic)."""
+        order: List[str] = []
+        seen: Set[str] = set()
+
+        def visit(n: str, stack: Set[str]):
+            if n in seen or n in stack:
+                return
+            stack.add(n)
+            for p in sorted(self.predecessors(n)):
+                visit(p, stack)
+            stack.discard(n)
+            seen.add(n)
+            order.append(n)
+
+        for n in sorted(self.actors):
+            visit(n, set())
+        return order
+
+    def is_chain(self) -> bool:
+        """True when the graph is a simple pipeline (each actor <=1 pred/succ)."""
+        return all(
+            len(self.predecessors(a)) <= 1 and len(self.successors(a)) <= 1
+            for a in self.actors
+        )
+
+    def __iter__(self) -> Iterator[Actor]:
+        return iter(self.actors.values())
+
+    def __len__(self) -> int:
+        return len(self.actors)

@@ -1,0 +1,145 @@
+"""Design-space exploration (paper §V-B): sweep thread counts × accelerator use,
+solve the MILP at each point, emit XCFs.
+
+Two front-ends:
+  * ``explore``     — generic actor graphs with measured profiles (the paper's
+                      JPEG/MPEG study, reproduced on this host's benchmarks),
+  * ``explore_lm``  — LM layer chains on TPU sub-meshes: the pipeline-stage
+                      assignment problem solved with the optimal chain DP; the
+                      'accelerator boundary' is the ICI/DCN stage crossing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import (
+    DEFAULT_LINKS,
+    LinkModel,
+    NetworkProfile,
+    evaluate,
+    lm_layer_profile,
+)
+from repro.core.graph import ActorGraph
+from repro.core.milp import Solution, solve, solve_chain_dp
+from repro.core.xcf import XCF, make_xcf
+
+
+@dataclass
+class DesignPoint:
+    n_threads: int
+    use_accel: bool
+    solution: Solution
+    xcf: XCF
+
+    @property
+    def predicted(self) -> float:
+        return self.solution.objective
+
+    def hw_actors(self) -> List[str]:
+        return sorted(
+            a for a, p in self.solution.assignment.items() if p == "accel"
+        )
+
+
+def explore(
+    graph: ActorGraph,
+    prof: NetworkProfile,
+    *,
+    thread_counts: Sequence[int] = (1, 2, 3, 4),
+    accel_options: Sequence[bool] = (False, True),
+    alpha: float = 0.0,
+    accel: str = "accel",
+) -> List[DesignPoint]:
+    points: List[DesignPoint] = []
+    any_device = any(a.device_ok for a in graph)
+    for n in thread_counts:
+        for use_accel in accel_options:
+            if use_accel and not any_device:
+                continue
+            partitions = [f"t{i}" for i in range(n)] + (
+                [accel] if use_accel else []
+            )
+            sol = solve(graph, prof, partitions, accel=accel, alpha=alpha)
+            if sol.assignment is None:
+                continue
+            xcf = make_xcf(
+                graph.name, sol.assignment, accel=accel,
+                meta={"predicted_T": sol.objective, "n_threads": n},
+            )
+            points.append(DesignPoint(n, use_accel, sol, xcf))
+    return points
+
+
+def best_point(points: Sequence[DesignPoint]) -> DesignPoint:
+    return min(points, key=lambda p: p.predicted)
+
+
+def pareto(points: Sequence[DesignPoint]) -> List[DesignPoint]:
+    """Pareto frontier over (n_threads + accel_cost, predicted time)."""
+    out = []
+    for p in points:
+        res = p.n_threads + (8 if p.use_accel else 0)
+        if not any(
+            (q.n_threads + (8 if q.use_accel else 0)) <= res
+            and q.predicted < p.predicted
+            for q in points
+        ):
+            out.append(p)
+    return sorted(out, key=lambda p: p.predicted)
+
+
+# ---------------------------------------------------------------------------
+# LM pipeline partitioning (TPU application)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LMPipelinePlan:
+    arch: str
+    num_stages: int
+    chips_per_stage: int
+    stage_of_layer: List[int]  # per actor in chain order (embed..blocks..head)
+    bottleneck_s: float
+    names: List[str]
+
+    def stage_map(self) -> Dict[str, int]:
+        return dict(zip(self.names, self.stage_of_layer))
+
+
+def explore_lm(
+    cfg,
+    *,
+    seq_len: int = 4096,
+    global_batch: int = 256,
+    total_chips: int = 256,
+    stage_options: Sequence[int] = (1, 2, 4, 8),
+    inter_stage: Optional[LinkModel] = None,
+    train: bool = True,
+    mfu: float = 0.4,
+) -> List[LMPipelinePlan]:
+    """Pipeline-stage DSE for an LM chain: for each stage count, split the layer
+    chain optimally (chain DP) across equal sub-meshes and report the pipeline
+    bottleneck time — the LM instantiation of the paper's partitioning."""
+    plans: List[LMPipelinePlan] = []
+    for k in stage_options:
+        if total_chips % k:
+            continue
+        chips = total_chips // k
+        names, prof = lm_layer_profile(
+            cfg, seq_len=seq_len, global_batch=global_batch,
+            chips_per_stage=chips, train=train, mfu=mfu,
+        )
+        link = inter_stage or prof.links["ici"]
+
+        def boundary(i: int) -> float:
+            key = (names[i - 1], "OUT", names[i], "IN")
+            n = prof.tokens.get(key, 0)
+            return link.tau(n, prof.buffers.get(key, n or 1))
+
+        stages, T = solve_chain_dp(names, prof.exec_hw, boundary, k)
+        plans.append(
+            LMPipelinePlan(cfg.name, k, chips, stages, T, list(names))
+        )
+    return plans

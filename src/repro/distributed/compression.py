@@ -1,0 +1,75 @@
+"""Gradient compression for slow (inter-pod DCN) links.
+
+Two pieces:
+
+  * ``ef_compress_grads`` — int8 error-feedback compression applied to the
+    gradient pytree inside the train step: grads are quantized per-row
+    (kernels/quant), the quantization residual is carried in the optimizer state
+    and added back next step (error feedback keeps the scheme unbiased in the
+    long run).  On a real multi-pod mesh this bounds the DCN payload to ~1/4 of
+    bf16; on the dry-run it shows up as the reduced dcn_bytes term.
+
+  * ``all_reduce_int8`` — shard_map building block for an explicit int8
+    all-gather-based all-reduce over a named axis (used when the pod axis is
+    handled manually rather than by GSPMD).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.ref import dequantize_int8_ref, quantize_int8_ref
+
+PyTree = Any
+
+
+def init_ef_state(grads_like: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+    )
+
+
+def _roundtrip(x: jax.Array) -> jax.Array:
+    """Quantize->dequantize (the wire format of the compressed collective)."""
+    if x.ndim == 0:
+        return x
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    q, s = quantize_int8_ref(x2)
+    return dequantize_int8_ref(q, s, jnp.float32).reshape(x.shape)
+
+
+def ef_compress_grads(
+    grads: PyTree, ef_state: PyTree
+) -> Tuple[PyTree, PyTree]:
+    """Error-feedback int8 round trip on every gradient leaf.
+
+    Returns (compressed grads, new error state).  err' = (g + err) - Q(g + err).
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        qd = _roundtrip(gf)
+        return qd.astype(g.dtype), gf - qd
+
+    flat = jax.tree.map(one, grads, ef_state)
+    new_g = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_e = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_e
+
+
+def all_reduce_int8(x: jax.Array, axis_name: str) -> jax.Array:
+    """Int8 all-gather + local sum over a named axis (shard_map context).
+
+    Wire cost per device: (N-1)·B/4 int8 vs 2·(N-1)/N·B f32 for a ring
+    all-reduce — a ~4x+ saving on the DCN pod axis at N=2.
+    """
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    q, s = quantize_int8_ref(x2)
+    qg = jax.lax.all_gather(q, axis_name)  # (N, ...)
+    sg = jax.lax.all_gather(s, axis_name)
+    deq = qg.astype(jnp.float32) * sg
+    return jnp.sum(deq, axis=0).reshape(x.shape).astype(x.dtype)

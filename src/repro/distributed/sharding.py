@@ -1,0 +1,224 @@
+"""Logical-axis sharding.
+
+Model code annotates activations/params with *logical* axis names; this module maps
+them onto physical mesh axes with divisibility-aware fallback (a non-divisible dim is
+replicated rather than erroring — e.g. starcoder2's 36 heads on a 16-wide model axis
+fall back to the sequence-parallel attention strategy chosen by ``make_rules``).
+
+The rule table is the interface between the StreamBlocks-style partitioner
+(``repro.core.partitioner``) and the model: an XCF partition maps per-actor strategy
+choices to rule overrides here.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.paramdef import ParamDef, is_paramdef
+
+Rules = Dict[str, Any]  # logical axis -> mesh axis | tuple of mesh axes | None
+
+# Storage/default rules, independent of architecture.
+BASE_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "tp": "model",
+    "vocab": "model",
+    "layers": None,
+    "seq": "model",        # activation sequence dim between blocks (Megatron-SP)
+    "seq_full": None,      # sequence dim inside a block after gathering
+    "ff": "model",
+    "experts": "model",
+    "expert_cap": "data",  # MoE capacity dim of the dispatch buffer
+    "kv_heads": "model",   # falls back to replicated when not divisible
+    "kv_seq": None,        # decode-cache sequence dim (flash-decode sharding when
+    #                        kv heads don't divide the model axis — see make_rules)
+    "kv_batch": ("pod", "data"),
+    # strategy-dependent (filled by make_rules):
+    "heads": "model",
+    "seq_q": None,
+    "ssm_heads": "model",
+    "ssm_hd": None,
+    "ssm_state": None,
+    # out-projection input placement (§Perf beyond-paper lever): None keeps the
+    # Megatron row-parallel form (contraction sharded -> psum of the full-seq
+    # output); "model" reshards the activation to sequence-sharded FIRST (an
+    # a2a) and gathers the small weight instead — no output all-reduce.
+    "ffn_act_seq": None,
+    "attn_out_seq": None,
+}
+
+
+def make_rules(cfg, mesh: Mesh, overrides: Optional[Rules] = None) -> Rules:
+    """Architecture-aware rules: pick attention / SSM parallel strategies."""
+    rules = dict(BASE_RULES)
+    msize = _axis_size(mesh, "model")
+    if cfg.num_heads and msize > 1:
+        if cfg.num_heads % msize == 0:
+            rules["heads"] = "model"  # head tensor parallel (Megatron)
+            rules["seq_q"] = None
+        else:
+            rules["heads"] = None  # context parallel: shard query sequence
+            rules["seq_q"] = "model"
+            rules["kv_heads"] = None
+        # decode cache: shard kv heads when they divide, else the cache sequence
+        # (flash-decode: softmax over the sharded seq is psum-merged by SPMD)
+        if cfg.num_kv_heads % msize == 0:
+            rules["kv_seq"] = None
+        else:
+            rules["kv_heads"] = None
+            rules["kv_seq"] = "model"
+    if cfg.ssm_state and msize > 1:
+        if cfg.ssm_heads % msize == 0:
+            rules["ssm_heads"] = "model"
+            rules["ssm_hd"] = None
+        elif cfg.ssm_head_dim % msize == 0:
+            rules["ssm_heads"] = None
+            rules["ssm_hd"] = "model"
+        else:
+            rules["ssm_heads"] = None
+            rules["ssm_hd"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def full_dp_rules(cfg, mesh: Mesh) -> Rules:
+    """Pure data parallelism: batch sharded over EVERY mesh axis, no model-axis
+    sharding of weights or activations.  Optimal for small models (≲1B params)
+    where per-layer resharding collectives dwarf the compute — measured in
+    EXPERIMENTS.md §Perf (mamba2-130m train: collective term −94.6%)."""
+    return make_rules(
+        cfg, mesh,
+        overrides={
+            "batch": ("pod", "data", "model"),
+            "kv_batch": ("pod", "data", "model"),
+            "seq": None, "tp": None, "ff": None, "vocab": None,
+            "experts": None, "heads": None, "seq_q": None,
+            "kv_heads": None, "kv_seq": None,
+            "ssm_heads": None, "ssm_hd": None,
+        },
+    )
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(mesh.shape).get(name, 1)
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ShardCtx:
+    mesh: Mesh
+    rules: Rules
+
+
+_TLS = threading.local()
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextmanager
+def shard_ctx(mesh: Mesh, rules: Rules):
+    prev = current_ctx()
+    _TLS.ctx = ShardCtx(mesh, rules)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+def _resolve(axis_name: Optional[str], dim: int, mesh: Mesh, rules: Rules):
+    """Resolve one logical axis to a mesh-axis entry for PartitionSpec."""
+    if axis_name is None:
+        return None
+    target = rules.get(axis_name, None)
+    if target is None:
+        return None
+    if isinstance(target, str):
+        target = (target,)
+    # keep only axes present in this mesh
+    target = tuple(t for t in target if t in mesh.axis_names)
+    # greedy suffix-drop until the dim divides the product of axis sizes
+    while target:
+        total = int(np.prod([_axis_size(mesh, t) for t in target]))
+        if total > 0 and dim % total == 0:
+            break
+        target = target[:-1]
+    if not target:
+        return None
+    return target if len(target) > 1 else target[0]
+
+
+def make_pspec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    assert len(logical) == len(shape), (logical, shape)
+    used = set()
+    entries = []
+    for name, dim in zip(logical, shape):
+        e = _resolve(name, dim, mesh, rules)
+        # a mesh axis may appear at most once in a PartitionSpec
+        if e is not None:
+            flat = e if isinstance(e, tuple) else (e,)
+            if any(a in used for a in flat):
+                e = None
+            else:
+                used.update(flat)
+        entries.append(e)
+    return P(*entries)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical sharding constraint if a context is active."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = make_pspec(logical, x.shape, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def defs_pspecs(defs, mesh: Mesh, rules: Rules):
+    """PartitionSpec tree for a ParamDef tree."""
+    return jax.tree.map(
+        lambda d: make_pspec(d.logical, d.shape, mesh, rules),
+        defs,
+        is_leaf=is_paramdef,
+    )
+
+
+def defs_shardings(defs, mesh: Mesh, rules: Rules):
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, make_pspec(d.logical, d.shape, mesh, rules)),
+        defs,
+        is_leaf=is_paramdef,
+    )
+
+
+def tree_pspecs(tree_of_logical, tree_of_shapes, mesh: Mesh, rules: Rules):
+    return jax.tree.map(
+        lambda lg, sh: make_pspec(lg, sh, mesh, rules),
+        tree_of_logical,
+        tree_of_shapes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

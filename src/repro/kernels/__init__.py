@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True on CPU)
+  ref.py    — pure-jnp oracle used by the model code on CPU and by tests
+
+The model selects kernels via the sharding-rules plumbing on TPU; the dry-run and
+CPU tests use the jnp paths, whose chunking mirrors the kernels' asymptotics.
+"""

@@ -1,0 +1,283 @@
+"""Flash attention forward kernel (Pallas TPU).
+
+Online-softmax attention with explicit VMEM tiling:
+
+  grid = (batch·heads, S_q/block_q, S_k/block_k)
+         ("parallel", "parallel", "arbitrary")
+
+The kv axis is the innermost *sequential* grid dimension; the running max, sum
+and accumulator live in VMEM scratch across kv steps (FlashAttention's HBM→VMEM
+streaming structure).  Block shapes are MXU-aligned (multiples of (8, 128));
+head_dim stays minor-most so QKᵀ and PV are systolic matmuls.
+
+GQA is handled by the wrapper folding query-head groups into the leading grid
+axis and mapping K/V blocks by kv-head index — K/V are never replicated in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, block_q: int, block_k: int, causal: bool,
+):
+    q_i = pl.program_id(1)
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (block_q, hd)
+    k = k_ref[0]  # (block_k, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+
+    if causal:
+        rows = q_i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv_i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0]  # (block_k, hd)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+        lse_ref[0] = (
+            m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        )[:, 0].astype(lse_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (BH, S_q, hd)   batch·q-heads folded into dim 0
+    k: jax.Array,  # (BKV, S_k, hd)  batch·kv-heads folded into dim 0
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S_q, hd = q.shape
+    BKV, S_k, _ = k.shape
+    assert BH % BKV == 0, (BH, BKV)
+    group = BH // BKV  # q heads per kv head
+    block_q = min(block_q, S_q)
+    block_k = min(block_k, S_k)
+    assert S_q % block_q == 0 and S_k % block_k == 0, (S_q, S_k, block_q, block_k)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    grid = (BH, S_q // block_q, S_k // block_k)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b // group, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b // group, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S_q, hd), q.dtype),
+            jax.ShapeDtypeStruct((BH, S_q), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: dQ kernel (sequential over kv blocks) + dKV kernel (over q blocks)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+    acc_scr,
+    *, scale: float, block_q: int, block_k: int, causal: bool,
+):
+    q_i = pl.program_id(1)
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        rows = q_i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv_i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+    p = jnp.exp(s - lse_ref[0][:, None])  # (bq, bk)
+    do = do_ref[0].astype(jnp.float32)
+    dp = jax.lax.dot_general(
+        do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    acc_scr[...] += jax.lax.dot_general(
+        ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kv_i == pl.num_programs(2) - 1)
+    def _done():
+        dq_ref[0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, scale: float, block_q: int, block_k: int, causal: bool,
+):
+    kv_i = pl.program_id(1)
+    q_i = pl.program_id(2)
+
+    @pl.when(q_i == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if causal:
+        rows = q_i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv_i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+    p = jnp.exp(s - lse_ref[0][:, None])
+    do = do_ref[0].astype(jnp.float32)
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bk, hd)
+    dp = jax.lax.dot_general(
+        do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bk, hd)
+
+    @pl.when(q_i == pl.num_programs(2) - 1)
+    def _done():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k_full, v_full, out, lse, do,
+    *, causal: bool, scale: float, block_q: int, block_k: int,
+    interpret: bool = False,
+):
+    """Per-head backward: k_full/v_full already expanded to BH (GQA handled by
+    the wrapper, which sums dk/dv over the query-head groups)."""
+    BH, S_q, hd = q.shape
+    _, S_k, _ = k_full.shape
+    delta = jnp.sum(
+        do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    )  # (BH, S_q)
+    common = dict(scale=scale, block_q=block_q, block_k=block_k, causal=causal)
+    nq, nk = S_q // block_q, S_k // block_k
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **common),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, qi, ki: (b, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S_q, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k_full, v_full, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **common),
+        grid=(BH, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, ki, qi: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda b, ki, qi: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, ki, qi: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, ki, qi: (b, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, qi: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, qi: (b, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S_k, hd), q.dtype),
+            jax.ShapeDtypeStruct((BH, S_k, hd), q.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, hd), jnp.float32),
+            pltpu.VMEM((block_k, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k_full, v_full, do, lse, delta)
+    return dq, dk, dv

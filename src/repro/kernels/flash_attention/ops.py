@@ -1,0 +1,89 @@
+"""Public wrapper: shape plumbing, GQA folding, custom VJP (flash backward),
+CPU interpret fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd,
+    flash_attention_fwd,
+)
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_core(qf, kf, vf, causal, scale, block_q, block_k, interpret):
+    out, _ = flash_attention_fwd(
+        qf, kf, vf, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out
+
+
+def _flash_core_fwd(qf, kf, vf, causal, scale, block_q, block_k, interpret):
+    out, lse = flash_attention_fwd(
+        qf, kf, vf, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out, (qf, kf, vf, out, lse)
+
+
+def _flash_core_bwd(causal, scale, block_q, block_k, interpret, res, do):
+    qf, kf, vf, out, lse = res
+    BH = qf.shape[0]
+    BKV = kf.shape[0]
+    group = BH // BKV
+    # expand K/V per query head for the per-head kernels, then reduce dk/dv
+    # over the query-head groups (GQA)
+    k_full = jnp.repeat(kf, group, axis=0)
+    v_full = jnp.repeat(vf, group, axis=0)
+    dq, dk_full, dv_full = flash_attention_bwd(
+        qf, k_full, v_full, out, lse, do,
+        causal=causal, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    dk = dk_full.reshape(BKV, group, *kf.shape[1:]).sum(axis=1).astype(kf.dtype)
+    dv = dv_full.reshape(BKV, group, *vf.shape[1:]).sum(axis=1).astype(vf.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S_q, H, hd)
+    k: jax.Array,  # (B, S_k, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Multi-head GQA flash attention, differentiable.  Returns (B, S_q, H, hd)."""
+    import math
+
+    B, S_q, H, hd = q.shape
+    _, S_k, KV, _ = k.shape
+    interpret = _on_cpu() if interpret is None else interpret
+    scale_v = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S_q, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S_k, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S_k, hd)
+    bq = min(block_q, S_q)
+    bk = min(block_k, S_k)
+    out = _flash_core(qf, kf, vf, causal, scale_v, bq, bk, interpret)
+    return out.reshape(B, H, S_q, hd).transpose(0, 2, 1, 3)

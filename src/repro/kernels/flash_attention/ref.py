@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (BH, S_q, hd)
+    k: jax.Array,  # (BKV, S_k, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    BH, S_q, hd = q.shape
+    BKV, S_k, _ = k.shape
+    group = BH // BKV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S_q, S_k), bool), k=S_k - S_q)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

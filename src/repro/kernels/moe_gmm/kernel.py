@@ -1,0 +1,71 @@
+"""Grouped (per-expert) matmul kernel (Pallas TPU).
+
+(E, C, d) × (E, d, f) → (E, C, f): the expert-FFN compute of the capacity-based
+MoE dispatch.  grid = (E, C/bc, f/bf, d/bd); the contraction axis is the
+innermost sequential dimension with a f32 VMEM accumulator.  Block sizes are
+MXU-aligned; per-expert tiles stream from HBM independently (experts are fully
+parallel grid rows, matching expert-sharding over the mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]  # (bc, bd)
+    w = w_ref[0]  # (bd, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(di == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_fwd(
+    x: jax.Array,  # (E, C, d)
+    w: jax.Array,  # (E, d, f)
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, d = x.shape
+    _, _, f = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    assert C % block_c == 0 and f % block_f == 0 and d % block_d == 0
+
+    grid = (E, C // block_c, f // block_f, d // block_d)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_c, block_f), lambda e, ci, fi, di: (e, ci, fi)
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x, w)

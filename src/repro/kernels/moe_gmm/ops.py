@@ -1,0 +1,31 @@
+"""Public grouped-matmul wrapper."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import grouped_matmul_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret"))
+def grouped_matmul(
+    x: jax.Array,  # (E, C, d)
+    w: jax.Array,  # (E, d, f)
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    return grouped_matmul_fwd(
+        x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+        interpret=interpret,
+    )

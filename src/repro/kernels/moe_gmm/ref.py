@@ -1,0 +1,10 @@
+"""Oracle for the grouped matmul."""
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum(
+        "ecd,edf->ecf", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

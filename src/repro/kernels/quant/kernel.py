@@ -1,0 +1,47 @@
+"""Per-row symmetric int8 quantization kernel (Pallas TPU).
+
+Used by the gradient-compression path (distributed/compression.py): cross-pod
+(DCN) gradient all-reduce payloads are quantized int8 + per-row f32 scales.
+One pass per (block_r, d) tile: row abs-max, scale, round-to-nearest-even.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (block_r, d)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_int8_fwd(
+    x: jax.Array,  # (R, d)
+    *,
+    block_r: int = 256,
+    interpret: bool = False,
+):
+    R, d = x.shape
+    block_r = min(block_r, R)
+    assert R % block_r == 0
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(R // block_r,),
+        in_specs=[pl.BlockSpec((block_r, d), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((block_r, d), lambda r: (r, 0)),
+            pl.BlockSpec((block_r, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, d), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s

@@ -1,0 +1,38 @@
+"""Public int8 quant/dequant wrappers."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.kernel import quantize_int8_fwd
+from repro.kernels.quant.ref import dequantize_int8_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_r", "interpret"))
+def quantize_int8(
+    x: jax.Array, *, block_r: int = 256, interpret: Optional[bool] = None
+):
+    """x (..., d) -> (q int8 same shape, scale (..., 1) f32) per-row symmetric."""
+    interpret = _on_cpu() if interpret is None else interpret
+    shape = x.shape
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    x2 = x.reshape(R, shape[-1])
+    br = block_r
+    while R % br and br > 1:
+        br //= 2
+    q, s = quantize_int8_fwd(x2, block_r=br, interpret=interpret)
+    return q.reshape(shape), s.reshape(shape[:-1] + (1,))
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return dequantize_int8_ref(q, scale, dtype)

@@ -1,0 +1,15 @@
+"""Oracle for int8 per-row quantization."""
+
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(x):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

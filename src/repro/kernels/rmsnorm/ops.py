@@ -1,0 +1,36 @@
+"""Public RMSNorm wrapper: flattens leading dims, dispatches to the kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("eps", "block_r", "interpret"))
+def rmsnorm(
+    x: jax.Array,  # (..., d)
+    scale: jax.Array,  # (d,)
+    *,
+    eps: float = 1e-6,
+    block_r: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    shape = x.shape
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    x2 = x.reshape(R, shape[-1])
+    br = block_r
+    while R % br and br > 1:
+        br //= 2
+    y = rmsnorm_fwd(x2, scale, eps=eps, block_r=br, interpret=interpret)
+    return y.reshape(shape)

@@ -1,0 +1,114 @@
+"""Mamba-2 SSD chunked-scan kernel (Pallas TPU).
+
+grid = (batch·heads, S/Q) with the chunk axis sequential ("arbitrary"); the SSM
+state (P×N) lives in VMEM scratch across chunks.  Within a chunk the dual
+quadratic form runs on the MXU: three (Q×Q)/(Q×P)/(P×N) matmuls per block.
+B/C are shared across heads (ngroups=1) and indexed by `b // nh`.
+
+Inputs are pre-scaled in ops.py: da = dt·A (negative).  All internal math f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, da_ref, b_ref, c_ref,
+    y_ref, state_ref,
+    st_scr,
+    *, chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q,)
+    da = da_ref[0].astype(jnp.float32)  # (Q,)
+    bc = b_ref[0].astype(jnp.float32)  # (Q, N)
+    cc = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    a_cs = jnp.cumsum(da)  # (Q,)
+    seg = a_cs[:, None] - a_cs[None, :]  # (Q, K)
+    rows = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    L = jnp.where(rows >= cols, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(
+        cc, bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, K)
+    w = scores * L * dt[None, :]
+    y_diag = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    state = st_scr[...]  # (P, N)
+    y_inter = jax.lax.dot_general(
+        cc, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(a_cs)[:, None]  # (Q, P)
+
+    decay_to_end = jnp.exp(a_cs[-1] - a_cs) * dt  # (Q,)
+    st_new = state * jnp.exp(a_cs[-1]) + jax.lax.dot_general(
+        x, bc * decay_to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    st_scr[...] = st_new
+
+    y_ref[0] = (y_diag + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _done():
+        state_ref[0] = st_new.astype(state_ref.dtype)
+
+
+def ssd_scan_fwd(
+    x: jax.Array,   # (BH, S, P)
+    dt: jax.Array,  # (BH, S)
+    da: jax.Array,  # (BH, S) = dt * A
+    B_: jax.Array,  # (B, S, N) shared over heads
+    C_: jax.Array,  # (B, S, N)
+    *,
+    nheads: int,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    BH, S, P = x.shape
+    Bb, _, N = B_.shape
+    assert BH == Bb * nheads
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    grid = (BH, S // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b // nheads, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b // nheads, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, P, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x, dt, da, B_, C_)
+    return y, state

@@ -1,0 +1,40 @@
+"""Public SSD-scan wrapper."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,   # (B, S, nh, P)
+    dt: jax.Array,  # (B, S, nh)  positive step sizes
+    A: jax.Array,   # (nh,)       negative
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Returns (y (B,S,nh,P), final_state (B,nh,P,N))."""
+    interpret = _on_cpu() if interpret is None else interpret
+    B, S, nh, P = x.shape
+    xf = x.transpose(0, 2, 1, 3).reshape(B * nh, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * nh, S)
+    daf = dtf * jnp.repeat(A[None, :], B, 0).reshape(B * nh)[:, None]
+    y, state = ssd_scan_fwd(
+        xf, dtf, daf, B_, C_, nheads=nh, chunk=chunk, interpret=interpret
+    )
+    y = y.reshape(B, nh, S, P).transpose(0, 2, 1, 3)
+    state = state.reshape(B, nh, P, state.shape[-1])
+    return y, state

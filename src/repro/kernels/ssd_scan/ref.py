@@ -1,0 +1,41 @@
+"""Sequential-recurrence oracle for the SSD scan (exact, O(S) state updates)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,   # (BH, S, P)
+    dt: jax.Array,  # (BH, S)
+    da: jax.Array,  # (BH, S) = dt * A  (negative)
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    *,
+    nheads: int,
+):
+    BH, S, P = x.shape
+    Bb, _, N = B_.shape
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_, nheads, axis=0).astype(f32)  # (BH, S, N)
+    Ch = jnp.repeat(C_, nheads, axis=0).astype(f32)
+
+    def step(state, inp):
+        xt, dtt, dat, bt, ct = inp  # (BH,P),(BH,),(BH,),(BH,N),(BH,N)
+        state = state * jnp.exp(dat)[:, None, None] + (
+            dtt[:, None, None] * xt[:, :, None] * bt[:, None, :]
+        )
+        y = jnp.einsum("bn,bpn->bp", ct, state)
+        return state, y
+
+    xs = (
+        x.transpose(1, 0, 2).astype(f32),
+        dt.transpose(1, 0).astype(f32),
+        da.transpose(1, 0).astype(f32),
+        Bh.transpose(1, 0, 2),
+        Ch.transpose(1, 0, 2),
+    )
+    state0 = jnp.zeros((BH, P, N), f32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), state

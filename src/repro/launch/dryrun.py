@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves the distribution config is coherent without hardware: a sharding
+mismatch, compile-time OOM, or unsupported collective is a bug in the framework.
+Artifacts (memory analysis, HLO FLOPs/bytes, per-collective byte counts parsed from
+the post-SPMD HLO) are written as JSON for the roofline analysis
+(EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all            # every cell
+  ... [--multi-pod] [--out artifacts/dryrun]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPE_CELLS, get_config, list_archs
+from repro.distributed.sharding import make_rules, shard_ctx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import cell_specs, specs_to_pspecs
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_OP_RE = re.compile(
+    r"=\s+(?:\([^=]*?\)|\S+)\s+("
+    + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(([^)]*)\)(.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256):
+    """Sum operand bytes of every collective op in post-optimization HLO.
+
+    Returns dict: per-op-kind {bytes, count} plus ici/dcn split (a collective whose
+    first replica group spans devices in different pods counts as DCN).
+    """
+    stats = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    ici = dcn = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, operands, rest = m.groups()
+        if "-done(" in line:  # async pair: count only the start
+            continue
+        b = _shape_bytes(operands)
+        if b == 0:  # operand types not inline; fall back to the result type
+            pre = line.split("=", 1)[-1]
+            b = _shape_bytes(pre.split(kind)[0])
+        stats[kind]["bytes"] += b
+        stats[kind]["count"] += 1
+        g = _GROUPS_RE.search(rest)
+        crosses_pod = False
+        if g:
+            ids = [int(x) for x in g.group(1).split(",") if x]
+            pods = {i // pod_size for i in ids}
+            crosses_pod = len(pods) > 1
+        if crosses_pod:
+            dcn += b
+        else:
+            ici += b
+    total = sum(v["bytes"] for v in stats.values())
+    return {"per_op": stats, "total_bytes": total, "ici_bytes": ici, "dcn_bytes": dcn}
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, rule_overrides=None,
+             cfg_overrides=None):
+    import dataclasses
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = SHAPE_CELLS[shape]
+    ok, why = cfg.cell_supported(cell)
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod,
+    }
+    if not ok:
+        result.update(status="skip", reason=why)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh, rule_overrides)
+    step, args, logical = cell_specs(cfg, cell)
+    from jax.sharding import NamedSharding
+
+    in_shardings = tuple(
+        jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            specs_to_pspecs(a, lg, mesh, rules),
+        )
+        for a, lg in zip(args, logical)
+    )
+    donate = {"train": (0, 1), "prefill": (), "decode": (1,)}[cell.kind]
+
+    def traced(*a):
+        with shard_ctx(mesh, rules):
+            return step(*a)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(traced, in_shardings=in_shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for f in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            try:
+                mem_d[f] = int(getattr(mem, f))
+            except Exception:
+                pass
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, pod_size=256)
+
+    from repro.launch.hlo_analysis import analyze, stats_dict
+
+    st = analyze(hlo, pod_size=256)
+
+    pc = cfg.param_counts()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[cell.kind]
+    model_flops = 2.0 * pc["active"] * tokens * mult  # 6ND for train, 2ND fwd
+
+    result.update(
+        status="ok",
+        t_lower_s=round(t_lower, 2),
+        t_compile_s=round(t_compile, 2),
+        memory_analysis=mem_d,
+        xla_cost_flops=float(cost.get("flops", 0.0)),
+        xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        analyzed=stats_dict(st),  # while-aware per-device totals
+        model_flops_global=model_flops,
+        params_total=pc["total"],
+        params_active=pc["active"],
+        collectives_naive=coll,
+        hlo_lines=hlo.count("\n"),
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPE_CELLS) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = outdir / f"{tag}.json"
+                if path.exists():
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001
+                    res = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures += 1
+                path.write_text(json.dumps(res, indent=1))
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    mem = res["memory_analysis"]
+                    a = res["analyzed"]
+                    extra = (
+                        f" flops/dev={a['flops']:.3e}"
+                        f" coll/dev={a['collective_bytes']:.3e}B"
+                        f" temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+                        f" compile={res['t_compile_s']}s"
+                    )
+                print(f"[{status}] {tag}{extra}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

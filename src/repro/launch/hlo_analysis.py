@@ -1,0 +1,315 @@
+"""While-aware post-SPMD HLO cost analysis.
+
+``compiled.cost_analysis()`` (and any naive text scan) counts a ``while`` body ONCE,
+but our models run their layer stack, attention q-chunks, SSD chunks and CE chunks
+under ``lax.scan``.  This module parses the post-optimization HLO text into a
+computation graph, derives loop trip counts from the loop-condition constants, and
+accumulates:
+
+  * dot FLOPs (2 · prod(result dims) · prod(contracting dims)), loop-multiplied,
+  * memory traffic: operand+result bytes at fusion/op boundaries (fusion internals
+    excluded — they live in registers/VMEM),
+  * per-kind collective operand bytes with an ICI/DCN split derived by expanding
+    ``replica_groups`` (iota or explicit form) and checking pod-boundary crossings.
+
+These are the §Roofline inputs; ``cost_analysis()``'s once-counted numbers are kept
+in the artifacts for cross-checking.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)"
+)
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_RG_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[0-9,\{\}]*\})\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(\[[0-9,]+\])(?:T\(([0-9,]+)\))?"
+)
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+_NO_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "domain", "opt-barrier", "add-dependency",
+}
+
+# Ops whose operand+result sizes count as HBM traffic.  Deliberately a
+# whitelist: the CPU backend materializes many dtype-legalization `convert`s,
+# layout `copy`s/`transpose`s and small elementwise ops that a TPU compile
+# fuses away — counting those would overstate the memory term several-fold.
+_BYTES_OPS = {
+    "fusion", "dot", "convolution", "sort", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "select-and-scatter", "custom-call", "map", "rng", "rng-bit-generator",
+    "cholesky", "triangular-solve", "fft", "concatenate", "select-n",
+}
+# "Perfect fusion" subset: true compute / data-movement ops only.  On TPU every
+# elementwise chain between these fuses into their HBM passes, so this is the
+# realistic lower estimate of step traffic (reported as bytes_fused; the
+# fusion-boundary sum above is the upper estimate).
+_BYTES_OPS_FUSED = {
+    "dot", "convolution", "sort", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "select-and-scatter", "cholesky", "triangular-solve", "fft",
+}
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(t: str) -> List[int]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_fused: float = 0.0  # perfect-fusion (TPU-realistic) traffic estimate
+    coll: Dict[str, Dict[str, float]] = field(
+        default_factory=lambda: {k: {"bytes": 0.0, "count": 0.0} for k in COLLECTIVES}
+    )
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        for k in COLLECTIVES:
+            self.coll[k]["bytes"] += other.coll[k]["bytes"] * mult
+            self.coll[k]["count"] += other.coll[k]["count"] * mult
+        self.ici_bytes += other.ici_bytes * mult
+        self.dcn_bytes += other.dcn_bytes * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.coll.values())
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and ("{" in line):
+            cur = Computation(h.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, tstr, opcode, rest = m.groups()
+            cur.ops.append(Op(name, tstr, opcode, rest))
+            cur.symbols[name] = tstr
+    return comps, entry
+
+
+def _expand_replica_groups(rest: str) -> Optional[np.ndarray]:
+    m = _RG_IOTA_RE.search(rest)
+    if m:
+        g, s, dims_s, perm_s = m.groups()
+        dims = [int(d) for d in dims_s.strip("[]").split(",") if d]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if perm_s:
+            perm = [int(p) for p in perm_s.split(",")]
+            arr = arr.transpose(perm)
+        return arr.reshape(int(g), int(s))
+    m = _RG_EXPLICIT_RE.search(rest)
+    if m:
+        groups = re.findall(r"\{([0-9,]+)\}", m.group(1))
+        parsed = [[int(x) for x in g.split(",") if x] for g in groups]
+        if parsed and all(len(p) == len(parsed[0]) for p in parsed):
+            return np.array(parsed)
+    return None
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop trip count: the integer constant the induction variable is compared to.
+
+    Scans lower to `while(cond: iv < N)`; N appears as `s32[] constant(N)` inside
+    the condition computation.  We take the max integer constant found (validated
+    against known trip counts in tests).
+    """
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        for c in _CONST_INT_RE.findall(op.rest):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    result = 1
+    for d in _first_dims(op.type_str):
+        result *= d
+    # contracting dims from lhs
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+    contract = 1
+    if mc and operands:
+        lhs_t = symbols.get(operands[0], "")
+        dims = _first_dims(lhs_t)
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * result * contract
+
+
+def _operand_bytes(op: Op, symbols: Dict[str, str]) -> int:
+    args = op.rest.split(")", 1)[0]
+    inline = _type_bytes(args)
+    if inline:
+        return inline
+    total = 0
+    for name in _OPERAND_RE.findall(args):
+        total += _type_bytes(symbols.get(name, ""))
+    return total
+
+
+def analyze(text: str, pod_size: int = 256) -> Stats:
+    comps, entry = parse_computations(text)
+    memo: Dict[str, Stats] = {}
+
+    def comp_stats(name: str) -> Stats:
+        if name in memo:
+            return memo[name]
+        memo[name] = Stats()  # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        st = Stats()
+        for op in comp.ops:
+            code = op.opcode
+            if code == "while":
+                attrs = dict(
+                    re.findall(r"(condition|body)=%?([\w.\-]+)", op.rest)
+                )
+                cond_name = attrs.get("condition")
+                body_name = attrs.get("body")
+                trips = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                if body_name:
+                    st.add(comp_stats(body_name), trips)
+                if cond_name:
+                    st.add(comp_stats(cond_name), trips + 1)
+                continue
+            if code in ("conditional",):
+                mb = _BRANCH_RE.search(op.rest)
+                if mb:
+                    subs = _OPERAND_RE.findall(mb.group(1))
+                    if subs:  # worst case branch
+                        stats = [comp_stats(s) for s in subs]
+                        worst = max(stats, key=lambda s: s.flops + s.bytes)
+                        st.add(worst)
+                continue
+            base_kind = code.replace("-start", "")
+            if code.endswith("-done"):
+                continue
+            if base_kind in COLLECTIVES:
+                b = _operand_bytes(op, comp.symbols)
+                st.coll[base_kind]["bytes"] += b
+                st.coll[base_kind]["count"] += 1
+                st.bytes += b + _type_bytes(op.type_str)
+                groups = _expand_replica_groups(op.rest)
+                crosses = False
+                if groups is not None and groups.size:
+                    pods = groups // pod_size
+                    crosses = bool((pods != pods[:, :1]).any())
+                if crosses:
+                    st.dcn_bytes += b
+                else:
+                    st.ici_bytes += b
+                continue
+            # nested computations (fusion bodies count FLOPs, not bytes)
+            for sub in _CALL_ATTR_RE.findall(op.rest):
+                nested = comp_stats(sub)
+                st.flops += nested.flops
+                st.ici_bytes += nested.ici_bytes
+                st.dcn_bytes += nested.dcn_bytes
+                for k in COLLECTIVES:
+                    st.coll[k]["bytes"] += nested.coll[k]["bytes"]
+                    st.coll[k]["count"] += nested.coll[k]["count"]
+            if code in ("dot", "convolution"):
+                st.flops += _dot_flops(op, comp.symbols)
+            if code in _BYTES_OPS:
+                b = _operand_bytes(op, comp.symbols) + _type_bytes(op.type_str)
+                st.bytes += b
+                if code in _BYTES_OPS_FUSED:
+                    st.bytes_fused += b
+        memo[name] = st
+        return st
+
+    if entry is None:
+        return Stats()
+    return comp_stats(entry)
+
+
+def stats_dict(st: Stats) -> Dict:
+    return {
+        "flops": st.flops,
+        "bytes": st.bytes,
+        "bytes_fused": st.bytes_fused,
+        "collective_bytes": st.collective_bytes,
+        "ici_bytes": st.ici_bytes,
+        "dcn_bytes": st.dcn_bytes,
+        "per_op": {k: dict(v) for k, v in st.coll.items()},
+    }

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so importing
+this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax import to
+get 512 placeholder CPU devices; smoke tests and benchmarks see the real single
+device and use ``make_test_mesh``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh() -> Mesh:
+    """1×1 mesh over however many local devices exist (usually 1 on CPU)."""
+    n = jax.device_count()
+    d = int(np.sqrt(n))
+    while n % d:
+        d -= 1
+    return jax.make_mesh((d, n // d), ("data", "model"))

@@ -1,0 +1,196 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape) cell.
+
+``input_specs(cfg, cell)`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every input of the lowered step (no device allocation), plus the logical axes used
+to derive their shardings — the dry-run and the roofline read from here.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.sharding import make_pspec, make_rules, shard_ctx
+from repro.model import lm
+from repro.model.layers import logical_axes as defs_logical
+from repro.optim import OptConfig, adamw_update, init_opt_state
+
+PyTree = Any
+I32 = jnp.int32
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def default_accum_steps(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """Microbatching policy: keep the per-device microbatch around 2 rows."""
+    if cell.kind != "train":
+        return 1
+    if cfg.accum_steps:
+        return cfg.accum_steps
+    if cfg.batch_chunks > 1:  # weight-stationary in-block chunking instead
+        return 1
+    n = max(1, cell.global_batch // 32)
+    while cell.global_batch % n:
+        n -= 1
+    return min(n, 8)
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig, accum_steps: int = 1):
+    """Train step with optional gradient accumulation over microbatches.
+
+    Accumulation bounds the activation working set (the per-microbatch forward/
+    backward is the peak) while keeping the global batch semantics; gradients
+    accumulate in f32.
+    """
+
+    def lm_loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(lm_loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            def split(a):
+                x = a.reshape(accum_steps, a.shape[0] // accum_steps, *a.shape[1:])
+                from repro.distributed.sharding import constrain
+
+                return constrain(x, (None, "batch") + (None,) * (a.ndim - 1))
+
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {
+                "loss": jnp.zeros(()), "ce": jnp.zeros(()),
+                "moe_balance": jnp.zeros(()), "moe_zloss": jnp.zeros(()),
+                "tokens": jnp.zeros(()),
+            }
+
+            def body(carry, mb):
+                g_acc, m_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    lm_loss_fn, has_aux=True
+                )(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                m_acc = {k: m_acc[k] + metrics[k] for k in m_acc}
+                return (g_acc, m_acc), None
+
+            (g_sum, m_sum), _ = jax.lax.scan(body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: (g / accum_steps), g_sum)
+            metrics = {k: v / accum_steps for k, v in m_sum.items()}
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, opt_state, opt)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(
+            params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return lm.decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs + logical axes)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStruct dict, logical-axes dict) for a train/prefill batch."""
+    B, S = cell.global_batch, cell.seq_len
+    specs: Dict[str, Any] = {}
+    logical: Dict[str, Any] = {}
+    if cfg.frontend == "none":
+        specs["tokens"] = SDS((B, S), I32)
+        logical["tokens"] = ("batch", "seq")
+    else:
+        specs["embeds"] = SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        logical["embeds"] = ("batch", "seq", None)
+    if cell.kind == "train":
+        specs["labels"] = SDS((B, S), I32)
+        logical["labels"] = ("batch", "seq")
+    return specs, logical
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Tuple[PyTree, PyTree]:
+    shapes = jax.eval_shape(partial(lm.init_cache, cfg, batch, max_len))
+    logical = lm.cache_logical(cfg)
+    return shapes, logical
+
+
+def params_specs(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+    defs = lm.model_defs(cfg)
+    return lm.abstract_model(cfg), defs_logical(defs)
+
+
+def opt_specs(cfg: ModelConfig, opt: OptConfig) -> Tuple[PyTree, PyTree]:
+    abstract = jax.eval_shape(
+        partial(init_opt_state, opt=opt), lm.abstract_model(cfg)
+    )
+    plog = defs_logical(lm.model_defs(cfg))
+    logical = {
+        "m": plog,
+        "v": plog,
+        "step": (),
+    }
+    if opt.keep_master:
+        logical["master"] = plog
+    return abstract, logical
+
+
+def cell_specs(cfg: ModelConfig, cell: ShapeCell, opt: Optional[OptConfig] = None):
+    """All (args, logical) for the step a cell lowers.
+
+    Returns (step_fn, args_specs_tuple, args_logical_tuple).
+    """
+    opt = opt or OptConfig()
+    p_spec, p_log = params_specs(cfg)
+    if cell.kind == "train":
+        b_spec, b_log = batch_specs(cfg, cell)
+        o_spec, o_log = opt_specs(cfg, opt)
+        step = make_train_step(cfg, opt, default_accum_steps(cfg, cell))
+        return step, (p_spec, o_spec, b_spec), (p_log, o_log, b_log)
+    if cell.kind == "prefill":
+        b_spec, b_log = batch_specs(cfg, cell)
+        return make_prefill_step(cfg), (p_spec, b_spec), (p_log, b_log)
+    # decode: one new token against a cache of seq_len
+    c_spec, c_log = cache_specs(cfg, cell.global_batch, cell.seq_len)
+    tok = SDS((cell.global_batch,), I32)
+    pos = SDS((), I32)
+    return (
+        make_decode_step(cfg),
+        (p_spec, c_spec, tok, pos),
+        (p_log, c_log, ("batch",), ()),
+    )
+
+
+def specs_to_pspecs(specs: PyTree, logical: PyTree, mesh, rules) -> PyTree:
+    """Map (ShapeDtypeStruct tree, logical tree) -> PartitionSpec tree."""
+
+    def f(s, lg):
+        return make_pspec(lg, s.shape, mesh, rules)
+
+    # specs' leaves (ShapeDtypeStruct) bound the traversal, so the tuple leaves of
+    # the logical tree are not descended into.
+    return jax.tree.map(f, specs, logical)

@@ -1,0 +1,292 @@
+"""GQA attention: q-chunked causal attention (train/prefill) + cached decode.
+
+Parallel strategy is carried by the logical-axis rules (see sharding.make_rules):
+
+  * head-TP  — 'heads'→model, 'seq_q'→None: sequence gathered inside the block,
+    scores sharded over query heads (Megatron-style TP with sequence parallelism
+    at the block boundary).
+  * context-parallel — 'heads'→None, 'seq_q'→model: used when the head count does
+    not divide the model axis (starcoder2: 36H, smollm: 9H); the query sequence
+    stays sharded, K/V are gathered.
+
+Both strategies are the same global-semantics code; only the constraints differ.
+The q-dimension is processed in chunks via ``lax.scan`` so the score matrix never
+exceeds a bounded working set — this is the pure-jnp analogue of the Pallas flash
+kernel in ``repro.kernels.flash_attention`` (used on real TPU via cfg.use_pallas).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, current_ctx
+from repro.model.layers import ParamDef, apply_rope, dense, rms_norm, rope_angles
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg) -> Dict[str, ParamDef]:
+    d, H, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, kv * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, kv * hd), ("fsdp", "tp")),
+        "wo": ParamDef((H * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones", dtype="float32")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones", dtype="float32")
+    return defs
+
+
+def _axis_size(name: str) -> int:
+    ctx = current_ctx()
+    if ctx is None:
+        return 1
+    return dict(ctx.mesh.shape).get(name, 1)
+
+
+def _seq_shards(seq: int) -> int:
+    """How many ways the query sequence is sharded (context-parallel strategy)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return 1
+    if ctx.rules.get("seq_q") != "model":
+        return 1
+    m = _axis_size("model")
+    return m if (m > 1 and seq % m == 0) else 1
+
+
+def _pick_q_chunk(
+    batch: int, heads: int, seq: int, local_seq: int, budget_bytes: int = 1 << 27
+) -> int:
+    """Largest power-of-two local q-chunk whose per-device score block fits budget."""
+    b_sh = 1
+    ctx = current_ctx()
+    if ctx is not None:
+        b_sh = _axis_size("data") * _axis_size("pod")
+        if batch % b_sh:
+            b_sh = 1
+    h_sh = _axis_size("model") if (ctx and ctx.rules.get("heads") == "model") else 1
+    if heads % h_sh:
+        h_sh = 1
+    per_row = (batch // b_sh) * (heads // h_sh) * seq * 4  # f32 scores
+    chunk = max(128, int(budget_bytes // max(per_row, 1)))
+    chunk = 1 << (chunk.bit_length() - 1)  # floor power of two
+    while local_seq % chunk and chunk > 1:
+        chunk //= 2
+    return max(1, min(chunk, local_seq))
+
+
+def _mask_scores(scores, rows, cols, window: int):
+    """rows: (Q,) global query positions; cols: (S,) key positions."""
+    keep = cols[None, :] <= rows[:, None]
+    if window:
+        keep &= cols[None, :] > rows[:, None] - window
+    return jnp.where(keep[None, None], scores, NEG_INF)
+
+
+def _attn_block(q, k, v, rows, cols, window: int, scale: float):
+    """q: (B,Q,H,hd); k/v: (B,S,H,hd) -> (B,Q,H,hd)."""
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = constrain(scores, ("batch", "heads", "seq_q", "seq_full"))
+    scores = _mask_scores(scores, rows, cols, window)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out
+
+
+def _attn_block_p(q, k, v, rows, cols, window: int, scale: float):
+    """Shard-structured block.  q: (B,P,Q,H,hd); rows: (P,Q); k/v: (B,S,H,hd).
+
+    P is the context-parallel dim (query-sequence shards); every shard computes its
+    own (Q,S) score block in parallel.  Returns (B,P,Q,H,hd).
+    """
+    scores = jnp.einsum(
+        "bpqhd,bshd->bphqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = constrain(scores, ("batch", "seq_q", "heads", None, "seq_full"))
+    keep = cols[None, None, :] <= rows[:, :, None]  # (P,Q,S)
+    if window:
+        keep &= cols[None, None, :] > rows[:, :, None] - window
+    scores = jnp.where(keep[None, :, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bphqs,bshd->bpqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out
+
+
+def _project_qkv(params, x, cfg, positions):
+    B, S, _ = x.shape
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(x, params["wq"]).reshape(B, S, H, hd)
+    k = dense(x, params["wk"]).reshape(B, S, kv, hd)
+    v = dense(x, params["wv"]).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rmsnorm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rmsnorm_eps)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)  # (S, hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention(
+    params,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array,
+    *,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    write_pos: Optional[jax.Array] = None,
+    window: int = 0,
+    ring: bool = False,
+    return_cache: bool = False,
+):
+    """x: (B, S, d).  Train/prefill when cache is None; single-token decode otherwise.
+
+    cache: (k, v) each (B, S_max, kv, hd); write_pos: scalar int32 position.
+    Returns (y, new_cache_or_None).
+    """
+    B, S, d = x.shape
+    H, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // kv
+    scale = 1.0 / math.sqrt(hd)
+
+    if cache is not None:
+        # ---- decode: S == 1, grouped-query einsum against the sharded cache --
+        # write_pos may be a scalar (whole batch at one position) or a (B,)
+        # vector (continuous batching: every slot at its own offset).
+        multi = getattr(write_pos, "ndim", 0) == 1
+        q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+        ck, cv = cache
+        S_max = ck.shape[1]
+        cols = jnp.arange(S_max, dtype=jnp.int32)
+        if multi:
+            sel = (cols[None, :] == write_pos[:, None])[:, :, None, None]
+            ck = jnp.where(sel, k_new.astype(ck.dtype), ck)
+            cv = jnp.where(sel, v_new.astype(cv.dtype), cv)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k_new.astype(ck.dtype), (0, write_pos, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cv, v_new.astype(cv.dtype), (0, write_pos, 0, 0)
+            )
+        ck = constrain(ck, ("kv_batch", "kv_seq", "kv_heads", None))
+        cv = constrain(cv, ("kv_batch", "kv_seq", "kv_heads", None))
+        pos = positions.reshape(-1)[0] if not multi else None
+        if ring:
+            # Ring-buffer window cache: once full (pos >= S_max) every slot is a
+            # valid in-window key; before that, only slots <= pos are.
+            assert not multi, "ring window caches use uniform positions"
+            cols = jnp.where(pos >= S_max, pos, cols)
+        if multi:
+            keep = cols[None, :] <= write_pos[:, None]  # (B, S)
+            if window:
+                keep &= cols[None, :] > write_pos[:, None] - window
+        else:
+            keep = cols <= pos
+            if window and not ring:
+                keep &= cols > pos - window
+        q_g = q.reshape(B, kv, G, hd)
+        # REPRO_BF16_DOTS=1: let the QK dot emit bf16 (softmax still runs f32).
+        # Avoids the CPU backend materializing an f32 copy of the whole cache;
+        # on TPU the MXU accumulates f32 either way (§Perf, musicgen decode).
+        import os as _os
+
+        pref = None if _os.environ.get("REPRO_BF16_DOTS") == "1" else jnp.float32
+        scores = jnp.einsum(
+            "bkgd,bskd->bkgs", q_g, ck, preferred_element_type=pref
+        ).astype(jnp.float32) * scale
+        scores = constrain(scores, ("kv_batch", "kv_heads", None, "kv_seq"))
+        if multi:
+            scores = jnp.where(keep[:, None, None, :], scores, NEG_INF)
+        else:
+            scores = jnp.where(keep[None, None, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkgs,bskd->bkgd", p.astype(cv.dtype), cv,
+            preferred_element_type=jnp.float32,
+        ).astype(cv.dtype)
+        y = dense(out.reshape(B, S, H * hd), params["wo"])
+        y = constrain(y, ("batch", "seq", "embed"))
+        return y, (ck, cv)
+
+    # ---- train / prefill ----------------------------------------------------
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if (
+        getattr(cfg, "use_pallas", "off") != "off"
+        and window == 0
+        and not return_cache
+    ):
+        # Pallas flash-attention kernel path (kernels/flash_attention).  On a
+        # real TPU mesh this runs under shard_map per model-parallel shard; in
+        # tests it runs in interpret mode and must match the jnp path.
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(
+            q, k, v, causal=True,
+            interpret=(cfg.use_pallas == "interpret"),
+        )
+        y = dense(out.reshape(B, S, H * hd), params["wo"])
+        return constrain(y, ("batch", "seq", "embed")), None
+
+    q = constrain(q, ("batch", "seq_q", "heads", None))
+    k = constrain(k, ("batch", "seq_full", "kv_heads", None))
+    v = constrain(v, ("batch", "seq_full", "kv_heads", None))
+    k_full = constrain(jnp.repeat(k, G, axis=2), ("batch", "seq_full", "heads", None))
+    v_full = constrain(jnp.repeat(v, G, axis=2), ("batch", "seq_full", "heads", None))
+    cols = jnp.arange(S, dtype=jnp.int32)
+
+    # Shard-aware chunking: split S as (P shards, n_local, chunk) so the scan
+    # iterates over *local* chunks with every context-parallel shard active.
+    P = _seq_shards(S)
+    local = S // P
+    q_chunk = _pick_q_chunk(B, H, S, local)
+    n_loc = local // q_chunk
+    q_r = q.reshape(B, P, n_loc, q_chunk, H, hd)
+    q_r = constrain(q_r, ("batch", "seq_q", None, None, "heads", None))
+    p_off = jnp.arange(P, dtype=jnp.int32)[:, None] * local  # (P,1)
+
+    # checkpoint: the (Q,S) score/prob block is recomputed in the backward pass
+    # (flash-attention style) instead of being saved per chunk.
+    @jax.checkpoint
+    def chunk_attn(qc, j):
+        rows = p_off + j * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)[None, :]
+        return _attn_block_p(qc, k_full, v_full, rows, cols, window, scale)
+
+    if n_loc == 1:
+        out = chunk_attn(q_r[:, :, 0], jnp.int32(0))[:, :, None]
+    else:
+        xs = q_r.transpose(2, 0, 1, 3, 4, 5)  # (n_loc, B, P, qc, H, hd)
+
+        def body(_, qc_j):
+            qc, j = qc_j
+            return None, chunk_attn(qc, j)
+
+        _, outs = jax.lax.scan(body, None, (xs, jnp.arange(n_loc)))
+        out = outs.transpose(1, 2, 0, 3, 4, 5)  # (B, P, n_loc, qc, H, hd)
+    out = out.reshape(B, S, H, hd)
+    out = constrain(out, ("batch", "seq_q", "heads", None))
+    out_flat = out.reshape(B, S, H * hd)
+    ctx = current_ctx()
+    if ctx is not None and ctx.rules.get("attn_out_seq"):
+        # seq-sharded out-projection: a2a heads->seq, gather wo (§Perf)
+        out_flat = constrain(out_flat, ("batch", "attn_out_seq", None))
+    y = dense(out_flat, params["wo"])
+    y = constrain(y, ("batch", "seq", "embed"))
+    new_cache = None
+    if return_cache:  # store in the decode-cache sharding
+        new_cache = (
+            constrain(k, ("kv_batch", "kv_seq", "kv_heads", None)),
+            constrain(v, ("kv_batch", "kv_seq", "kv_heads", None)),
+        )
+    return y, new_cache

@@ -1,0 +1,87 @@
+"""Block assembly: pre-norm mixer (attention or SSD) + optional FFN (dense or MoE)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN, BlockKind
+from repro.model.attention import attn_defs, attention
+from repro.model.layers import mlp_defs, norm_defs, rms_norm, swiglu
+from repro.model.moe import moe_defs, moe_ffn
+from repro.model.ssm import init_ssm_cache, ssm_cache_logical, ssm_defs, ssm_mixer
+
+
+def block_defs(cfg, kind: BlockKind) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"norm_mixer": norm_defs(d)}
+    if kind.mixer == MIXER_ATTN:
+        defs["mixer"] = attn_defs(cfg)
+    else:
+        defs["mixer"] = ssm_defs(cfg)
+    if kind.ffn != FFN_NONE:
+        defs["norm_ffn"] = norm_defs(d)
+        defs["ffn"] = mlp_defs(d, cfg.d_ff) if kind.ffn == FFN_DENSE else moe_defs(cfg)
+    return defs
+
+
+def init_block_cache(cfg, kind: BlockKind, batch: int, cache_len: int, dtype):
+    """Decode cache for one block."""
+    if kind.mixer == MIXER_ATTN:
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        }
+    return init_ssm_cache(cfg, batch, dtype)
+
+
+def block_cache_logical(cfg, kind: BlockKind):
+    if kind.mixer == MIXER_ATTN:
+        ax = ("kv_batch", "kv_seq", "kv_heads", None)
+        return {"k": ax, "v": ax}
+    return ssm_cache_logical(cfg)
+
+
+def block_fwd(
+    params,
+    x: jax.Array,
+    kind: BlockKind,
+    cfg,
+    positions: jax.Array,
+    *,
+    cache=None,
+    write_pos=None,
+    window: int = 0,
+    ring: bool = False,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
+    """Returns (x, new_cache, aux)."""
+    aux: Dict[str, jax.Array] = {}
+    h = rms_norm(x, params["norm_mixer"]["scale"], cfg.rmsnorm_eps)
+    if kind.mixer == MIXER_ATTN:
+        y, new_cache = attention(
+            params["mixer"], h, cfg, positions,
+            cache=(cache["k"], cache["v"]) if cache is not None else None,
+            write_pos=write_pos, window=window, ring=ring,
+            return_cache=return_cache or cache is not None,
+        )
+        if new_cache is not None:
+            new_cache = {"k": new_cache[0], "v": new_cache[1]}
+    else:
+        y, new_cache = ssm_mixer(
+            params["mixer"], h, cfg, cache=cache,
+            return_cache=return_cache or cache is not None,
+        )
+    x = x + y
+    if kind.ffn != FFN_NONE:
+        h = rms_norm(x, params["norm_ffn"]["scale"], cfg.rmsnorm_eps)
+        if kind.ffn == FFN_DENSE:
+            f = swiglu(h, params["ffn"]["w_gate"], params["ffn"]["w_up"],
+                       params["ffn"]["w_down"])
+        else:
+            f, aux = moe_ffn(params["ffn"], h, cfg)
+        x = x + f
+    return x, new_cache, aux

@@ -1,0 +1,168 @@
+"""Shared layer primitives and the parameter-definition machinery.
+
+Parameters are plain nested dicts of arrays.  Every leaf is described by a
+:class:`ParamDef` carrying its shape, its *logical* axis names and an init rule.
+Logical axes are mapped to mesh axes by ``repro.distributed.sharding`` — the model
+code never mentions a physical mesh.
+
+Logical axis vocabulary (see sharding.LOGICAL_RULES):
+    'fsdp'   — weight dim sharded over the data axis (ZeRO-3 style storage)
+    'tp'     — weight dim sharded over the model axis (tensor parallel)
+    'vocab'  — (padded) vocabulary dim, sharded over the model axis
+    'layers' — stacked-scan leading dim, never sharded
+    None     — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.paramdef import ParamDef, is_paramdef  # re-exported for compat
+
+PyTree = Any
+
+
+def stack_defs(defs: PyTree, n: int) -> PyTree:
+    """Add a leading ('layers',) stacking axis of size ``n`` to every ParamDef."""
+
+    def f(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(
+            d, shape=(n,) + d.shape, logical=("layers",) + d.logical
+        )
+
+    return jax.tree.map(f, defs, is_leaf=is_paramdef)
+
+
+def init_leaf(d: ParamDef, key, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(d.dtype or default_dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_a":  # A_log: log of uniform [1, 16]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if d.init == "ssm_dt":  # dt bias: inverse-softplus of uniform [1e-3, 1e-1]
+        u = jax.random.uniform(
+            key, d.shape, jnp.float32, math.log(1e-3), math.log(1e-1)
+        )
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    # fan-in scaled normal
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    scale = d.scale if d.scale else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(defs: PyTree, key, default_dtype="bfloat16") -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_paramdef)
+    keys = jax.random.split(key, len(leaves))
+    out = [init_leaf(d, k, default_dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs: PyTree, default_dtype="bfloat16") -> PyTree:
+    def f(d: ParamDef):
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or default_dtype))
+
+    return jax.tree.map(f, defs, is_leaf=is_paramdef)
+
+
+def logical_axes(defs: PyTree) -> PyTree:
+    """Tree of logical-axis tuples with the same structure as the params."""
+    return jax.tree.map(lambda d: d.logical, defs, is_leaf=is_paramdef)
+
+
+def param_count(defs: PyTree) -> int:
+    return sum(
+        int(np.prod(d.shape))
+        for d in jax.tree.leaves(defs, is_leaf=is_paramdef)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables computed on the fly.  positions: any shape of int32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+import os as _os
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Matmul, result in x.dtype.
+
+    By default the dot's preferred element type is f32 (explicit f32
+    accumulation).  With REPRO_BF16_DOTS=1 the dot emits x.dtype directly —
+    the MXU still accumulates in f32 internally, but backward cotangents stay
+    bf16, halving every backward resharding collective (§Perf experiment)."""
+    if _os.environ.get("REPRO_BF16_DOTS") == "1":
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ()))
+        ).astype(x.dtype)
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import constrain, current_ctx  # late import
+
+    h = silu(dense(x, w_gate)) * dense(x, w_up)
+    ctx = current_ctx()
+    if ctx is not None and ctx.rules.get("ffn_act_seq"):
+        # seq-sharded down-projection: a2a the activation, gather the weight —
+        # removes the full-seq output all-reduce (§Perf)
+        h = constrain(h, ("batch", "ffn_act_seq", None))
+    else:
+        h = constrain(h, ("batch", "seq_full", "ff"))  # Megatron row-parallel
+    return dense(h, w_down)
+
+
+def mlp_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("fsdp", "tp")),
+        "w_up": ParamDef((d_model, d_ff), ("fsdp", "tp")),
+        "w_down": ParamDef((d_ff, d_model), ("tp", "fsdp")),
+    }
+
+
+def norm_defs(d_model: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d_model,), (None,), init="ones", dtype="float32")}

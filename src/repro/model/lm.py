@@ -1,0 +1,327 @@
+"""Causal LM assembly: embedding/frontend -> period-scanned blocks -> chunked CE loss.
+
+Layers are stacked per *period position* (the repeating layer pattern of the config —
+e.g. Jamba's [7×mamba+1×attn] × [alternating dense/MoE]) and iterated with
+``lax.scan`` so compile time and HLO size stay bounded for 94-layer models.  The
+scan body is rematerialized (``jax.checkpoint``), so only the per-period block inputs
+are saved — with sequence-parallel activations this is what keeps the 235B config
+within HBM.
+
+The CE loss is computed in sequence chunks with the head matmul inside the (rematted)
+chunk body, so the (tokens × vocab) logits tensor never materializes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFN_MOE, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.model.blocks import (
+    block_cache_logical,
+    block_defs,
+    block_fwd,
+    init_block_cache,
+)
+from repro.model.layers import (
+    ParamDef,
+    abstract_params,
+    dense,
+    init_params,
+    norm_defs,
+    rms_norm,
+    stack_defs,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def model_defs(cfg: ModelConfig) -> PyTree:
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    defs: Dict[str, Any] = {"embed": {"tok": ParamDef((Vp, d), ("vocab", "fsdp"))}}
+    if cfg.frontend != "none":
+        defs["frontend"] = {"proj": ParamDef((d, d), ("fsdp", "tp"))}
+    pattern = cfg.pattern()
+    defs["layers"] = {
+        f"pos{i}": stack_defs(block_defs(cfg, kind), cfg.num_periods)
+        for i, kind in enumerate(pattern)
+    }
+    defs["final_norm"] = norm_defs(d)
+    if not cfg.tie_embeddings:
+        defs["head"] = {"w": ParamDef((d, Vp), ("fsdp", "vocab"))}
+    return defs
+
+
+def init_model(cfg: ModelConfig, key) -> PyTree:
+    return init_params(model_defs(cfg), key, cfg.param_dtype)
+
+
+def abstract_model(cfg: ModelConfig) -> PyTree:
+    return abstract_params(model_defs(cfg), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        x = dense(embeds.astype(cfg.dtype), params["frontend"]["proj"])
+    else:
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    return constrain(x.astype(cfg.dtype), ("batch", "seq", "embed"))
+
+
+def _head_w(params):
+    if "head" in params:
+        return params["head"]["w"]
+    return params["embed"]["tok"].T
+
+
+def _vocab_mask(cfg) -> jax.Array:
+    """(Vp,) additive mask: -inf on padded vocab entries."""
+    idx = jnp.arange(cfg.padded_vocab)
+    return jnp.where(idx < cfg.vocab_size, 0.0, -1e30).astype(jnp.float32)
+
+
+def _zero_aux():
+    return {"moe_balance": jnp.zeros((), jnp.float32),
+            "moe_zloss": jnp.zeros((), jnp.float32)}
+
+
+def _acc_aux(tot, aux):
+    if not aux:
+        return tot
+    return {k: tot[k] + aux.get(k, 0.0) for k in tot}
+
+
+def forward_hidden(
+    params, cfg: ModelConfig, tokens=None, embeds=None, *, collect_cache: bool = False
+):
+    """Full-sequence forward.  Returns (hidden (B,S,d), aux, cache_or_None)."""
+    x = _embed_in(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    pattern = cfg.pattern()
+
+    # Per-block rematerialization: the backward pass recomputes one block at a
+    # time, so the peak working set is a single block's intermediates rather
+    # than a whole period's (critical for MoE periods).
+    def one_block(kind):
+        def f(p, x):
+            x, cache, aux = block_fwd(
+                p, x, kind, cfg, positions, return_cache=collect_cache
+            )
+            x = constrain(x, ("batch", "seq", "embed"))
+            return x, cache, aux
+
+        def f_chunked(p, x):
+            # weight-stationary accumulation: scan batch chunks inside the
+            # block so scan-invariant weight all-gathers hoist out of the loop
+            # (one gather per pass instead of per microbatch)
+            nb = cfg.batch_chunks
+            B = x.shape[0]
+            xc = x.reshape(nb, B // nb, *x.shape[1:])
+            xc = constrain(xc, (None, "batch", "seq", "embed"))
+
+            def body(_, xi):
+                y, _, aux = block_fwd(p, xi, kind, cfg, positions)
+                y = constrain(y, ("batch", "seq", "embed"))
+                return None, (y, aux)
+
+            _, (y, auxs) = jax.lax.scan(body, None, xc)
+            y = constrain(
+                y.reshape(B, *x.shape[1:]), ("batch", "seq", "embed")
+            )
+            return y, None, jax.tree.map(lambda a: jnp.sum(a, 0), auxs)
+
+        use_chunks = (
+            cfg.batch_chunks > 1 and not collect_cache and kind is not None
+        )
+        g = f_chunked if use_chunks else f
+        if collect_cache or cfg.remat == "none":
+            return g
+        if cfg.remat == "save_dispatch" and kind.ffn == FFN_MOE:
+            return jax.checkpoint(
+                g,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "moe_dispatch"
+                ),
+            )
+        return jax.checkpoint(g)
+
+    block_fns = [one_block(kind) for kind in pattern]
+
+    def period_body(x, pslice):
+        aux_tot = _zero_aux()
+        caches = {}
+        for i, kind in enumerate(pattern):
+            x, cache, aux = block_fns[i](pslice[f"pos{i}"], x)
+            aux_tot = _acc_aux(aux_tot, aux)
+            if collect_cache:
+                caches[f"pos{i}"] = cache
+        return x, (aux_tot, caches) if collect_cache else (aux_tot, 0)
+
+    x, (auxs, caches) = jax.lax.scan(period_body, x, params["layers"])
+    aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.rmsnorm_eps)
+    return x, aux, (caches if collect_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """batch: {'tokens' | 'embeds', 'labels'} -> (loss, metrics)."""
+    hidden, aux, _ = forward_hidden(
+        params, cfg, batch.get("tokens"), batch.get("embeds")
+    )
+    labels = batch["labels"]
+    B, S, d = hidden.shape
+    head_w = _head_w(params)
+    vmask = _vocab_mask(cfg)
+
+    # Chunk the CE along the *local* sequence so the scan inputs stay
+    # sequence-sharded; only one (B, P, ck, d) chunk is gathered per iteration
+    # for the vocab-parallel logits matmul.
+    from repro.model.moe import _seq_shards
+
+    P = _seq_shards(S)
+    Sp = S // P
+    chunk = min(512, Sp)
+    while Sp % chunk:
+        chunk //= 2
+    nc = Sp // chunk
+    h_r = constrain(
+        hidden.reshape(B, P, nc, chunk, d), ("batch", "seq", None, None, None)
+    )
+    h_c = h_r.transpose(2, 0, 1, 3, 4)  # (nc, B, P, ck, d)
+    l_c = labels.reshape(B, P, nc, chunk).transpose(2, 0, 1, 3)
+
+    @jax.checkpoint
+    def ce_chunk(carry, hl):
+        h, l = hl  # h: (B, P, ck, d); l: (B, P, ck)
+        logits = jax.lax.dot_general(
+            h, head_w, (((3,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        logits = constrain(logits + vmask, ("batch", None, None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + jnp.sum((lse - lab) * valid), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_chunk, (jnp.zeros(()), jnp.zeros(())), (h_c, l_c))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = (
+        ce
+        + cfg.router_aux_weight * aux["moe_balance"] / max(cfg.num_layers, 1)
+        + 1e-3 * aux["moe_zloss"] / max(cfg.num_layers, 1)
+    )
+    metrics = {"loss": loss, "ce": ce, **aux, "tokens": cnt}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Decode cache pytree, stacked over periods per pattern position."""
+    pattern = cfg.pattern()
+    np_ = cfg.num_periods
+    caches = {}
+    for i, kind in enumerate(pattern):
+        clen = attn_cache_len(cfg, max_len) if kind.mixer == "attn" else max_len
+        one = init_block_cache(cfg, kind, batch, clen, jnp.dtype(cfg.dtype))
+        caches[f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.zeros((np_,) + a.shape, a.dtype), one
+        )
+    return caches
+
+
+def cache_logical(cfg: ModelConfig) -> PyTree:
+    pattern = cfg.pattern()
+    return {
+        f"pos{i}": jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            block_cache_logical(cfg, kind),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        for i, kind in enumerate(pattern)
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None):
+    """Returns (last-token logits (B, Vp), cache)."""
+    hidden, _, caches = forward_hidden(
+        params, cfg, tokens, embeds, collect_cache=True
+    )
+    last = hidden[:, -1, :]
+    logits = jax.lax.dot_general(
+        last, _head_w(params), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + _vocab_mask(cfg)
+    logits = constrain(logits, ("batch", "vocab"))
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step.  tokens: (B,) int32; pos: scalar int32 (uniform batch
+    position) or (B,) int32 vector (continuous batching: per-slot positions).
+
+    Returns (logits (B, Vp), new_cache).
+    """
+    multi = getattr(pos, "ndim", 0) == 1
+    x = _embed_in(params, cfg, tokens[:, None])
+    positions = pos[:, None] if multi else jnp.full((1,), pos, jnp.int32)
+    pattern = cfg.pattern()
+
+    def body(x, slices):
+        pslice, cslice = slices
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            c = cslice[f"pos{i}"]
+            ring = False
+            wp = pos
+            if kind.mixer == "attn" and not multi:
+                clen = c["k"].shape[1]
+                ring = bool(cfg.sliding_window) and clen <= cfg.sliding_window
+                wp = pos % clen if ring else pos
+            x, nc, _ = block_fwd(
+                pslice[f"pos{i}"], x, kind, cfg, positions,
+                cache=c, write_pos=wp, ring=ring,
+            )
+            new_caches[f"pos{i}"] = nc
+        return x, new_caches
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.rmsnorm_eps)
+    logits = jax.lax.dot_general(
+        x[:, 0, :], _head_w(params), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + _vocab_mask(cfg)
+    logits = constrain(logits, ("batch", "vocab"))
+    return logits, new_cache

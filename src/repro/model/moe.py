@@ -1,0 +1,184 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch groups are batch rows (GShard-style groups): each row independently sorts its
+(seq·k) assignments by expert and scatters into a per-row capacity buffer
+(E, C, d).  This keeps the sort/scatter *local to the data shard* — no global token
+permutation collectives — while the grouped expert matmul is sharded over the
+'experts' (model) and 'batch' (data) axes.  Decode uses a single global group (the
+whole batch is a few hundred tokens, so per-row capacity would waste E/k× compute).
+
+Shared experts (DeepSeek-MoE) are a dense SwiGLU of width num_shared·moe_d_ff.
+Aux losses: switch load-balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.model.layers import ParamDef, dense, mlp_defs, silu, swiglu
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    defs = {
+        "router": ParamDef((d, E), ("fsdp", None), dtype="float32"),
+        "w_gate": ParamDef((E, d, f), ("experts", "fsdp", None)),
+        "w_up": ParamDef((E, d, f), ("experts", "fsdp", None)),
+        "w_down": ParamDef((E, f, d), ("experts", None, "fsdp")),
+    }
+    if cfg.num_shared_experts:
+        defs["shared"] = mlp_defs(d, cfg.num_shared_experts * f)
+    return defs
+
+
+def _capacity(n_tokens: int, k: int, num_experts: int, factor: float) -> int:
+    c = int(n_tokens * k * factor / num_experts) + 1
+    c = -(-c // 8) * 8  # round up to multiple of 8
+    return min(c, n_tokens * k)
+
+
+def _group_dispatch(x, probs, k: int, capacity: int):
+    """One dispatch group.
+
+    x: (N, d); probs: (N, E) f32.  Returns (buf (E,C,d), combine metadata).
+    """
+    N, d = x.shape
+    E = probs.shape[-1]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (N, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    M = N * k
+    e_flat = gate_idx.reshape(M)
+    t_flat = jnp.arange(M, dtype=jnp.int32) // k
+    g_flat = gate_vals.reshape(M)
+
+    order = jnp.argsort(e_flat)  # stable
+    e_sorted = e_flat[order]
+    t_sorted = t_flat[order]
+    g_sorted = g_flat[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    offsets = jnp.cumsum(counts) - counts  # (E,)
+    slot = jnp.arange(M, dtype=jnp.int32) - offsets[e_sorted]
+    slot = jnp.where(slot < capacity, slot, capacity)  # capacity index drops
+
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    buf = buf.at[e_sorted, slot].set(x[t_sorted], mode="drop")
+    meta = (t_sorted, e_sorted, slot, g_sorted, counts)
+    return buf, meta
+
+
+def _group_combine(out_buf, meta, n_tokens: int):
+    """out_buf: (E, C, d) -> (N, d) weighted combine."""
+    t_sorted, e_sorted, slot, g_sorted, _ = meta
+    d = out_buf.shape[-1]
+    vals = out_buf.at[e_sorted, slot].get(mode="fill", fill_value=0)  # (M, d)
+    vals = vals * g_sorted[:, None].astype(vals.dtype)
+    y = jnp.zeros((n_tokens, d), out_buf.dtype).at[t_sorted].add(vals)
+    return y
+
+
+def _expert_ffn(params, buf):
+    """Grouped SwiGLU: buf (G..., E, C, d) × (E, d, f) -> (G..., E, C, d)."""
+    f32 = jnp.float32
+    h = silu(
+        jnp.einsum("...ecd,edf->...ecf", buf, params["w_gate"],
+                   preferred_element_type=f32).astype(buf.dtype)
+    ) * jnp.einsum("...ecd,edf->...ecf", buf, params["w_up"],
+                   preferred_element_type=f32).astype(buf.dtype)
+    out = jnp.einsum("...ecf,efd->...ecd", h, params["w_down"],
+                     preferred_element_type=f32).astype(buf.dtype)
+    return out
+
+
+def _aux_losses(probs, counts, k: int):
+    """Switch load-balance loss + z-loss ingredients for one group."""
+    E = probs.shape[-1]
+    importance = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))  # (E,)
+    total = jnp.sum(counts)
+    load = counts.astype(jnp.float32) / jnp.maximum(total, 1)
+    return E * jnp.sum(importance * load)
+
+
+def _seq_shards(seq: int) -> int:
+    from repro.distributed.sharding import current_ctx
+
+    ctx = current_ctx()
+    if ctx is None or ctx.rules.get("seq") != "model":
+        return 1
+    m = dict(ctx.mesh.shape).get("model", 1)
+    return m if (m > 1 and seq % m == 0) else 1
+
+
+def moe_ffn(params, x: jax.Array, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y, aux).
+
+    Routing groups = (batch row × sequence shard): every shard routes its *local*
+    tokens into capacity buffers, then a single resharding constraint moves the
+    buffers from sequence-sharded to expert-sharded — GSPMD lowers it to the
+    canonical MoE all-to-all.  The residual stream is never gathered.
+    Decode-sized workloads use one global group (per-shard capacity would waste
+    E/k× compute on a few hundred tokens).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    f32 = jnp.float32
+
+    x = constrain(x, ("batch", "seq", "embed"))
+    logits = dense(x, params["router"].astype(x.dtype)).astype(f32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    if B * S <= 4096:
+        # single global group (decode-sized workloads)
+        n = B * S
+        cap = _capacity(n, k, E, cfg.capacity_factor)
+        buf, meta = _group_dispatch(x.reshape(n, d), probs.reshape(n, E), k, cap)
+        buf = constrain(buf, ("experts", None, None))
+        out = _expert_ffn(params, buf)
+        out = constrain(out, ("experts", None, None))
+        y = _group_combine(out, meta, n).reshape(B, S, d)
+        balance = _aux_losses(probs.reshape(n, E), meta[4], k)
+    else:
+        P = _seq_shards(S)
+        Sp = S // P
+        cap = _capacity(Sp, k, E, cfg.capacity_factor)
+        x_r = constrain(x.reshape(B, P, Sp, d), ("batch", "seq", None, None))
+        p_r = constrain(probs.reshape(B, P, Sp, E), ("batch", "seq", None, None))
+
+        disp = jax.vmap(jax.vmap(partial(_group_dispatch, k=k, capacity=cap)))
+        buf, meta = disp(x_r, p_r)  # buf: (B, P, E, C, d), locally dispatched
+        buf = constrain(buf, ("batch", "seq", None, None, None))
+        # tokens -> experts all-to-all (sequence-sharded -> expert-sharded)
+        buf = constrain(buf, ("batch", None, "experts", None, None))
+        # named for the remat policy: saving the post-a2a buffer lets the
+        # backward recompute skip the forward dispatch all-to-all (§Perf)
+        from jax.ad_checkpoint import checkpoint_name
+
+        buf = checkpoint_name(buf, "moe_dispatch")
+        out = _expert_ffn(params, buf)
+        out = constrain(out, ("batch", None, "experts", None, None))
+        # experts -> tokens all-to-all back
+        out = constrain(out, ("batch", "seq", None, None, None))
+        comb = jax.vmap(jax.vmap(partial(_group_combine, n_tokens=Sp)))
+        y = comb(out, meta).reshape(B, S, d)
+        balance = jnp.mean(
+            jax.vmap(jax.vmap(partial(_aux_losses, k=k)))(p_r, meta[4])
+        )
+
+    if cfg.num_shared_experts:
+        y = y + swiglu(
+            x, params["shared"]["w_gate"], params["shared"]["w_up"],
+            params["shared"]["w_down"],
+        )
+    y = constrain(y, ("batch", "seq", "embed"))
+    aux = {
+        "moe_balance": balance.astype(f32),
+        "moe_zloss": z_loss.astype(f32),
+    }
+    return y, aux

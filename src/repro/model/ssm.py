@@ -1,0 +1,236 @@
+"""Mamba-2 / SSD sequence mixer (state-space duality, arXiv:2405.21060).
+
+Train/prefill uses the chunked SSD algorithm: within a chunk the dual (attention-like)
+quadratic form, across chunks a linear recurrence carried by ``lax.scan``.  Decode is
+the exact single-step recurrence on the SSM state.  Jamba's Mamba layers are modeled
+with the same SSD machinery at d_state=16 (DESIGN.md notes this deviation).
+
+Parallelism: heads are embarrassingly parallel ('ssm_heads'→model when divisible);
+otherwise the head_dim is sharded ('ssm_hd'), which keeps every einsum parallel with a
+single psum at the output projection.  The sequence dim cannot be sharded inside the
+scan (the recurrence is sequential), so blocks gather the sequence on entry, like
+attention does.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.model.layers import ParamDef, dense, rms_norm, silu
+
+
+def ssm_defs(cfg) -> Dict[str, ParamDef]:
+    d, di, ds, nh, w = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.ssm_heads,
+        cfg.ssm_conv_width,
+    )
+    return {
+        "w_x": ParamDef((d, di), ("fsdp", "tp")),
+        "w_z": ParamDef((d, di), ("fsdp", "tp")),
+        "w_b": ParamDef((d, ds), ("fsdp", None)),
+        "w_c": ParamDef((d, ds), ("fsdp", None)),
+        "w_dt": ParamDef((d, nh), ("fsdp", None)),
+        "conv_x": ParamDef((w, di), (None, "tp"), scale=0.5),
+        "conv_b": ParamDef((w, ds), (None, None), scale=0.5),
+        "conv_c": ParamDef((w, ds), (None, None), scale=0.5),
+        "a_log": ParamDef((nh,), (None,), init="ssm_a", dtype="float32"),
+        "dt_bias": ParamDef((nh,), (None,), init="ssm_dt", dtype="float32"),
+        "d_skip": ParamDef((nh,), (None,), init="ones", dtype="float32"),
+        "norm": ParamDef((di,), (None,), init="ones", dtype="float32"),
+        "w_out": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, C); kernel: (W, C)."""
+    W = kernel.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + S, :] * kernel[i].astype(x.dtype) for i in range(W))
+    return out
+
+
+def _conv_step(x_t: jax.Array, state: jax.Array, kernel: jax.Array):
+    """x_t: (B, 1, C); state: (B, W-1, C) last inputs.  Returns (y_t, new_state)."""
+    window = jnp.concatenate([state, x_t], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, kernel.astype(x_t.dtype))[:, None, :]
+    return y, window[:, 1:, :]
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, nh, hd) — already dt-independent input
+    dt: jax.Array,  # (B, S, nh) — positive step sizes
+    A: jax.Array,  # (nh,) — negative
+    B_: jax.Array,  # (B, S, ds)
+    C_: jax.Array,  # (B, S, ds)
+    chunk: int,
+    state0: Optional[jax.Array] = None,  # (B, nh, hd, ds)
+):
+    """Chunked SSD.  Returns (y (B,S,nh,hd), final_state (B,nh,hd,ds))."""
+    B, S, nh, hd = x.shape
+    ds = B_.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(B, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+    xr = constrain(xr, (None, "batch", None, "ssm_heads", "ssm_hd"))
+    dtr = dt.reshape(B, nc, chunk, nh).transpose(1, 0, 2, 3).astype(f32)
+    dtr = constrain(dtr, (None, "batch", None, "ssm_heads"))
+    Br = B_.reshape(B, nc, chunk, ds).transpose(1, 0, 2, 3)
+    Cr = C_.reshape(B, nc, chunk, ds).transpose(1, 0, 2, 3)
+    Br = constrain(Br, (None, "batch", None, None))
+    Cr = constrain(Cr, (None, "batch", None, None))
+
+    if state0 is None:
+        state0 = jnp.zeros((B, nh, hd, ds), f32)
+
+    @jax.checkpoint  # recompute the (Q,K) decay/score block in the backward pass
+    def body(state, inp):
+        xc, dtc, bc, cc = inp  # (B,Q,nh,hd), (B,Q,nh), (B,Q,ds), (B,Q,ds)
+        xc = constrain(xc, ("batch", None, "ssm_heads", "ssm_hd"))
+        da = dtc * A  # (B,Q,nh), negative
+        a_cs = jnp.cumsum(da, axis=1)  # inclusive cumsum
+        # intra-chunk (dual quadratic form)
+        seg = a_cs[:, :, None, :] - a_cs[:, None, :, :]  # (B,Q,K,nh): sum_{k+1..q}
+        rows = jnp.arange(chunk)
+        causal = rows[:, None] >= rows[None, :]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)  # (B,Q,K,nh)
+        scores = jnp.einsum("bqn,bkn->bqk", cc.astype(f32), bc.astype(f32))
+        w = scores[:, :, :, None] * L * dtc[:, None, :, :]  # (B,Q,K,nh)
+        y_diag = jnp.einsum(
+            "bqkh,bkhp->bqhp", w.astype(xc.dtype), xc,
+            preferred_element_type=f32,
+        )
+        # contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cc.astype(f32), state) * jnp.exp(
+            a_cs
+        )[:, :, :, None]
+        # state update
+        decay_to_end = jnp.exp(a_cs[:, -1:, :] - a_cs)  # (B,Q,nh)
+        state_in = jnp.einsum(
+            "bkh,bkn,bkhp->bhpn",
+            (dtc * decay_to_end),
+            bc.astype(f32),
+            xc.astype(f32),
+        )
+        state = state * jnp.exp(a_cs[:, -1])[:, :, None, None] + state_in
+        state = constrain(state, ("batch", "ssm_heads", "ssm_hd", "ssm_state"))
+        y = (y_diag + y_inter).astype(x.dtype)
+        return state, y
+
+    final_state, ys = jax.lax.scan(body, state0, (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    return y, final_state
+
+
+def ssd_step(
+    x: jax.Array,  # (B, nh, hd)
+    dt: jax.Array,  # (B, nh)
+    A: jax.Array,  # (nh,)
+    B_: jax.Array,  # (B, ds)
+    C_: jax.Array,  # (B, ds)
+    state: jax.Array,  # (B, nh, hd, ds) f32
+):
+    f32 = jnp.float32
+    dt = dt.astype(f32)
+    da = jnp.exp(dt * A)  # (B, nh)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, B_.astype(f32), x.astype(f32))
+    state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(f32), state)
+    return y.astype(x.dtype), state
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    di, ds, nh, w = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, ds), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, w - 1, ds), dtype),
+        "conv_c": jnp.zeros((batch, w - 1, ds), dtype),
+    }
+
+
+def ssm_cache_logical(cfg):
+    return {
+        "state": ("batch", "ssm_heads", "ssm_hd", "ssm_state"),
+        "conv_x": ("batch", None, "tp"),
+        "conv_b": ("batch", None, None),
+        "conv_c": ("batch", None, None),
+    }
+
+
+def ssm_mixer(
+    params,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    return_cache: bool = False,
+):
+    """Full Mamba-2 mixer: proj -> conv -> SSD -> gated norm -> out proj.
+
+    Train/prefill when cache is None (optionally returning the cache for serving);
+    decode (S==1) when cache is given.  Returns (y, new_cache_or_None).
+    """
+    B, S, d = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    f32 = jnp.float32
+
+    xp = constrain(dense(x, params["w_x"]), ("batch", "seq_full", "tp"))  # (B,S,di)
+    z = constrain(dense(x, params["w_z"]), ("batch", "seq_full", "tp"))
+    bp = constrain(dense(x, params["w_b"]), ("batch", "seq_full", None))  # (B,S,ds)
+    cp = constrain(dense(x, params["w_c"]), ("batch", "seq_full", None))
+    dt_raw = dense(x, params["w_dt"]).astype(f32)  # (B,S,nh)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(f32))
+    dt = constrain(dt, ("batch", "seq_full", "ssm_heads"))
+    A = -jnp.exp(params["a_log"].astype(f32))  # (nh,)
+
+    if cache is None:
+        xc = constrain(
+            silu(_causal_conv(xp, params["conv_x"])), ("batch", "seq_full", "tp")
+        )
+        bc = silu(_causal_conv(bp, params["conv_b"]))
+        cc = silu(_causal_conv(cp, params["conv_c"]))
+        xh = constrain(
+            xc.reshape(B, S, nh, hd), ("batch", "seq_full", "ssm_heads", "ssm_hd")
+        )
+        y, final_state = ssd_chunked(xh, dt, A, bc, cc, cfg.ssm_chunk)
+        y = y + params["d_skip"].astype(f32)[:, None] * xh.astype(f32)
+        new_cache = None
+        if return_cache:
+            W = cfg.ssm_conv_width
+            new_cache = {
+                "state": final_state,
+                "conv_x": xp[:, S - (W - 1) :, :],
+                "conv_b": bp[:, S - (W - 1) :, :],
+                "conv_c": cp[:, S - (W - 1) :, :],
+            }
+    else:
+        xc_t, conv_x = _conv_step(xp, cache["conv_x"], params["conv_x"])
+        bc_t, conv_b = _conv_step(bp, cache["conv_b"], params["conv_b"])
+        cc_t, conv_c = _conv_step(cp, cache["conv_c"], params["conv_c"])
+        xh = silu(xc_t)[:, 0].reshape(B, nh, hd)
+        yt, state = ssd_step(
+            xh, dt[:, 0], A, silu(bc_t)[:, 0], silu(cc_t)[:, 0], cache["state"]
+        )
+        y = yt[:, None] + params["d_skip"].astype(f32)[:, None] * xh.astype(f32)[:, None]
+        y = y.reshape(B, S, nh, hd)
+        new_cache = {
+            "state": state, "conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c
+        }
+
+    y = y.reshape(B, S, nh * hd).astype(x.dtype)
+    y = constrain(y, ("batch", "seq_full", "tp"))
+    y = rms_norm(y * silu(z), params["norm"], cfg.rmsnorm_eps)
+    out = dense(y, params["w_out"])
+    out = constrain(out, ("batch", "seq", "embed"))
+    return out, new_cache

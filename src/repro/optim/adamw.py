@@ -1,0 +1,101 @@
+"""AdamW with cosine schedule, global-norm clipping and fully sharded states.
+
+Optimizer moments are f32 and inherit the parameter sharding (params are stored
+FSDP×TP-sharded, so moments are automatically ZeRO-3-style fully sharded).  By
+default no separate f32 master copy is kept (update math is f32, storage bf16);
+``keep_master=True`` adds one for small models.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    keep_master: bool = False
+
+
+def lr_at(opt: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(opt.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - opt.warmup_steps) / max(opt.total_steps - opt.warmup_steps, 1), 0, 1
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return opt.lr * warm * (opt.min_lr_frac + (1 - opt.min_lr_frac) * cos)
+
+
+def init_opt_state(params: PyTree, opt: OptConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if opt.keep_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: PyTree, grads: PyTree, state: Dict[str, Any], opt: OptConfig
+) -> Tuple[PyTree, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / (gn + 1e-9))
+    lr = lr_at(opt, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - opt.b1**t
+    bc2 = 1 - opt.b2**t
+
+    src = state.get("master", params)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = opt.b1 * m + (1 - opt.b1) * g
+        v = opt.b2 * v + (1 - opt.b2) * jnp.square(g)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + opt.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (u + opt.weight_decay * pf)
+        return pf, m, v
+
+    flat_p, treedef = jax.tree.flatten(src)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_f32 = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    if opt.keep_master:
+        new_state["master"] = new_f32
+    new_params = jax.tree.map(
+        lambda nf, p: nf.astype(p.dtype), new_f32, params
+    )
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,145 @@
+"""Device partition compilation (the paper's hardware code generation, §III-B).
+
+A device partition is a subgraph of actors compiled into ONE jitted XLA program —
+the TPU analogue of synthesizing the partition's actors to RTL inside a dynamic
+region.  Actors execute "in parallel in fabric": XLA fuses and schedules them; on
+a real mesh the program is additionally SPMD-sharded.
+
+Execution model: the partition step processes a *block* of tokens per invocation
+(vectorized firing — the analogue of the HLS controller taking the maximum number
+of steps per invocation).  Dynamic-rate actors (e.g. Filter) emit a validity mask;
+tokens flow between in-partition actors as (values, mask) pairs so the whole
+dynamic dataflow stays inside one fused program.  The step also returns per-output
+token counts and an ``idle`` flag — hardware idleness detection (§III-B): the host
+(PLink) never polls internal state, it just reads the flag.
+
+Requirements for device placement (checked by the partitioner): every actor is
+``device_ok`` and provides ``vector_fire`` (batched jnp semantics) or is a
+one-action SDF actor whose ``fire`` is jnp-traceable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.actor import Actor
+from repro.core.graph import ActorGraph
+
+
+@dataclass
+class DeviceProgram:
+    """Compiled device partition."""
+
+    name: str
+    actors: List[str]
+    in_ports: List[Tuple[str, str, str]]  # (actor, port, dtype)
+    out_ports: List[Tuple[str, str, str]]
+    step: Callable  # jitted: (state, {in:(vals,mask)}) -> (state, {out:(vals,mask)}, idle)
+    init_state: Dict[str, Any]
+    block: int
+
+
+def _default_vector_fire(actor: Actor):
+    """Vectorize a 1-action SDF actor's scalar fire over a token block via scan."""
+    action = actor.actions[0]
+    in_ports = [p.name for p in actor.inputs]
+    out_ports = [p.name for p in actor.outputs]
+
+    def vf(state, ins):  # ins: {port: (vals (N,), mask (N,))}
+        n = next(iter(ins.values()))[0].shape[0] if ins else None
+        assert n is not None, "sourceless actors need an explicit vector_fire"
+
+        def body(st, tok):
+            vals = {p: [tok[p][0]] for p in in_ports}
+            st, outs = action.fire(st, vals)
+            ovals = {p: outs[p][0] for p in out_ports}
+            return st, ovals
+
+        toks = {p: (ins[p][0], ins[p][1]) for p in in_ports}
+        state, outs = jax.lax.scan(
+            body, state, {p: toks[p] for p in in_ports}
+        )
+        mask = ins[in_ports[0]][1]
+        return state, {p: (outs[p], mask) for p in out_ports}
+
+    return vf
+
+
+def compile_partition(
+    graph: ActorGraph,
+    actor_names: Sequence[str],
+    *,
+    block: int = 1024,
+    name: str = "accel",
+    mesh=None,
+    donate: bool = True,
+) -> DeviceProgram:
+    names = list(actor_names)
+    sub = set(names)
+    for a in names:
+        actor = graph.actors[a]
+        assert actor.device_ok, f"{a}: {actor.host_only_reason or 'host-only actor'}"
+
+    # boundary ports
+    in_ports, out_ports = [], []
+    internal: List = []
+    for ch in graph.channels:
+        if ch.dst in sub and ch.src not in sub:
+            in_ports.append((ch.dst, ch.dst_port, graph.actors[ch.dst].port(ch.dst_port).dtype))
+        elif ch.src in sub and ch.dst not in sub:
+            out_ports.append((ch.src, ch.src_port, graph.actors[ch.src].port(ch.src_port).dtype))
+        elif ch.src in sub and ch.dst in sub:
+            internal.append(ch)
+
+    # topological order of the partition's actors (feedback not supported on device)
+    order = [a for a in graph.topo_order() if a in sub]
+
+    vfs = {
+        a: (graph.actors[a].vector_fire or _default_vector_fire(graph.actors[a]))
+        for a in names
+    }
+    init_state = {a: dict(graph.actors[a].initial_state) for a in names}
+
+    def step(state, inputs):
+        """inputs: {(actor,port): (vals (block,), mask (block,))}"""
+        wires: Dict[Tuple[str, str], Tuple[jax.Array, jax.Array]] = {}
+        for (a, p, _dt) in in_ports:
+            wires[(a, p)] = inputs[f"{a}.{p}"]
+        new_state = dict(state)
+        outs: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+        produced = jnp.zeros((), jnp.int32)
+        for a in order:
+            actor = graph.actors[a]
+            ins = {p.name: wires[(a, p.name)] for p in actor.inputs}
+            st, a_outs = vfs[a](new_state[a], ins)
+            new_state[a] = st
+            for ch in internal:
+                if ch.src == a:
+                    wires[(ch.dst, ch.dst_port)] = a_outs[ch.src_port]
+            for (sa, sp, _dt) in out_ports:
+                if sa == a:
+                    outs[f"{sa}.{sp}"] = a_outs[sp]
+        for v, m in outs.values():
+            produced = produced + jnp.sum(m.astype(jnp.int32))
+        consumed = sum(
+            jnp.sum(m.astype(jnp.int32)) for _, m in inputs.values()
+        ) if inputs else jnp.zeros((), jnp.int32)
+        idle = (produced + consumed) == 0
+        return new_state, outs, idle
+
+    jit_kwargs = {}
+    jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
+    return DeviceProgram(
+        name=name,
+        actors=names,
+        in_ports=in_ports,
+        out_ports=out_ports,
+        step=jitted,
+        init_state=init_state,
+        block=block,
+    )

@@ -1,0 +1,133 @@
+"""Lock-less ring-buffer FIFO with global/local counters (paper §III-C).
+
+Every channel has two monotonically increasing counters: total tokens written
+(``w_pub``) and total tokens read (``r_pub``).  Each endpoint is owned by exactly
+one thread; the owner mutates only its *local* counter during a scheduling round
+and *publishes* it in post-fire.  The opposite endpoint sees counter updates only
+via the published value snapshotted in pre-fire — so the ring buffer needs no
+locks: a reader can only observe fully written tokens, a writer can only observe
+fully freed slots.  (Under CPython the design is what is being reproduced; int
+stores are atomic under the GIL.)
+
+Channels whose two endpoints live on the same thread publish immediately
+(``deferred=False``) — the cross-thread protocol is unnecessary there and
+immediate visibility lets a chain of same-thread actors pipeline within a round.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+
+class RingFifo:
+    def __init__(self, capacity: int, name: str = "", deferred: bool = True):
+        assert capacity > 0
+        self.capacity = capacity
+        self.name = name
+        self.deferred = deferred
+        self._buf: List[Any] = [None] * capacity
+        # published (visible cross-thread)
+        self.w_pub = 0
+        self.r_pub = 0
+        # owner-local
+        self._w_loc = 0
+        self._r_loc = 0
+        # pre-fire snapshots of the *other* side
+        self._w_snap = 0  # reader's view of writes
+        self._r_snap = 0  # writer's view of reads
+        self.total_written = 0  # monotone, for profiling / quiescence
+
+    # ---- pre-fire -----------------------------------------------------------
+    def snapshot_reader(self) -> None:
+        self._w_snap = self.w_pub
+
+    def snapshot_writer(self) -> None:
+        self._r_snap = self.r_pub
+
+    # ---- post-fire ------------------------------------------------------------
+    def publish_reader(self) -> None:
+        self.r_pub = self._r_loc
+
+    def publish_writer(self) -> None:
+        self.w_pub = self._w_loc
+
+    def _sync_now(self) -> None:
+        if not self.deferred:
+            self.w_pub = self._w_loc
+            self.r_pub = self._r_loc
+            self._w_snap = self.w_pub
+            self._r_snap = self.r_pub
+
+    # ---- reader API -------------------------------------------------------------
+    def count(self) -> int:
+        if not self.deferred:
+            self._w_snap = self.w_pub
+        return self._w_snap - self._r_loc
+
+    def peek(self, n: int) -> Tuple[Any, ...]:
+        assert self.count() >= n, f"{self.name}: peek({n}) with {self.count()}"
+        base = self._r_loc
+        return tuple(self._buf[(base + i) % self.capacity] for i in range(n))
+
+    def read(self, n: int) -> Tuple[Any, ...]:
+        vals = self.peek(n)
+        self._r_loc += n
+        self._sync_now()
+        return vals
+
+    # ---- writer API ----------------------------------------------------------------
+    def space(self) -> int:
+        if not self.deferred:
+            self._r_snap = self.r_pub
+        return self.capacity - (self._w_loc - self._r_snap)
+
+    def write(self, vals: Sequence[Any]) -> None:
+        assert self.space() >= len(vals), f"{self.name}: overflow"
+        base = self._w_loc
+        for i, v in enumerate(vals):
+            self._buf[(base + i) % self.capacity] = v
+        self._w_loc += len(vals)
+        self.total_written += len(vals)
+        self._sync_now()
+
+    # ---- introspection ---------------------------------------------------------------
+    @property
+    def unpublished(self) -> bool:
+        return self._w_loc != self.w_pub or self._r_loc != self.r_pub
+
+    def occupancy(self) -> int:
+        """True occupancy (both local counters) — debugging/termination only."""
+        return self._w_loc - self._r_loc
+
+    def __repr__(self):
+        return (
+            f"RingFifo({self.name!r}, cap={self.capacity}, "
+            f"w={self._w_loc}, r={self._r_loc})"
+        )
+
+
+class ReaderEndpoint:
+    """Reader-side view bound into a PortEnv."""
+
+    def __init__(self, fifo: RingFifo):
+        self.fifo = fifo
+
+    def count(self) -> int:
+        return self.fifo.count()
+
+    def peek(self, n: int):
+        return self.fifo.peek(n)
+
+    def read(self, n: int):
+        return self.fifo.read(n)
+
+
+class WriterEndpoint:
+    def __init__(self, fifo: RingFifo):
+        self.fifo = fifo
+
+    def space(self) -> int:
+        return self.fifo.space()
+
+    def write(self, vals):
+        return self.fifo.write(vals)

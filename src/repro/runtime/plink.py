@@ -1,0 +1,131 @@
+"""PLink — the partition-link actor (paper §III-D).
+
+Bridges the host software partition and a compiled device partition: it
+(1) drains host FIFOs into device-resident blocks (the input-stage burst),
+(2) launches the device step asynchronously (JAX async dispatch ≈ OpenCL
+out-of-order queue; the returned arrays are futures/events),
+(3) writes results back into host FIFOs when ready, and
+(4) reads the device idleness flag instead of polling internal state.
+
+PLink is itself an actor on a host thread and never blocks it: if the in-flight
+step has not completed (``is_ready`` false), PLink simply yields so other actors
+on its thread keep working — the paper's non-blocking OpenCL event design.
+Double buffering: one step can be in flight while the next block is staged.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.device_runtime import DeviceProgram
+
+_NP_DTYPE = {"float32": np.float32, "int32": np.int32, "float64": np.float64,
+             "bfloat16": np.float32, "object": np.float32}
+
+
+@dataclass
+class PLinkStats:
+    launches: int = 0
+    tokens_in: int = 0
+    tokens_out: int = 0
+    idle_signals: int = 0
+    h2d_ns: int = 0
+    d2h_ns: int = 0
+    tests: int = 0  # scheduler profiling contract
+
+
+class PLink:
+    """Host-side controller for one device partition.
+
+    Duck-types the actor-machine `invoke` contract so the scheduler treats it as
+    a normal actor on its thread (the paper schedules PLink on p1).
+    """
+
+    def __init__(self, program: DeviceProgram, env, name: str = "plink"):
+        self.program = program
+        self.env = env  # PortEnv: host FIFO endpoints for the boundary ports
+        self.name = name
+        self.state = program.init_state
+        self.stats = PLinkStats()
+        self.inflight: Optional[Tuple[Any, Dict, Any]] = None  # (state', outs, idle)
+        self.pending_valid: Dict[str, int] = {}
+        self.terminated = False
+        self.device_idle = False
+        # minimal Actor-duck for the scheduler
+        self.actor = type("A", (), {"name": name})()
+        self.stats_tests = 0
+
+    # -- helpers ---------------------------------------------------------------
+    def _stage_inputs(self):
+        """Drain host FIFOs into one device block; None if no input available."""
+        block = self.program.block
+        staged = {}
+        total = 0
+        for (a, p, dt) in self.program.in_ports:
+            ep = self.env.inputs[f"{a}.{p}"]
+            n = min(ep.count(), block)
+            vals = ep.read(n) if n else ()
+            arr = np.zeros((block,), _NP_DTYPE.get(dt, np.float32))
+            mask = np.zeros((block,), bool)
+            if n:
+                arr[:n] = np.asarray(vals, dtype=arr.dtype)
+                mask[:n] = True
+            staged[f"{a}.{p}"] = (jnp.asarray(arr), jnp.asarray(mask))
+            total += n
+        return staged, total
+
+    def _retire(self, result) -> int:
+        state, outs, idle = result
+        self.state = state
+        t0 = time.perf_counter_ns()
+        moved = 0
+        for key, (vals, mask) in outs.items():
+            vals = np.asarray(vals)
+            mask = np.asarray(mask)
+            keep = vals[mask]
+            if keep.size:
+                self.env.outputs[key].write(list(keep))
+                moved += int(keep.size)
+        self.device_idle = bool(idle)
+        if self.device_idle:
+            self.stats.idle_signals += 1
+        self.stats.d2h_ns += time.perf_counter_ns() - t0
+        self.stats.tokens_out += moved
+        return moved
+
+    # -- scheduler contract ------------------------------------------------------
+    def invoke(self, max_execs: int = 1) -> int:
+        progress = 0
+        # 1) retire a completed in-flight step without blocking
+        if self.inflight is not None:
+            arrays = jax.tree.leaves(self.inflight)
+            ready = all(
+                getattr(a, "is_ready", lambda: True)() for a in arrays
+                if hasattr(a, "is_ready")
+            )
+            if not ready:
+                return 0  # never block the thread (paper §III-D)
+            progress += self._retire(self.inflight)
+            self.inflight = None
+        # 2) stage + launch the next step if there is any input (double buffer)
+        staged, n_in = self._stage_inputs()
+        has_inputs = bool(self.program.in_ports)
+        if n_in == 0 and has_inputs:
+            return progress
+        t0 = time.perf_counter_ns()
+        self.inflight = self.program.step(self.state, staged)
+        self.stats.h2d_ns += time.perf_counter_ns() - t0
+        self.stats.launches += 1
+        self.stats.tokens_in += n_in
+        progress += n_in
+        return progress
+
+    @property
+    def stats_obj(self):
+        return self.stats

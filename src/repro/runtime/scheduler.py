@@ -1,0 +1,369 @@
+"""Multi-threaded software runtime (paper §III-C).
+
+Each thread owns a *partition* of actor instances and runs the three-step loop:
+
+  Pre-fire  — snapshot the published counters of every FIFO endpoint it owns,
+  Fire      — invoke each actor machine round-robin (up to an exec threshold),
+  Post-fire — publish its local counters; decide iterate / sleep / terminate.
+
+Termination is the paper's quiescence rule: all threads asleep and a full round in
+which no thread produced or consumed a token.  Threads sleep on a condition
+variable and are woken when another thread publishes production.
+
+Profiling (§III-E): per-actor firing counts and wall time (perf_counter_ns — the
+rdtscp analogue), plus per-channel token totals; these feed the MILP partitioner.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.actor_machine import ActorMachine, BasicController, PortEnv
+from repro.core.graph import ActorGraph
+from repro.runtime.fifo import ReaderEndpoint, RingFifo, WriterEndpoint
+
+DEFAULT_DEPTH = 4096
+
+
+@dataclass
+class ActorProfile:
+    fires: int = 0
+    invocations: int = 0
+    time_ns: int = 0
+    tests: int = 0
+
+    @property
+    def ns_per_fire(self) -> float:
+        return self.time_ns / max(self.fires, 1)
+
+
+class ThreadPartition:
+    def __init__(self, name: str, runtime: "HostRuntime"):
+        self.name = name
+        self.rt = runtime
+        self.instances: List = []  # ActorMachine | BasicController
+        self.reader_fifos: List[RingFifo] = []
+        self.writer_fifos: List[RingFifo] = []
+        self.rounds = 0
+
+    def pre_fire(self) -> None:
+        for f in self.reader_fifos:
+            f.snapshot_reader()
+        for f in self.writer_fifos:
+            f.snapshot_writer()
+
+    def fire(self) -> int:
+        execs = 0
+        for inst in self.instances:
+            t0 = time.perf_counter_ns()
+            e = inst.invoke(self.rt.max_execs_per_invoke)
+            dt = time.perf_counter_ns() - t0
+            prof = self.rt.profiles[inst.actor.name]
+            prof.fires += e
+            prof.invocations += 1
+            prof.time_ns += dt
+            prof.tests = inst.stats.tests
+            execs += e
+        return execs
+
+    def post_fire(self) -> None:
+        for f in self.writer_fifos:
+            f.publish_writer()
+        for f in self.reader_fifos:
+            f.publish_reader()
+        self.rounds += 1
+
+    def run_round(self) -> int:
+        self.pre_fire()
+        e = self.fire()
+        self.post_fire()
+        return e
+
+
+class HostRuntime:
+    """Builds FIFOs + actor machines from a graph and an actor→thread mapping."""
+
+    def __init__(
+        self,
+        graph: ActorGraph,
+        mapping: Optional[Dict[str, str]] = None,  # actor -> partition name
+        *,
+        controller: str = "am",  # "am" | "basic"
+        default_depth: int = DEFAULT_DEPTH,
+        max_execs_per_invoke: int = 10_000,
+        pin_threads: bool = False,
+    ):
+        graph.validate()
+        self.graph = graph
+        self.max_execs_per_invoke = max_execs_per_invoke
+        self.controller_kind = controller
+        self.pin_threads = pin_threads
+        mapping = mapping or {a: "t0" for a in graph.actors}
+        self.mapping = dict(mapping)
+
+        self.partitions: Dict[str, ThreadPartition] = {}
+        for a, part in mapping.items():
+            self.partitions.setdefault(part, ThreadPartition(part, self))
+
+        # FIFOs: deferred protocol only when the endpoints are on different threads
+        self.fifos: Dict[str, RingFifo] = {}
+        readers: Dict[str, Dict[str, ReaderEndpoint]] = {a: {} for a in graph.actors}
+        writers: Dict[str, Dict[str, WriterEndpoint]] = {a: {} for a in graph.actors}
+        for ch in graph.channels:
+            cross = mapping[ch.src] != mapping[ch.dst]
+            f = RingFifo(
+                ch.depth or default_depth, name=str(ch), deferred=cross
+            )
+            self.fifos[str(ch)] = f
+            writers[ch.src][ch.src_port] = WriterEndpoint(f)
+            readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+            self.partitions[mapping[ch.src]].writer_fifos.append(f)
+            self.partitions[mapping[ch.dst]].reader_fifos.append(f)
+
+        self.profiles: Dict[str, ActorProfile] = {}
+        self.instances: Dict[str, object] = {}
+        for name, actor in graph.actors.items():
+            env = PortEnv(readers[name], writers[name])
+            inst = (
+                ActorMachine(actor, env)
+                if controller == "am"
+                else BasicController(actor, env)
+            )
+            self.instances[name] = inst
+            self.partitions[mapping[name]].instances.append(inst)
+            self.profiles[name] = ActorProfile()
+
+        # quiescence machinery
+        self._cv = threading.Condition()
+        self._progress = 0  # total execs, all threads
+        self._terminate = False
+
+    # ------------------------------------------------------------------ single --
+    def run_single(self, max_rounds: int = 1_000_000) -> int:
+        """Deterministic single-threaded execution (ignores the thread mapping)."""
+        parts = list(self.partitions.values())
+        total = 0
+        for _ in range(max_rounds):
+            execs = sum(p.run_round() for p in parts)
+            total += execs
+            if execs == 0:
+                moved = any(f.unpublished for f in self.fifos.values())
+                if not moved:
+                    break
+        return total
+
+    # ------------------------------------------------------------------ threads --
+    def _thread_main(self, part: ThreadPartition, core: Optional[int]) -> None:
+        if core is not None and hasattr(os, "sched_setaffinity"):
+            try:
+                os.sched_setaffinity(0, {core})
+            except OSError:
+                pass
+        while True:
+            with self._cv:
+                if self._terminate:
+                    return
+            try:
+                execs = part.run_round()
+            except BaseException as e:  # noqa: BLE001 — surface to run_threads
+                with self._cv:
+                    self._thread_error = e
+                    self._terminate = True
+                    self._cv.notify_all()
+                return
+            if execs:
+                with self._cv:
+                    self._progress += execs
+                    self._cv.notify_all()
+                continue
+            # Quiescence (Dijkstra-style): stamp this thread quiet at the current
+            # progress count.  Terminate only when every thread has completed a
+            # no-progress round at the *same* progress count — any token movement
+            # bumps progress and invalidates all stamps.
+            with self._cv:
+                if self._terminate:
+                    return
+                self._quiet[part.name] = self._progress
+                if all(q == self._progress for q in self._quiet.values()):
+                    self._terminate = True
+                    self._cv.notify_all()
+                    return
+                self._cv.wait(timeout=0.005)
+
+    def run_threads(self, n_cores: Optional[int] = None) -> float:
+        """Run until quiescent; returns wall-clock seconds."""
+        self._quiet = {name: -1 for name in self.partitions}
+        self._terminate = False
+        self._thread_error = None
+        avail = list(range(os.cpu_count() or 1))
+        threads = []
+        t0 = time.perf_counter()
+        for i, part in enumerate(self.partitions.values()):
+            core = avail[i % len(avail)] if self.pin_threads else None
+            th = threading.Thread(
+                target=self._thread_main, args=(part, core), daemon=True
+            )
+            threads.append(th)
+            th.start()
+        for th in threads:
+            th.join()
+        if self._thread_error is not None:
+            raise self._thread_error
+        return time.perf_counter() - t0
+
+    def run(self, threaded: Optional[bool] = None) -> float:
+        t0 = time.perf_counter()
+        threaded = len(self.partitions) > 1 if threaded is None else threaded
+        if threaded:
+            return self.run_threads()
+        self.run_single()
+        return time.perf_counter() - t0
+
+    # -------------------------------------------------------------------- stats --
+    def channel_tokens(self) -> Dict[str, int]:
+        return {k: f.total_written for k, f in self.fifos.items()}
+
+    def total_fires(self) -> int:
+        return sum(p.fires for p in self.profiles.values())
+
+
+def runtime_from_xcf(graph: ActorGraph, xcf, **kw):
+    """Build the right runtime (host-only or heterogeneous) from an XCF
+    configuration — the paper's flow: partitioning is a config artifact."""
+    xcf.validate(graph)
+    assignment = xcf.assignment()
+    hw = {
+        pid for pid, p in xcf.partitions.items() if p.code_generator == "hw"
+    }
+    assert len(hw) <= 1, "one device partition per XCF (paper §III-D)"
+    depths = xcf.fifo_depths()
+    for ch in graph.channels:
+        if ch.key in depths:
+            object.__setattr__(ch, "depth", depths[ch.key])
+    if hw:
+        accel = next(iter(hw))
+        return HeteroRuntime(graph, assignment, accel=accel, **kw)
+    return HostRuntime(graph, assignment, **kw)
+
+
+class HeteroRuntime(HostRuntime):
+    """Host threads + one compiled device partition bridged by a PLink actor
+    (paper Fig. 6: input/output stages + PLink + dynamic region).
+
+    ``device_actors`` are compiled into a single jitted DeviceProgram; channels
+    crossing the boundary become host FIFOs read/written by the PLink, which is
+    scheduled like a normal actor on ``plink_thread`` (the paper puts it on p1).
+    """
+
+    def __init__(
+        self,
+        graph: ActorGraph,
+        mapping: Dict[str, str],  # host actors -> thread; device actors -> "accel"
+        *,
+        accel: str = "accel",
+        plink_thread: Optional[str] = None,
+        block: int = 1024,
+        controller: str = "am",
+        default_depth: int = DEFAULT_DEPTH,
+        max_execs_per_invoke: int = 10_000,
+    ):
+        from repro.core.actor import Actor as _Actor
+        from repro.core.graph import ActorGraph as _AG
+        from repro.runtime.device_runtime import compile_partition
+        from repro.runtime.plink import PLink
+
+        device_actors = sorted(a for a, p in mapping.items() if p == accel)
+        host_map = {a: p for a, p in mapping.items() if p != accel}
+        assert device_actors, "HeteroRuntime needs at least one device actor"
+        threads = sorted(set(host_map.values()))
+        plink_thread = plink_thread or (threads[0] if threads else "t0")
+
+        # host-side graph: device actors removed; crossing channels become the
+        # PLink's boundary FIFOs
+        hg = _AG(graph.name + "_host")
+        for a, act in graph.actors.items():
+            if a not in device_actors:
+                hg.add(act)
+        crossing_in: List = []   # host -> device
+        crossing_out: List = []  # device -> host
+        for ch in graph.channels:
+            s_dev, d_dev = ch.src in device_actors, ch.dst in device_actors
+            if not s_dev and not d_dev:
+                hg.channels.append(ch)
+            elif s_dev and d_dev:
+                pass  # internal to the device program
+            elif d_dev:
+                crossing_in.append(ch)
+            else:
+                crossing_out.append(ch)
+
+        # Build the host runtime over the reduced graph (skip validation of
+        # now-dangling ports by connecting through the plink FIFOs below).
+        self.graph = graph
+        self.max_execs_per_invoke = max_execs_per_invoke
+        self.controller_kind = controller
+        self.pin_threads = False
+        self.mapping = dict(host_map)
+        self.partitions = {}
+        for a, part in host_map.items():
+            self.partitions.setdefault(part, ThreadPartition(part, self))
+        self.partitions.setdefault(plink_thread, ThreadPartition(plink_thread, self))
+
+        self.fifos = {}
+        readers = {a: {} for a in hg.actors}
+        writers = {a: {} for a in hg.actors}
+        plink_in = {}
+        plink_out = {}
+        for ch in hg.channels:
+            cross = host_map[ch.src] != host_map[ch.dst]
+            f = RingFifo(ch.depth or default_depth, name=str(ch), deferred=cross)
+            self.fifos[str(ch)] = f
+            writers[ch.src][ch.src_port] = WriterEndpoint(f)
+            readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+            self.partitions[host_map[ch.src]].writer_fifos.append(f)
+            self.partitions[host_map[ch.dst]].reader_fifos.append(f)
+        for ch in crossing_in:  # host writer -> plink reader
+            cross = host_map[ch.src] != plink_thread
+            f = RingFifo(ch.depth or default_depth, name=str(ch), deferred=cross)
+            self.fifos[str(ch)] = f
+            writers[ch.src][ch.src_port] = WriterEndpoint(f)
+            plink_in[f"{ch.dst}.{ch.dst_port}"] = ReaderEndpoint(f)
+            self.partitions[host_map[ch.src]].writer_fifos.append(f)
+            self.partitions[plink_thread].reader_fifos.append(f)
+        for ch in crossing_out:  # plink writer -> host reader
+            cross = host_map[ch.dst] != plink_thread
+            f = RingFifo(ch.depth or default_depth, name=str(ch), deferred=cross)
+            self.fifos[str(ch)] = f
+            plink_out[f"{ch.src}.{ch.src_port}"] = WriterEndpoint(f)
+            readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+            self.partitions[plink_thread].writer_fifos.append(f)
+            self.partitions[host_map[ch.dst]].reader_fifos.append(f)
+
+        self.profiles = {}
+        self.instances = {}
+        for name, actor in hg.actors.items():
+            env = PortEnv(readers[name], writers[name])
+            inst = (
+                ActorMachine(actor, env)
+                if controller == "am"
+                else BasicController(actor, env)
+            )
+            self.instances[name] = inst
+            self.partitions[host_map[name]].instances.append(inst)
+            self.profiles[name] = ActorProfile()
+
+        self.program = compile_partition(
+            graph, device_actors, block=block, name=accel
+        )
+        self.plink = PLink(self.program, PortEnv(plink_in, plink_out))
+        self.instances["plink"] = self.plink
+        self.partitions[plink_thread].instances.append(self.plink)
+        self.profiles["plink"] = ActorProfile()
+
+        self._cv = threading.Condition()
+        self._progress = 0
+        self._terminate = False

@@ -1,0 +1,142 @@
+"""Continuous-batching serving engine.
+
+The decode worker is the dataflow picture of Fig. 6 applied to LLM serving: a
+request queue (ring FIFO) feeds B *slots*; every step decodes all live slots in
+one jitted call with **per-slot positions** (each sequence at its own offset —
+``lm.decode_step`` with a (B,) position vector).  When a slot finishes (EOS or
+length budget), it is retired and immediately refilled from the queue: compute
+never drains to a single straggler sequence, which is the whole point of
+continuous batching (Orca/vLLM-style, here on the actor-runtime substrate).
+
+Prefill runs per-request at admission and its cache is spliced into the slot.
+The engine is synchronous (``run()`` drives it to quiescence — the runtime's
+idleness rule); a production deployment would put ``run`` on a PLink thread.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.model import lm
+from repro.runtime.fifo import RingFifo
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S_p,) int32
+    max_new: int
+    eos_id: int = 2
+    # filled on completion:
+    output: Optional[List[int]] = None
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 256,
+        queue_depth: int = 64,
+    ):
+        assert cfg.frontend == "none", "token-in archs"
+        self.cfg = cfg
+        self.params = params
+        self.B = slots
+        self.max_len = max_len
+        self.queue = RingFifo(queue_depth, name="requests", deferred=False)
+        self.cache = lm.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)  # next write position per slot
+        self.budget = np.zeros((slots,), np.int32)
+        self.live: List[Optional[Request]] = [None] * slots
+        self.tok = np.zeros((slots,), np.int32)
+        self.done: List[Request] = []
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, cfg, tokens=t)
+        )
+
+    # ---- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.write([req])
+
+    def _splice_slot(self, slot: int, small_cache, s_p: int) -> None:
+        """Insert a (1, S_p, ...) prefill cache into slot ``slot``."""
+
+        def one(big, small):
+            if big.ndim >= 3 and small.shape[2] != big.shape[2]:
+                # sequence-indexed leaf (layers, 1, S_p, ...): pad to max_len
+                pad = [(0, 0)] * small.ndim
+                pad[2] = (0, big.shape[2] - small.shape[2])
+                small = jnp.pad(small.astype(big.dtype), pad)
+            return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+
+        self.cache = jax.tree.map(one, self.cache, small_cache)
+
+    def _admit(self) -> None:
+        for b in range(self.B):
+            if self.live[b] is not None or self.queue.count() == 0:
+                continue
+            (req,) = self.queue.read(1)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, small = self._prefill(self.params, prompt)
+            self._splice_slot(b, small, prompt.shape[1])
+            first = int(jnp.argmax(logits[0]))
+            self.live[b] = req
+            req.output = [first]
+            self.pos[b] = prompt.shape[1]
+            self.budget[b] = req.max_new - 1
+            self.tok[b] = first
+            if first == req.eos_id or self.budget[b] <= 0:
+                self._retire(b)
+
+    def _retire(self, b: int) -> None:
+        req = self.live[b]
+        self.live[b] = None
+        self.done.append(req)
+
+    # ---- the decode tick ------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit, decode all live slots, retire finished."""
+        self._admit()
+        active = [b for b in range(self.B) if self.live[b] is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.tok), jnp.asarray(self.pos),
+        )
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.steps += 1
+        for b in active:
+            self.pos[b] += 1
+            self.budget[b] -= 1
+            tok = int(nxt[b])
+            self.live[b].output.append(tok)
+            self.tok[b] = tok
+            if (
+                tok == self.live[b].eos_id
+                or self.budget[b] <= 0
+                or self.pos[b] >= self.max_len - 1
+            ):
+                self._retire(b)
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        """Drive to quiescence: no live slots and an empty queue."""
+        for _ in range(max_ticks):
+            moved = self.step()
+            if moved == 0 and self.queue.count() == 0:
+                break
+        return self.done

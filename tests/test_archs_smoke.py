@@ -1,0 +1,65 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward/train
+step + a decode step on CPU — output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPE_CELLS, get_config, list_archs
+from repro.model import lm
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers % cfg.period == 0
+    B, S = 2, 32
+    key = jax.random.PRNGKey(0)
+    params = lm.init_model(cfg, key)
+
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "none":
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+
+    loss, metrics = jax.jit(lambda p, b: lm.lm_loss(p, cfg, b))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert 0 < float(loss) < 20
+
+    # gradient exists and is finite on every leaf
+    grads = jax.grad(lambda p: lm.lm_loss(p, cfg, batch)[0])(params)
+    assert all(
+        bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+        for g in jax.tree.leaves(grads)
+    ), arch
+
+    # decode step
+    cache = lm.init_cache(cfg, B, S)
+    logits, cache2 = jax.jit(
+        lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i)
+    )(params, cache, jnp.zeros((B,), jnp.int32), jnp.int32(0))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_counts_match_instantiated(arch):
+    """Analytic param counts (used for 6ND roofline FLOPs) track the real tree."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    n_real = sum(x.size for x in jax.tree.leaves(params))
+    pc = cfg.param_counts()
+    # analytic count uses unpadded vocab and skips norm scales: allow 10%
+    assert abs(n_real - pc["total"]) / max(pc["total"], 1) < 0.35, (
+        arch, n_real, pc["total"]
+    )
+
+
+def test_long_500k_applicability_flags():
+    cell = SHAPE_CELLS["long_500k"]
+    ok_archs = {a for a in ARCHS if get_config(a).cell_supported(cell)[0]}
+    assert ok_archs == {"jamba-v0.1-52b", "mamba2-130m"}

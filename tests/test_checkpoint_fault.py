@@ -1,0 +1,119 @@
+"""Checkpoint/restore, async writer, fault-tolerant supervisor, data resume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.distributed.compression import ef_compress_grads, init_ef_state
+from repro.distributed.fault import (
+    SimulatedFailure,
+    StragglerWatchdog,
+    TrainSupervisor,
+)
+
+
+def tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = tree()
+    save(tmp_path, 5, t, extra={"note": "x"})
+    assert latest_step(tmp_path) == 5
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    back, extra = restore(tmp_path, 5, like)
+    assert extra["note"] == "x"
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_gc_keeps_last_k(tmp_path):
+    for s in range(6):
+        save(tmp_path, s, tree(), keep=2)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [4, 5]
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    for s in (1, 2, 3):
+        ck.save(s, tree())
+    ck.wait()
+    assert latest_step(tmp_path) == 3
+    ck.close()
+
+
+def test_supervisor_recovers_from_failure(tmp_path):
+    calls = {"n": 0}
+
+    def make_state():
+        return {"x": jnp.zeros(())}
+
+    def step_fn(state, i):
+        calls["n"] += 1
+        if i == 7 and calls.get("fail", True):
+            calls["fail"] = False
+            raise SimulatedFailure("boom")
+        return {"x": state["x"] + 1}, {"x": state["x"]}
+
+    sup = TrainSupervisor(step_fn, make_state, tmp_path, ckpt_every=3)
+    report = sup.run(12)
+    assert report.steps_done == 12
+    assert report.restarts == 1
+    # state is correct despite restart: x counted every successful step
+    assert report.final_metrics["x"] == 11.0
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(threshold=2.0)
+    assert not wd.observe(0, 1.0)
+    for i in range(1, 5):
+        assert not wd.observe(i, 1.0)
+    assert wd.observe(5, 5.0)  # 5x slower than EWMA -> straggler
+    assert wd.events == [5]
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=2, seed=3)
+    p1 = DataPipeline(cfg).start()
+    b1 = [p1.get_batch() for _ in range(4)]
+    st = p1.state_dict()
+    b_next = p1.get_batch()
+    p1.stop()
+    # resume from the saved cursor: must replay the same next batch
+    p2 = DataPipeline(cfg).start()
+    p2.load_state_dict(st)
+    # drain anything prefetched with the old cursor
+    import time
+
+    time.sleep(0.01)
+    # rebuild: state was loaded after start; cursor applies to future rows
+    # -> create a fresh pipeline to be exact
+    p2.stop()
+    p3 = DataPipeline(cfg)
+    p3.stream.load_state_dict(st)
+    p3.start()
+    b_resume = p3.get_batch()
+    p3.stop()
+    np.testing.assert_array_equal(b_next["tokens"], b_resume["tokens"])
+
+
+def test_ef_compression_error_feedback():
+    g = {"w": jnp.array(np.random.default_rng(0).normal(size=(16, 64)), jnp.float32)}
+    ef = init_ef_state(g)
+    # accumulated compressed sum converges to true sum thanks to error feedback
+    total_c = jnp.zeros_like(g["w"])
+    total_t = jnp.zeros_like(g["w"])
+    for _ in range(20):
+        cg, ef = ef_compress_grads(g, ef)
+        total_c = total_c + cg["w"]
+        total_t = total_t + g["w"]
+    rel = float(jnp.linalg.norm(total_c - total_t) / jnp.linalg.norm(total_t))
+    assert rel < 0.01

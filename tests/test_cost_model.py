@@ -1,0 +1,53 @@
+"""Cost-model environment parameters: in-situ profiles and core counts."""
+
+import pytest
+
+from repro.core.cost_model import LinkModel, NetworkProfile, evaluate
+
+from test_milp import chain_graph, make_profile
+
+
+def test_in_situ_drops_intra_term():
+    g = chain_graph(3)
+    prof = make_profile(g, sw=[1.0], hw=[0.1])
+    prof.in_situ = True
+    asg = {a: "t0" for a in g.actors}
+    r = evaluate(g, asg, prof)
+    assert r["T_intra"] == 0.0
+    prof.in_situ = False
+    r2 = evaluate(g, asg, prof)
+    assert r2["T_intra"] > 0.0
+
+
+def test_in_situ_inter_charges_delta_only():
+    g = chain_graph(3)
+    prof = make_profile(g, sw=[1.0], hw=[0.1])
+    prof.links["intra"] = LinkModel("intra", 1e-7, 10e9)
+    prof.links["inter"] = LinkModel("inter", 1e-7, 10e9)  # same speed
+    asg = {a: ("t0" if i % 2 else "t1") for i, a in enumerate(sorted(g.actors))}
+    r = evaluate(g, asg, prof)
+    assert r["T_inter"] == pytest.approx(0.0)  # no extra cost when links equal
+
+
+def test_n_cores_serializes_threads():
+    g = chain_graph(4)
+    prof = make_profile(g, sw=[1.0], hw=[0.1])
+    asg = {a: f"t{i % 2}" for i, a in enumerate(sorted(g.actors))}
+    prof.n_cores = None
+    parallel = evaluate(g, asg, prof)["T_exec"]
+    prof.n_cores = 1
+    serial = evaluate(g, asg, prof)["T_exec"]
+    assert serial > parallel * 1.5  # 2 threads on 1 core ≈ sum not max
+
+
+def test_single_core_plink_adds_not_overlaps():
+    g = chain_graph(3)
+    prof = make_profile(g, sw=[1.0], hw=[0.5])
+    asg = dict.fromkeys(sorted(g.actors), "t0")
+    mid = sorted(g.actors)[2]
+    asg[mid] = "accel"
+    prof.n_cores = 8
+    overlap = evaluate(g, asg, prof)["T_exec"]
+    prof.n_cores = 1
+    added = evaluate(g, asg, prof)["T_exec"]
+    assert added > overlap

@@ -1,0 +1,56 @@
+"""Device partition compilation + PLink bridging."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.actor import simple_actor, sink_actor, source_actor
+from repro.core.graph import ActorGraph
+from repro.runtime.device_runtime import compile_partition
+from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+
+from helpers import make_chain, make_topfilter, topfilter_expected
+
+
+def test_compile_sdf_chain():
+    g, got = make_chain(n_stages=3, n_tok=64)
+    prog = compile_partition(g, ["s0", "s1", "s2"], block=32, donate=False)
+    assert [p[0] for p in prog.in_ports] == ["s0"]
+    assert [p[0] for p in prog.out_ports] == ["s2"]
+    import jax.numpy as jnp
+
+    ins = {
+        "s0.IN": (jnp.arange(32, dtype=jnp.float32), jnp.ones(32, bool))
+    }
+    state, outs, idle = prog.step(prog.init_state, ins)
+    vals, mask = outs["s2.OUT"]
+    assert bool(mask.all())
+    assert float(vals[0]) == 0 + 1 + 2 + 3
+    assert not bool(idle)
+
+
+def test_idle_flag_when_no_tokens():
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    prog = compile_partition(g, ["s0", "s1"], block=16, donate=False)
+    ins = {"s0.IN": (jnp.zeros(16, jnp.float32), jnp.zeros(16, bool))}
+    _, outs, idle = prog.step(prog.init_state, ins)
+    assert bool(idle)
+
+
+def test_host_only_actor_rejected():
+    g, _ = make_topfilter()
+    with pytest.raises(AssertionError, match="host-side"):
+        compile_partition(g, ["source"])
+
+
+def test_hetero_equals_host_chain():
+    g1, got1 = make_chain(n_stages=4, n_tok=512)
+    HostRuntime(g1, None).run_single()
+    g2, got2 = make_chain(n_stages=4, n_tok=512)
+    rt = HeteroRuntime(
+        g2, {"src": "t0", "s0": "accel", "s1": "accel", "s2": "accel",
+             "s3": "accel", "snk": "t0"},
+        block=128,
+    )
+    rt.run_threads()
+    assert got1 == got2
+    assert len(got2) == 512

@@ -1,0 +1,83 @@
+"""Integration: partitioner → XCF → runtime; elastic remesh restore; full-DP
+rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partitioner import best_point, explore
+from repro.core.profiler import profile_device, profile_host
+from repro.core.xcf import XCF, make_xcf
+from repro.runtime.scheduler import runtime_from_xcf
+
+from helpers import make_topfilter, topfilter_expected
+
+
+def test_xcf_roundtrip_into_runtime(tmp_path):
+    """The paper's full loop: profile -> solve -> emit XCF -> load XCF -> run."""
+    g, _ = make_topfilter(n=2000, vectorized=True)
+    prof, _ = profile_host(g)
+    prof = profile_device(g, prof, block=512)
+    pts = explore(g, prof, thread_counts=(1, 2), accel_options=(False, True))
+    bp = best_point(pts)
+    p = tmp_path / "best.json"
+    bp.xcf.save(p)
+
+    g2, got = make_topfilter(n=2000, vectorized=True)
+    rt = runtime_from_xcf(g2, XCF.load(p), block=512)
+    rt.run_threads()
+    assert got == topfilter_expected(n=2000)
+
+
+def test_xcf_fifo_depths_applied():
+    g, got = make_topfilter(n=500, vectorized=True)
+    xcf = make_xcf(g.name, {"source": "t0", "filter": "t1", "sink": "t0"})
+    from repro.core.xcf import ConnectionSpec
+
+    xcf.connections.append(ConnectionSpec("source", "OUT", "filter", "IN", 8))
+    rt = runtime_from_xcf(g, xcf)
+    assert rt.fifos["source.OUT->filter.IN"].capacity == 8
+    rt.run_threads()
+    assert got == topfilter_expected(n=500)
+
+
+def test_elastic_remesh_restore(tmp_path):
+    """Checkpoints are mesh-agnostic: save under one rule set, restore under
+    different sharding rules (the surviving-pods scenario)."""
+    from repro.checkpoint import restore, save
+    from repro.configs import get_config
+    from repro.distributed.sharding import full_dp_rules, make_rules
+    from repro.launch.mesh import make_test_mesh
+    from repro.model import lm
+
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    save(tmp_path, 3, params)
+
+    mesh = make_test_mesh()
+    rules2 = full_dp_rules(cfg, mesh)  # a *different* placement policy
+    from repro.distributed.sharding import defs_shardings
+    from repro.model.lm import model_defs
+
+    sh = defs_shardings(model_defs(cfg), mesh, rules2)
+    restored, _ = restore(tmp_path, 3, params, shardings=sh)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_full_dp_rules_structure():
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import full_dp_rules, make_pspec
+
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    cfg = get_config("mamba2-130m")
+    rules = full_dp_rules(cfg, mesh)
+    # batch shards over both axes; nothing else touches the model axis
+    assert make_pspec(("batch",), (256,), mesh, rules) == P(("data", "model"))
+    assert make_pspec(("tp",), (1536,), mesh, rules) == P(None)
+    assert make_pspec(("seq",), (4096,), mesh, rules) == P(None)

@@ -1,0 +1,76 @@
+"""Decode-path consistency: prefill + token-by-token decode must reproduce the
+full-sequence forward logits (validates KV caches, SSD state carry, ring
+windows, RoPE positions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.model import lm
+
+
+def full_logits(params, cfg, tokens):
+    hidden, _, _ = lm.forward_hidden(params, cfg, tokens)
+    w = params["head"]["w"] if "head" in params else params["embed"]["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", hidden.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    idx = jnp.arange(cfg.padded_vocab)
+    return logits + jnp.where(idx < cfg.vocab_size, 0.0, -1e30)
+
+
+@pytest.mark.parametrize(
+    "arch", ["smollm-135m", "jamba-v0.1-52b", "mamba2-130m", "deepseek-moe-16b"]
+)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    B, S0, S = 2, 8, 16
+    key = jax.random.PRNGKey(1)
+    params = lm.init_model(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 3, cfg.vocab_size).astype(jnp.int32)
+
+    ref = full_logits(params, cfg, tokens)  # (B, S, Vp)
+
+    # prefill on the first S0 tokens
+    logits_p, cache = lm.prefill(params, cfg, tokens=tokens[:, :S0])
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(ref[:, S0 - 1]), atol=2e-2, rtol=2e-2
+    )
+
+    # splice into a decode cache sized for the full sequence
+    big = lm.init_cache(cfg, B, S)
+
+    def splice(b, s):
+        if b.shape == s.shape:
+            return s.astype(b.dtype)
+        pad = [(0, x - y) for x, y in zip(b.shape, s.shape)]
+        return jnp.pad(s.astype(b.dtype), pad)
+
+    cache = jax.tree.map(splice, big, cache)
+
+    # decode the rest one token at a time, teacher-forced
+    step = jax.jit(lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i))
+    for i in range(S0, S):
+        logits, cache = step(params, cache, tokens[:, i], jnp.int32(i))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(ref[:, i]), atol=3e-2, rtol=3e-2,
+            err_msg=f"{arch} pos {i}",
+        )
+
+
+def test_sliding_window_ring_cache():
+    """Jamba-style windowed attention: ring cache beyond the window must match a
+    model evaluated with the same window on the full sequence."""
+    cfg = get_config("jamba-v0.1-52b").reduced()  # sliding_window=64 in reduced
+    assert cfg.sliding_window == 64
+    # with S < window the ring cache behaves like a full cache (covered above);
+    # here check decode runs past the window boundary without shape errors
+    B, W = 1, cfg.sliding_window
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    cache = lm.init_cache(cfg, B, W)  # window-sized => ring mode
+    step = jax.jit(lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i))
+    tok = jnp.zeros((B,), jnp.int32)
+    for i in [0, 1, W - 1, W, W + 1, 2 * W + 3]:
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        assert bool(jnp.all(jnp.isfinite(logits)))

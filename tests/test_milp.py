@@ -1,0 +1,132 @@
+"""MILP formulation + solver cross-validation."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import LinkModel, NetworkProfile, evaluate
+from repro.core.graph import ActorGraph
+from repro.core.milp import (
+    solve_anneal,
+    solve_bb,
+    solve_chain_dp,
+    solve_exact,
+)
+from repro.core.actor import simple_actor, sink_actor, source_actor
+
+
+def chain_graph(n=5):
+    g = ActorGraph("g")
+
+    def gen(st):
+        return st, None
+
+    g.add(source_actor("src", gen))
+    prev = "src"
+    for i in range(n):
+        g.add(simple_actor(f"a{i}", lambda st, v: (st, v)))
+        g.connect(prev, f"a{i}")
+        prev = f"a{i}"
+    g.add(sink_actor("snk", lambda st, v: st))
+    g.connect(prev, "snk")
+    return g
+
+
+def make_profile(g, sw, hw, tokens=1000):
+    prof = NetworkProfile()
+    for i, a in enumerate(sorted(g.actors)):
+        prof.exec_sw[a] = sw[i % len(sw)]
+        prof.exec_hw[a] = hw[i % len(hw)]
+    for ch in g.channels:
+        prof.tokens[ch.key] = tokens
+        prof.buffers[ch.key] = 256
+    return prof
+
+
+def test_tau_equation4():
+    link = LinkModel("l", 1e-6, 1e9, token_bytes=4)
+    # n <= b: single transfer
+    assert link.tau(100, 256) == pytest.approx(link.xi(100))
+    # n > b: floor(n/b) full buffers + remainder
+    n, b = 1000, 256
+    want = link.xi(b) * (n // b) + link.xi(n % b)
+    assert link.tau(n, b) == pytest.approx(want)
+    # monotone in n
+    assert link.tau(2000, 256) > link.tau(1000, 256)
+
+
+def test_evaluate_prefers_parallel_threads():
+    g = chain_graph(4)
+    prof = make_profile(g, sw=[1.0], hw=[10.0])
+    one = evaluate(g, {a: "t0" for a in g.actors}, prof)
+    two = evaluate(
+        g,
+        {a: ("t0" if i % 2 else "t1") for i, a in enumerate(sorted(g.actors))},
+        prof,
+    )
+    assert two["T_exec"] < one["T_exec"]
+
+
+def test_accel_helps_when_fast():
+    g = chain_graph(4)
+    prof = make_profile(g, sw=[1.0], hw=[0.01])
+    sol_sw = solve_exact(g, prof, ["t0", "t1"])
+    sol_hw = solve_exact(g, prof, ["t0", "t1", "accel"])
+    assert sol_hw.objective < sol_sw.objective
+    assert any(p == "accel" for p in sol_hw.assignment.values())
+
+
+def test_io_actors_never_on_accel():
+    g = chain_graph(3)
+    prof = make_profile(g, sw=[1.0], hw=[1e-6])
+    sol = solve_exact(g, prof, ["t0", "accel"])
+    assert sol.assignment["src"] != "accel"
+    assert sol.assignment["snk"] != "accel"
+
+
+def test_bb_matches_exact():
+    g = chain_graph(5)
+    prof = make_profile(g, sw=[1.0, 2.0, 0.5], hw=[0.2, 0.1])
+    e = solve_exact(g, prof, ["t0", "t1", "accel"])
+    b = solve_bb(g, prof, ["t0", "t1", "accel"])
+    assert b.objective == pytest.approx(e.objective)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sw=st.lists(st.floats(0.1, 5.0), min_size=3, max_size=3),
+    hw=st.lists(st.floats(0.01, 5.0), min_size=2, max_size=2),
+    tokens=st.integers(10, 100000),
+)
+def test_solvers_agree_property(sw, hw, tokens):
+    g = chain_graph(4)
+    prof = make_profile(g, sw=sw, hw=hw, tokens=tokens)
+    e = solve_exact(g, prof, ["t0", "t1", "accel"])
+    b = solve_bb(g, prof, ["t0", "t1", "accel"])
+    a = solve_anneal(g, prof, ["t0", "t1", "accel"], iters=4000, restarts=2)
+    assert b.objective == pytest.approx(e.objective, rel=1e-9)
+    assert a.objective <= e.objective * 1.5 + 1e-9  # heuristic within 1.5x
+
+
+def test_chain_dp_optimal_vs_bruteforce():
+    import itertools
+
+    names = list("abcdef")
+    ex = {"a": 3.0, "b": 1.0, "c": 4.0, "d": 1.0, "e": 5.0, "f": 2.0}
+    bc = lambda i: 0.25
+    stages, T = solve_chain_dp(names, ex, bc, 3)
+    # brute force all contiguous splits into <= 3 parts
+    best = math.inf
+    n = len(names)
+    for c1 in range(1, n + 1):
+        for c2 in range(c1, n + 1):
+            segs = [(0, c1), (c1, c2), (c2, n)]
+            segs = [s for s in segs if s[0] < s[1]]
+            cost = max(
+                sum(ex[names[i]] for i in range(a, b)) + (0.25 if a > 0 else 0)
+                for a, b in segs
+            )
+            best = min(best, cost)
+    assert T == pytest.approx(best)
+    assert stages == sorted(stages)  # contiguous, monotone

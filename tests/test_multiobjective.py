@@ -1,0 +1,48 @@
+"""Paper §V-C: multi-objective partitioning — minimize T + α·R where R charges
+device resource use.  Sweeping α traces the performance/resource Pareto front."""
+
+import pytest
+
+from repro.core.milp import solve_exact
+
+from test_milp import chain_graph, make_profile
+
+
+def test_alpha_sweep_traces_pareto_front():
+    g = chain_graph(5)
+    prof = make_profile(g, sw=[1.0], hw=[0.05])
+    front = []
+    for alpha in (0.0, 0.02, 0.1, 1.0, 10.0):
+        sol = solve_exact(
+            g, prof, ["t0", "t1", "accel"], alpha=alpha,
+            resource=lambda a: 1.0,
+        )
+        n_hw = sum(1 for p in sol.assignment.values() if p == "accel")
+        t = sol.detail["T_exec"]
+        front.append((alpha, n_hw, t))
+    alphas, n_hws, times = zip(*front)
+    # resource use decreases monotonically as it gets more expensive
+    assert list(n_hws) == sorted(n_hws, reverse=True)
+    # and execution time correspondingly rises (or stays flat)
+    assert list(times) == sorted(times)
+    # extremes: free hardware -> use it; prohibitive -> software-only
+    assert n_hws[0] > 0
+    assert n_hws[-1] == 0
+
+
+def test_resource_weights_steer_placement():
+    """Per-actor resource weights (e.g. LUT estimates): an expensive actor is
+    evicted from the device before a cheap one."""
+    g = chain_graph(3)
+    prof = make_profile(g, sw=[1.0], hw=[0.05])
+    actors = sorted(a for a in g.actors if g.actors[a].device_ok)
+    big = actors[0]
+
+    def resource(a):
+        return 100.0 if a == big else 1.0
+
+    sol = solve_exact(g, prof, ["t0", "accel"], alpha=0.05, resource=resource)
+    assert sol.assignment[big] != "accel"
+    assert any(
+        p == "accel" for a, p in sol.assignment.items() if a != big
+    )

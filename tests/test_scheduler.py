@@ -1,0 +1,79 @@
+"""Software runtime: quiescence, thread mappings, profiling, hetero runtime."""
+
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+
+from helpers import make_chain, make_topfilter, topfilter_expected
+
+
+def test_single_thread():
+    g, got = make_topfilter(n=512)
+    HostRuntime(g, None).run_single()
+    assert got == topfilter_expected(n=512)
+
+
+@pytest.mark.parametrize(
+    "mapping",
+    [
+        {"source": "a", "filter": "a", "sink": "b"},
+        {"source": "a", "filter": "b", "sink": "c"},
+        {"source": "a", "filter": "b", "sink": "a"},
+    ],
+)
+def test_threaded_mappings(mapping):
+    g, got = make_topfilter(n=512)
+    HostRuntime(g, mapping).run_threads()
+    assert got == topfilter_expected(n=512)
+
+
+def test_threaded_repeated_runs_deterministic_result():
+    for _ in range(3):
+        g, got = make_topfilter(n=256)
+        HostRuntime(g, {"source": "a", "filter": "b", "sink": "c"}).run_threads()
+        assert got == topfilter_expected(n=256)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_random_chain_mappings(seed):
+    import random
+
+    rnd = random.Random(seed)
+    g, got = make_chain(n_stages=4, n_tok=64)
+    mapping = {a: f"t{rnd.randrange(3)}" for a in g.actors}
+    HostRuntime(g, mapping).run_threads()
+    assert got == [float(x + 1 + 2 + 3 + 4) for x in range(64)]
+
+
+def test_profiles_populated():
+    g, got = make_topfilter(n=256)
+    rt = HostRuntime(g, None)
+    rt.run_single()
+    assert rt.profiles["filter"].fires == 256
+    assert rt.profiles["source"].fires == 256
+    assert rt.profiles["sink"].fires == len(topfilter_expected(n=256))
+    assert rt.profiles["filter"].time_ns > 0
+    toks = rt.channel_tokens()
+    assert toks["source.OUT->filter.IN"] == 256
+
+
+def test_small_fifo_depths_still_correct():
+    g, got = make_topfilter(n=300)
+    for ch in g.channels:
+        object.__setattr__(ch, "depth", 2)
+    HostRuntime(g, {"source": "a", "filter": "b", "sink": "c"}).run_threads()
+    assert got == topfilter_expected(n=300)
+
+
+def test_hetero_runtime_matches_host():
+    g, got = make_topfilter(n=1024, vectorized=True)
+    rt = HeteroRuntime(
+        g, {"source": "t0", "filter": "accel", "sink": "t0"}, block=256
+    )
+    rt.run_threads()
+    assert got == topfilter_expected(n=1024)
+    assert rt.plink.stats.launches >= 4  # blocks streamed through the device

@@ -1,0 +1,89 @@
+"""Continuous batching correctness: the engine's outputs must equal isolated
+per-request greedy decoding, regardless of slot scheduling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.model import lm
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced()
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def isolated_generate(cfg, params, prompt, max_new, eos_id=2, max_len=96):
+    tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, small = lm.prefill(params, cfg, tokens=tokens)
+    big = lm.init_cache(cfg, 1, max_len)
+
+    def splice(b, s):
+        if b.ndim >= 3 and s.shape[2] != b.shape[2]:
+            pad = [(0, 0)] * s.ndim
+            pad[2] = (0, b.shape[2] - s.shape[2])
+            s = jnp.pad(s.astype(b.dtype), pad)
+        return s.astype(b.dtype)
+
+    cache = jax.tree.map(splice, big, small)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = tokens.shape[1]
+    step = jax.jit(lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i))
+    while out[-1] != eos_id and len(out) < max_new and pos < max_len - 1:
+        logits, cache = step(
+            params, cache, jnp.asarray([out[-1]], jnp.int32), jnp.int32(pos)
+        )
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def test_engine_matches_isolated_generation(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(3, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (5, 9, 7, 12, 4)
+    ]
+    max_news = [6, 10, 4, 8, 5]
+
+    engine = ServingEngine(cfg, params, slots=2, max_len=96)
+    reqs = [
+        Request(rid=i, prompt=p, max_new=m)
+        for i, (p, m) in enumerate(zip(prompts, max_news))
+    ]
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == len(reqs)
+
+    for r in sorted(done, key=lambda r: r.rid):
+        ref = isolated_generate(cfg, params, prompts[r.rid], max_news[r.rid])
+        assert r.output == ref, f"request {r.rid}: {r.output} != {ref}"
+
+
+def test_engine_interleaves_slots(setup):
+    """More requests than slots: the engine must still finish them all, and in
+    fewer ticks than serial execution would need (continuous batching)."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(3, cfg.vocab_size, size=6).astype(np.int32),
+            max_new=7,
+        )
+        for i in range(6)
+    ]
+    engine = ServingEngine(cfg, params, slots=3, max_len=64)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == 6
+    serial_steps = sum(len(r.output) - 1 for r in done)
+    assert engine.steps < serial_steps  # slots genuinely shared the ticks

@@ -1,0 +1,43 @@
+"""XCF configuration round-trips and validation."""
+
+import pytest
+
+from repro.core.xcf import XCF, make_xcf
+
+from helpers import make_topfilter
+
+
+def test_json_roundtrip(tmp_path):
+    xcf = make_xcf(
+        "example.TopFilter",
+        {"source": "accel", "filter": "accel", "sink": "0"},
+        meta={"predicted_T": 1.5},
+    )
+    p = tmp_path / "conf.json"
+    xcf.save(p)
+    back = XCF.load(p)
+    assert back.assignment() == xcf.assignment()
+    assert back.meta["predicted_T"] == 1.5
+    assert back.partitions["accel"].code_generator == "hw"
+
+
+def test_xml_matches_paper_listing2_shape():
+    xcf = make_xcf("example.TopFilter", {"source": "1", "filter": "1", "sink": "0"})
+    xml = xcf.to_xml()
+    assert "<configuration>" in xml
+    assert '<network id="example.TopFilter"' in xml
+    assert "fifo-connection" in xml or "<connections" in xml
+
+
+def test_validate_rejects_io_actor_on_hw():
+    g, _ = make_topfilter()
+    xcf = make_xcf(g.name, {"source": "accel", "filter": "accel", "sink": "t0"})
+    with pytest.raises(AssertionError, match="cannot be placed on hardware"):
+        xcf.validate(g)
+
+
+def test_validate_requires_total_assignment():
+    g, _ = make_topfilter()
+    xcf = make_xcf(g.name, {"source": "t0", "filter": "t0"})
+    with pytest.raises(AssertionError, match="unassigned"):
+        xcf.validate(g)
