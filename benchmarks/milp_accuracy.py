@@ -1,18 +1,20 @@
 """MILP model accuracy (paper §VII-B): predicted vs measured execution time over
 many partitionings; reports the median relative error per network (the paper
-reports 12.8–34% median error — same order expected here)."""
+reports 12.8–34% median error — same order expected here).
+
+Every sampled assignment is measured through ``repro.compile`` with a
+synthesized XCF — the frontend picks host/hetero execution from it."""
 
 from __future__ import annotations
 
-import itertools
 import statistics
 
-from _util import emit, wall
+from _util import emit
 
-from repro.apps.streams import BENCHMARKS
+import repro
+from repro.apps.streams import NETWORKS
 from repro.core.cost_model import evaluate
-from repro.core.profiler import measure_fifo_bandwidth, profile_device, profile_host
-from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+from repro.core.xcf import make_xcf
 
 SIZES = {"TopFilter": 16000, "FIR32": 3000, "Bitonic8": 600, "IDCT8": 600}
 
@@ -35,28 +37,17 @@ def sample_assignments(g, n_threads=2, max_points=6):
 
 def main() -> None:
     all_errs = []
-    for name, factory in BENCHMARKS.items():
+    for name, builder in NETWORKS.items():
         size = SIZES[name]
-        g, _ = factory(size) if name != "FIR32" else factory(n=size)
-        prof, _ = profile_host(g)
-        prof = profile_device(g, prof, block=2048)
-        intra, _ = measure_fifo_bandwidth(cross_thread=False, sizes=(256, 2048))
-        inter, _ = measure_fifo_bandwidth(cross_thread=True, sizes=(256, 2048))
-        prof.links["intra"] = intra
-        prof.links["inter"] = inter
-        prof.n_cores = __import__("os").cpu_count()
+        net, _ = builder(size) if name != "FIR32" else builder(n=size)
+        prog = repro.compile(net, block=2048)
+        prof = prog.profile(block=2048, bandwidth_sizes=(256, 2048))
         errs = []
+        g = prog.graph
         for asg in sample_assignments(g):
             pred = evaluate(g, asg, prof)["T_exec"]
-            gm, _ = factory(size) if name != "FIR32" else factory(n=size)
-            uses_accel = any(p == "accel" for p in asg.values())
-            if uses_accel:
-                rt = HeteroRuntime(gm, asg, block=2048)
-                meas, _ = wall(rt.run_threads)
-            else:
-                rt = HostRuntime(gm, asg)
-                multi = len(set(asg.values())) > 1
-                meas, _ = wall(rt.run_threads if multi else rt.run_single)
+            placed = prog.repartition(make_xcf(g.name, asg))
+            meas = placed.run().seconds
             errs.append(abs(pred - meas) / meas)
         med = statistics.median(errs) * 100
         all_errs.extend(errs)

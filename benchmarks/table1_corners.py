@@ -3,72 +3,51 @@ partitionings — all-device ("hardware"), one thread ("single"), thread-per-act
 ("many").  Real wall-clock measurements on this host; the device partition is the
 jitted XLA program (this container's accelerator stand-in).
 
+Each network is compiled once via the frontend; the corners are pure
+``repartition`` calls — placement is configuration, not code.
+
 Reproduces the paper's qualitative findings: thread-per-actor frequently *hurts*
 (scheduling + cross-thread FIFO cost), and all-hardware is not always best.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Dict
 
-from _util import emit, wall
+from _util import emit
 
-from repro.apps.streams import BENCHMARKS
-from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+import repro
+from repro.apps.streams import NETWORKS
+from repro.frontend import FrontendError
 
 SIZES = {"TopFilter": 40000, "FIR32": 8000, "Bitonic8": 1500, "IDCT8": 1500}
-
-
-def run_corner(name: str, corner: str) -> Dict:
-    factory = BENCHMARKS[name]
-    kw = {}
-    if name == "TopFilter":
-        g, got = factory(SIZES[name])
-        tokens = SIZES[name]
-    elif name == "FIR32":
-        g, got = factory(n=SIZES[name])
-        tokens = SIZES[name]
-    else:
-        g, got = factory(SIZES[name])
-        tokens = SIZES[name] * 8
-
-    if corner == "single":
-        rt = HostRuntime(g, None)
-        dt, _ = wall(rt.run_single)
-    elif corner == "many":
-        mapping = {a: f"t_{a}" for a in g.actors}
-        rt = HostRuntime(g, mapping)
-        dt, _ = wall(rt.run_threads)
-    else:  # hardware
-        mapping = {
-            a: ("accel" if g.actors[a].device_ok else "t0") for a in g.actors
-        }
-        if all(p != "accel" for p in mapping.values()):
-            return {}
-        rt = HeteroRuntime(g, mapping, block=4096)
-        dt, _ = wall(rt.run_threads)
-    return {"seconds": dt, "tokens": tokens, "tput": tokens / dt,
-            "produced": len(got)}
+CORNERS = {"hardware": "device", "single": "host", "many": "threads"}
 
 
 def main() -> None:
-    for name in BENCHMARKS:
-        row = {}
-        for corner in ("hardware", "single", "many"):
-            r = run_corner(name, corner)
-            if r:
-                row[corner] = r
-                emit(
-                    f"table1/{name}/{corner}",
-                    1e6 * r["seconds"] / r["tokens"],
-                    f"tput={r['tput']:.0f}tok/s",
-                )
+    for name, builder in NETWORKS.items():
+        size = SIZES[name]
+        net, got = builder(size) if name != "FIR32" else builder(n=size)
+        tokens = size if name in ("TopFilter", "FIR32") else size * 8
+        prog = repro.compile(net, block=4096)
+        row: Dict[str, float] = {}
+        for corner, backend in CORNERS.items():
+            try:
+                placed = prog.repartition(backend=backend)
+            except FrontendError:  # no device-eligible actors
+                continue
+            r = placed.run()
+            row[corner] = r.seconds
+            emit(
+                f"table1/{name}/{corner}",
+                1e6 * r.seconds / tokens,
+                f"tput={tokens / r.seconds:.0f}tok/s produced={len(got)}",
+            )
         if "hardware" in row and "single" in row:
             emit(
                 f"table1/{name}/speedup_hw_vs_single",
                 0.0,
-                f"{row['single']['seconds'] / row['hardware']['seconds']:.2f}x",
+                f"{row['single'] / row['hardware']:.2f}x",
             )
 
 

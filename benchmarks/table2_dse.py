@@ -1,54 +1,39 @@
 """Table II / Fig. 7-9 analogue: automatic design-space exploration.
 
-For each benchmark network: profile on host + device, solve the MILP for every
-(thread count × accel) configuration, then *measure* every discovered partition
-and report the predicted-vs-measured landscape.  Emits the per-point scatter
-(fig7 analogue) to artifacts/dse_points.csv.
+For each benchmark network: ``Program.profile()`` on host + device,
+``Program.explore()`` solves the MILP for every (thread count x accel)
+configuration, then every discovered partition is *measured* by
+``Program.repartition(xcf).run()`` and the predicted-vs-measured landscape
+reported.  Emits the per-point scatter (fig7 analogue) to
+artifacts/dse_points.csv.
 """
 
 from __future__ import annotations
 
 import csv
-import time
 from pathlib import Path
 
-from _util import emit, wall
+from _util import emit
 
-from repro.apps.streams import BENCHMARKS
-from repro.core.partitioner import best_point, explore
-from repro.core.profiler import measure_fifo_bandwidth, profile_device, profile_host
-from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+import repro
+from repro.apps.streams import NETWORKS
 
 SIZES = {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
 
 
-def measure_assignment(factory, size, assignment) -> float:
-    g, _ = factory(size) if factory is not BENCHMARKS["FIR32"] else factory(n=size)
-    uses_accel = any(p == "accel" for p in assignment.values())
-    if uses_accel:
-        rt = HeteroRuntime(g, assignment, block=2048)
-        dt, _ = wall(rt.run_threads)
-    else:
-        rt = HostRuntime(g, assignment)
-        n_threads = len(set(assignment.values()))
-        dt, _ = wall(rt.run_threads if n_threads > 1 else rt.run_single)
-    return dt
-
-
 def main() -> None:
-    rows = []
-    for name, factory in BENCHMARKS.items():
-        size = SIZES[name]
-        g, _ = factory(size) if name != "FIR32" else factory(n=size)
-        prof, _rt = profile_host(g)
-        prof = profile_device(g, prof, block=2048)
-        intra, _ = measure_fifo_bandwidth(cross_thread=False, sizes=(256, 1024, 4096))
-        inter, _ = measure_fifo_bandwidth(cross_thread=True, sizes=(256, 1024, 4096))
-        prof.links["intra"] = intra
-        prof.links["inter"] = inter
-        prof.n_cores = __import__("os").cpu_count()
+    from repro.core.partitioner import best_point
 
-        points = explore(g, prof, thread_counts=(1, 2, 3), accel_options=(False, True))
+    rows = []
+    for name, builder in NETWORKS.items():
+        size = SIZES[name]
+        net, _ = builder(size) if name != "FIR32" else builder(n=size)
+        prog = repro.compile(net, block=2048)
+        prof = prog.profile(block=2048, bandwidth_sizes=(256, 1024, 4096))
+
+        points = prog.explore(
+            prof, thread_counts=(1, 2, 3), accel_options=(False, True)
+        )
         base = next(
             (p for p in points if p.n_threads == 1 and not p.use_accel), points[0]
         )
@@ -62,17 +47,18 @@ def main() -> None:
             f"best_pred_speedup={base.predicted / bp.predicted:.2f}x "
             f"best_uses_accel={bp.use_accel} hw_actors={len(bp.hw_actors())}",
         )
-        # measure a subset: baseline + best + one mid point
+        # measure a subset: baseline + best
         for tag, p in {"baseline": base, "best": bp}.items():
-            meas = measure_assignment(factory, size, p.solution.assignment)
+            report = prog.repartition(p.xcf).run()
             rows.append(
                 dict(network=name, point=tag, n_threads=p.n_threads,
-                     accel=p.use_accel, predicted_s=p.predicted, measured_s=meas)
+                     accel=p.use_accel, predicted_s=p.predicted,
+                     measured_s=report.seconds)
             )
             emit(
                 f"table2/{name}/{tag}",
-                meas * 1e6 / size,
-                f"pred={p.predicted*1e3:.1f}ms meas={meas*1e3:.1f}ms",
+                report.seconds * 1e6 / size,
+                f"pred={p.predicted*1e3:.1f}ms meas={report.seconds*1e3:.1f}ms",
             )
     out = Path("artifacts")
     out.mkdir(exist_ok=True)

@@ -1,27 +1,27 @@
 """Actor-machine vs basic controller (paper §IV, Listing 4 discussion):
-condition tests per firing and wall time, same networks, same schedules."""
+condition tests per firing and wall time, same networks, same schedules.
+The controller is a ``repro.compile`` option; the networks never change."""
 
 from __future__ import annotations
 
-from _util import emit, wall
+from _util import emit
 
-from repro.apps.streams import BENCHMARKS
-from repro.runtime.scheduler import HostRuntime
+import repro
+from repro.apps.streams import NETWORKS
 
 SIZES = {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
 
 
 def main() -> None:
-    for name, factory in BENCHMARKS.items():
+    for name, builder in NETWORKS.items():
         size = SIZES[name]
+        net, _ = builder(size) if name != "FIR32" else builder(n=size)
         stats = {}
         for kind in ("am", "basic"):
-            g, _ = factory(size) if name != "FIR32" else factory(n=size)
-            rt = HostRuntime(g, None, controller=kind)
-            dt, _ = wall(rt.run_single)
-            fires = rt.total_fires()
-            tests = sum(p.tests for p in rt.profiles.values())
-            stats[kind] = (dt, tests / max(fires, 1))
+            report = repro.compile(net, controller=kind).run(threaded=False)
+            stats[kind] = (
+                report.seconds, report.tests / max(report.fires, 1)
+            )
         dt_am, tpf_am = stats["am"]
         dt_b, tpf_b = stats["basic"]
         emit(

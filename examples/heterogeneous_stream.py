@@ -1,53 +1,49 @@
 """Heterogeneous streaming demo (paper Fig. 6): the same dataflow program run
 (a) all on host threads and (b) with its compute actors moved to the device
-partition behind a PLink — no code change, only the mapping differs.
+partition behind a PLink — no code change, only the configuration differs.
+
+With the frontend this is the whole program: author once, ``repro.compile``,
+then ``repartition`` to a different placement.  No runtime classes appear here.
 
     PYTHONPATH=src python examples/heterogeneous_stream.py
 """
 
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.apps.streams import make_bitonic8, make_idct8
-from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+import numpy as np
+
+import repro
+from repro.apps.streams import bitonic8, idct8
 
 
-def run(name, factory, n):
-    g, got = factory(n)
-    t0 = time.perf_counter()
-    HostRuntime(g, None).run_single()
-    t_host = time.perf_counter() - t0
+def run(name, builder, n):
+    net, got = builder(n)
+    prog = repro.compile(net, block=4096)      # host-only placement by default
 
-    g2, got2 = factory(n)
-    mapping = {
-        a: ("accel" if g2.actors[a].device_ok else "host")
-        for a in g2.actors
-    }
-    rt = HeteroRuntime(g2, mapping, block=4096)
-    t0 = time.perf_counter()
-    rt.run_threads()
-    t_het = time.perf_counter() - t0
+    r_host = prog.run()
+    out_host = list(got)
 
-    import numpy as np
+    hetero = prog.repartition(backend="device")  # same network, new placement
+    r_het = hetero.run()
 
     # host actors compute in python float64, the device partition in f32
-    assert len(got) == len(got2) and np.allclose(got, got2, atol=1e-3), (
+    assert len(out_host) == len(got) and np.allclose(out_host, got, atol=1e-3), (
         f"{name}: heterogeneous run diverged!"
     )
     print(
-        f"{name:10s} tokens={len(got):6d}  host={t_host*1e3:7.1f}ms  "
-        f"hetero={t_het*1e3:7.1f}ms  plink_launches={rt.plink.stats.launches}  "
-        f"outputs_match=True"
+        f"{name:10s} tokens={len(got):6d}  host={r_host.seconds*1e3:7.1f}ms  "
+        f"hetero={r_het.seconds*1e3:7.1f}ms  "
+        f"plink_launches={r_het.plink_launches}  outputs_match=True"
     )
 
 
 def main():
     print("same program, two placements (host-only vs PLink+device):")
-    run("Bitonic8", make_bitonic8, 1000)
-    run("IDCT8", make_idct8, 1000)
+    run("Bitonic8", bitonic8, 1000)
+    run("IDCT8", idct8, 1000)
 
 
 if __name__ == "__main__":

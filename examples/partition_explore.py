@@ -1,10 +1,13 @@
-"""The paper's workflow end to end (§III-E/F + §V):
+"""The paper's workflow end to end (§III-E/F + §V), on the frontend:
 
-1. profile a dataflow application on host + device,
-2. measure channel-bandwidth curves (Fig. 11),
-3. solve the MILP across thread-counts × accelerator use (Table II / Fig. 7),
+1. author the network once and ``repro.compile`` it,
+2. ``Program.profile()`` — host + device actor times, channel-bandwidth
+   curves (Fig. 11),
+3. ``Program.explore()`` — solve the MILP across thread-counts x accelerator
+   use (Table II / Fig. 7),
 4. emit the best partition as an XCF (+ paper-style XML), and
-5. run the chosen heterogeneous partition to verify the prediction.
+5. ``Program.repartition(best.xcf).run()`` — run the chosen heterogeneous
+   partition to verify the prediction.  Placement never touches the program.
 
 Then the same partitioner applied to an LM layer chain on a TPU pod
 (pipeline-stage assignment via the optimal chain DP).
@@ -13,41 +16,31 @@ Then the same partitioner applied to an LM layer chain on a TPU pod
 """
 
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.apps.streams import make_topfilter
+import repro
+from repro.apps.streams import topfilter
 from repro.configs import get_config
-from repro.core.partitioner import best_point, explore, explore_lm, pareto
-from repro.core.profiler import (
-    measure_fifo_bandwidth,
-    profile_device,
-    profile_host,
-)
-from repro.runtime.scheduler import HeteroRuntime, HostRuntime
+from repro.core.partitioner import best_point, explore_lm
 
 
 def main():
     n = 20000
-    g, _ = make_topfilter(n)
-    print(f"== profiling {g.name} ({len(g)} actors) ==")
-    prof, _ = profile_host(g)
-    prof = profile_device(g, prof, block=2048)
-    intra, _ = measure_fifo_bandwidth(cross_thread=False, sizes=(256, 2048))
-    inter, _ = measure_fifo_bandwidth(cross_thread=True, sizes=(256, 2048))
-    prof.links["intra"], prof.links["inter"] = intra, inter
-    import os
-
-    prof.n_cores = os.cpu_count()
-    for a in sorted(g.actors):
+    net, got = topfilter(n)
+    prog = repro.compile(net, block=2048)
+    print(f"== profiling {net.name} ({len(net)} actors) ==")
+    prof = prog.profile(block=2048, bandwidth_sizes=(256, 2048))
+    for a in sorted(prog.graph.actors):
         sw = prof.exec_sw.get(a, 0) * 1e3
         hw = prof.exec_hw.get(a, float("nan")) * 1e3
         print(f"  {a:8s} sw={sw:8.2f}ms hw={hw:8.2f}ms")
 
     print("\n== design-space exploration ==")
-    points = explore(g, prof, thread_counts=(1, 2, 3), accel_options=(False, True))
+    points = prog.explore(
+        prof, thread_counts=(1, 2, 3), accel_options=(False, True)
+    )
     for p in sorted(points, key=lambda p: p.predicted):
         print(
             f"  threads={p.n_threads} accel={str(p.use_accel):5s} "
@@ -58,17 +51,11 @@ def main():
     print(bp.xcf.to_xml())
 
     print("== measured run of the best partition ==")
-    g2, got = make_topfilter(n)
-    asg = bp.solution.assignment
-    t0 = time.perf_counter()
-    if any(p == "accel" for p in asg.values()):
-        HeteroRuntime(g2, asg, block=2048).run_threads()
-    else:
-        HostRuntime(g2, asg).run_threads()
-    dt = time.perf_counter() - t0
+    best = prog.repartition(bp.xcf)  # same program, the solver's placement
+    report = best.run()
     print(
-        f"  predicted {bp.predicted*1e3:.1f}ms, measured {dt*1e3:.1f}ms, "
-        f"{len(got)} tokens out"
+        f"  predicted {bp.predicted*1e3:.1f}ms, measured "
+        f"{report.seconds*1e3:.1f}ms, {len(got)} tokens out"
     )
 
     print("\n== the same partitioner on an LM layer chain (256-chip pod) ==")

@@ -1,6 +1,36 @@
 """Quickstart: train a tiny byte-level LM on text and sample from it.
 
     PYTHONPATH=src python examples/quickstart.py
+
+A tour of the repo, top down:
+
+  repro.frontend    — THE way in.  ``@actor``/``@action`` author CAL-style
+                      dataflow actors, ``network()`` wires them through typed
+                      port handles (``src.OUT >> filt.IN``), and
+                      ``repro.compile(net, xcf) -> Program`` turns any network
+                      plus a placement configuration into something you can
+                      ``.run()``, ``.profile()``, and ``.repartition()`` —
+                      host threads, the device partition, or a mix, selected
+                      by the XCF alone.  Start at docs/frontend.md.
+  repro.apps        — the paper's Table-I workload networks, authored in the
+                      frontend DSL (each exports a ``Network`` builder and a
+                      seed-API ``make_*`` shim).
+  repro.core        — the IR underneath: actors/actions (actor.py), the graph
+                      (graph.py), actor-machine controller synthesis
+                      (actor_machine.py), the XCF configuration format
+                      (xcf.py), and the profiling + MILP partitioning stack
+                      (profiler.py, cost_model.py, milp.py, partitioner.py).
+  repro.runtime     — execution: the multi-threaded quiescence-scheduled host
+                      runtime (scheduler.py), ring FIFOs (fifo.py), compiled
+                      device partitions (device_runtime.py), and the PLink
+                      host<->device bridge actor (plink.py).
+  repro.model/...   — the jax LM stack (model, kernels, distributed, launch,
+                      serving) that the LM-pipeline workloads and the chain-DP
+                      partitioner operate on; this file drives it end to end.
+
+This quickstart exercises the *model* stack; for the dataflow stack's
+author -> compile -> profile -> repartition loop, see
+examples/heterogeneous_stream.py and examples/partition_explore.py.
 """
 
 import sys

@@ -1,0 +1,40 @@
+"""repro — a StreamBlocks-style compiler for heterogeneous dataflow computing.
+
+Public surface (the frontend):
+
+    import repro
+
+    net = repro.network("TopFilter")        # author (see repro.frontend)
+    ...
+    prog = repro.compile(net, xcf=None)     # one-call compile pipeline
+    prog.run()                              # host / device / mixed, from XCF
+    prog.repartition(other_xcf).run()       # re-placement, no graph rebuild
+
+Lower layers remain importable directly: ``repro.core`` (actor IR, XCF, MILP
+partitioner), ``repro.runtime`` (host scheduler, device programs, PLink), and
+the model/serving stack used by the LM workloads.
+"""
+
+from repro.frontend import (
+    FrontendError,
+    Network,
+    Program,
+    RunReport,
+    action,
+    actor,
+    compile,
+    network,
+    synthesize_xcf,
+)
+
+__all__ = [
+    "FrontendError",
+    "Network",
+    "Program",
+    "RunReport",
+    "action",
+    "actor",
+    "compile",
+    "network",
+    "synthesize_xcf",
+]

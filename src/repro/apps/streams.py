@@ -1,272 +1,332 @@
-"""Benchmark actor networks (the paper's Table I workload suite, host-scale).
+"""Benchmark actor networks (the paper's Table I workload suite, host-scale),
+authored in the frontend DSL (``repro.frontend``).
 
-Every network is expressed once in the actor IR and can run on any partition —
-host threads, the compiled device partition, or a mix — which is the point of
-the paper.  Actors that can run on the device carry a ``vector_fire``.
+Every network is expressed once and can run on any partition — host threads,
+the compiled device partition, or a mix — which is the point of the paper.
+Actors that can run on the device carry a ``vector_fire``.
 
   * topfilter — the paper's Listing-1 network (guarded filter + priority)
   * fir       — N-tap systolic FIR pipeline (paper: 34 actors / 1D convolution)
   * bitonic8  — 8-lane bitonic sorting network of compare-exchange actors
                 (paper: 28 actors / hardware sorting)
   * idct8     — 8-point IDCT actor network (paper: 7 actors)
+
+Each ``<name>()`` builder returns ``(Network, collected_outputs)`` for use with
+``repro.compile``.  The ``make_<name>()`` constructors are thin shims over the
+builders returning ``(ActorGraph, collected_outputs)`` — the seed's API — and
+build graphs structurally identical to the seed's hand-wired ones (enforced by
+tests/test_frontend.py against tests/seed_networks.py).
 """
 
 from __future__ import annotations
 
 import math
-from typing import Callable, List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.actor import (
-    Action,
-    Actor,
-    Port,
-    simple_actor,
-    sink_actor,
-    source_actor,
-)
 from repro.core.graph import ActorGraph
+from repro.frontend import Network, action, actor, network
 
 
-def _lcg_source(g: ActorGraph, n: int, name: str = "source", mod: int = 100):
+def _lcg_source(net: Network, n: int, name: str = "source", mod: int = 100):
     def gen(st):
         x = st.get("x", 0)
         return {**st, "x": x + 1}, float((x * 1103515245 + 12345) % mod)
 
-    return g.add(
-        source_actor(name, gen, has_next=lambda st: st.get("x", 0) < n)
-    )
+    return net.source(name, gen, has_next=lambda st: st.get("x", 0) < n)
 
 
-def make_topfilter(n: int = 4096, param: float = 50.0) -> Tuple[ActorGraph, List]:
-    g = ActorGraph("TopFilter")
-    _lcg_source(g, n)
+# ---------------------------------------------------------------------------
+# TopFilter — Listing 1: guarded keep/drop with CAL priority
+# ---------------------------------------------------------------------------
 
-    def pred(st, peeked):
-        return peeked["IN"][0] < param
 
-    def vf(state, ins):
+@actor(inputs={"IN": "float32"}, outputs={"OUT": "float32"})
+class Filter:
+    """Keep tokens below ``param``; the keep action outranks the drop."""
+
+    def __init__(self, param: float = 50.0):
+        self.param = param
+
+    @action(name="t0", consumes={"IN": 1}, produces={"OUT": 1},
+            guard=lambda self, st, t: t["IN"][0] < self.param)
+    def t0(self, st, t):
+        return st, {"OUT": [t["IN"][0]]}
+
+    @action(name="t1", consumes={"IN": 1})
+    def t1(self, st, t):
+        return st, {}
+
+    def vector_fire(self, state, ins):
         vals, mask = ins["IN"]
-        return state, {"OUT": (vals, mask & (vals < param))}
+        return state, {"OUT": (vals, mask & (vals < self.param))}
 
-    g.add(
-        Actor(
-            "filter",
-            inputs=[Port("IN", "float32")],
-            outputs=[Port("OUT", "float32")],
-            actions=[
-                Action("t0", consumes={"IN": 1}, produces={"OUT": 1},
-                       guard=pred, fire=lambda st, t: (st, {"OUT": [t["IN"][0]]})),
-                Action("t1", consumes={"IN": 1}, fire=lambda st, t: (st, {})),
-            ],
-            vector_fire=vf,
-        )
-    )
+
+def topfilter(n: int = 4096, param: float = 50.0) -> Tuple[Network, List]:
+    net = network("TopFilter")
+    src = _lcg_source(net, n)
+    filt = net.add(Filter(param), "filter")
     got: List = []
-    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
-    g.connect("source", "filter")
-    g.connect("filter", "sink")
-    return g, got
+    snk = net.sink("sink", collect=got)
+    src >> filt >> snk
+    return net, got
 
 
-def make_fir(taps: int = 32, n: int = 4096) -> Tuple[ActorGraph, List]:
-    """Systolic FIR: per-tap MAC actors with x/acc forwarding channels."""
-    g = ActorGraph(f"FIR{taps}")
-    _lcg_source(g, n)
+# ---------------------------------------------------------------------------
+# FIR — systolic pipeline of per-tap MAC actors
+# ---------------------------------------------------------------------------
 
-    def seed_fire(st, t):
+
+@actor(inputs={"IN": "float32"},
+       outputs={"XOUT": "float32", "AOUT": "float32"})
+class FirSeed:
+    """Fans each sample into the (x, acc) systolic pair with acc = 0."""
+
+    @action(name="s", consumes={"IN": 1}, produces={"XOUT": 1, "AOUT": 1})
+    def s(st, t):
         v = t["IN"][0]
         return st, {"XOUT": [v], "AOUT": [0.0]}
 
-    def seed_vf(state, ins):
-        vals, mask = ins["IN"]
+    def vector_fire(state, ins):
         import jax.numpy as jnp
 
+        vals, mask = ins["IN"]
         return state, {"XOUT": (vals, mask), "AOUT": (jnp.zeros_like(vals), mask)}
 
-    g.add(Actor("seed", inputs=[Port("IN", "float32")],
-                outputs=[Port("XOUT", "float32"), Port("AOUT", "float32")],
-                actions=[Action("s", consumes={"IN": 1},
-                                produces={"XOUT": 1, "AOUT": 1}, fire=seed_fire)],
-                vector_fire=seed_vf))
-    g.connect("source", "seed", "OUT", "IN")
-    prev = "seed"
+
+@actor(inputs={"XIN": "float32", "AIN": "float32"},
+       outputs={"XOUT": "float32", "AOUT": "float32"})
+class Mac:
+    """One tap: forward x, accumulate acc + c*x."""
+
+    def __init__(self, c: float):
+        self.c = c
+
+    @action(name="m", consumes={"XIN": 1, "AIN": 1},
+            produces={"XOUT": 1, "AOUT": 1})
+    def m(self, st, t):
+        x = t["XIN"][0]
+        a = t["AIN"][0]
+        return st, {"XOUT": [x], "AOUT": [a + self.c * x]}
+
+    def vector_fire(self, state, ins):
+        xv, xm = ins["XIN"]
+        av, am = ins["AIN"]
+        return state, {"XOUT": (xv, xm), "AOUT": (av + self.c * xv, am)}
+
+
+def fir(taps: int = 32, n: int = 4096) -> Tuple[Network, List]:
+    net = network(f"FIR{taps}")
+    src = _lcg_source(net, n)
+    seed = net.add(FirSeed, "seed")
+    src.OUT >> seed.IN
     rng = np.random.default_rng(0)
     coeffs = rng.normal(size=(taps,)) / taps
+    prev = seed
     for i in range(taps):
-        c = float(coeffs[i])
-
-        def mac_fire(st, t, c=c):
-            x = t["XIN"][0]
-            a = t["AIN"][0]
-            return st, {"XOUT": [x], "AOUT": [a + c * x]}
-
-        def mac_vf(state, ins, c=c):
-            xv, xm = ins["XIN"]
-            av, am = ins["AIN"]
-            return state, {"XOUT": (xv, xm), "AOUT": (av + c * xv, am)}
-
-        g.add(Actor(f"mac{i}",
-                    inputs=[Port("XIN", "float32"), Port("AIN", "float32")],
-                    outputs=[Port("XOUT", "float32"), Port("AOUT", "float32")],
-                    actions=[Action("m", consumes={"XIN": 1, "AIN": 1},
-                                    produces={"XOUT": 1, "AOUT": 1},
-                                    fire=mac_fire)],
-                    vector_fire=mac_vf))
-        g.connect(prev, f"mac{i}", "XOUT", "XIN")
-        g.connect(prev, f"mac{i}", "AOUT", "AIN")
-        prev = f"mac{i}"
+        mac = net.add(Mac(float(coeffs[i])), f"mac{i}")
+        prev.XOUT >> mac.XIN
+        prev.AOUT >> mac.AIN
+        prev = mac
     got: List = []
-    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
-    # swallow the x-forward tail
-    g.add(sink_actor("xsink", lambda st, v: st, inp="IN"))
-    g.connect(prev, "sink", "AOUT", "IN")
-    g.connect(prev, "xsink", "XOUT", "IN")
-    return g, got
+    snk = net.sink("sink", collect=got)
+    xsink = net.sink("xsink")  # swallow the x-forward tail
+    prev.AOUT >> snk.IN
+    prev.XOUT >> xsink.IN
+    return net, got
 
 
-def _ce_actor(name: str, ascending: bool = True) -> Actor:
-    def fire(st, t):
+# ---------------------------------------------------------------------------
+# Bitonic8 — 8-lane Batcher sorting network of compare-exchange actors
+# ---------------------------------------------------------------------------
+
+
+@actor(inputs={"IN": "float32"},
+       outputs={f"O{i}": "float32" for i in range(8)},
+       device_ok=False, host_only_reason="rate conversion at ingest")
+class Deal:
+    """8 sequential tokens -> one on each lane."""
+
+    @action(name="d", consumes={"IN": 8},
+            produces={f"O{i}": 1 for i in range(8)})
+    def d(st, t):
+        vals = t["IN"]
+        return st, {f"O{i}": [vals[i]] for i in range(8)}
+
+
+@actor(inputs={"IN0": "float32", "IN1": "float32"},
+       outputs={"OUT0": "float32", "OUT1": "float32"})
+class CompareExchange:
+    def __init__(self, ascending: bool = True):
+        self.ascending = ascending
+
+    @action(name="ce", consumes={"IN0": 1, "IN1": 1},
+            produces={"OUT0": 1, "OUT1": 1})
+    def ce(self, st, t):
         a, b = t["IN0"][0], t["IN1"][0]
         lo, hi = (min(a, b), max(a, b))
-        if not ascending:
+        if not self.ascending:
             lo, hi = hi, lo
         return st, {"OUT0": [lo], "OUT1": [hi]}
 
-    def vf(state, ins, ascending=ascending):
+    def vector_fire(self, state, ins):
         import jax.numpy as jnp
 
         a, am = ins["IN0"]
         b, bm = ins["IN1"]
         lo = jnp.minimum(a, b)
         hi = jnp.maximum(a, b)
-        if not ascending:
+        if not self.ascending:
             lo, hi = hi, lo
         return state, {"OUT0": (lo, am), "OUT1": (hi, bm)}
 
-    return Actor(name,
-                 inputs=[Port("IN0", "float32"), Port("IN1", "float32")],
-                 outputs=[Port("OUT0", "float32"), Port("OUT1", "float32")],
-                 actions=[Action("ce", consumes={"IN0": 1, "IN1": 1},
-                                 produces={"OUT0": 1, "OUT1": 1}, fire=fire)],
-                 vector_fire=vf)
 
+@actor(inputs={f"I{i}": "float32" for i in range(8)},
+       outputs={"OUT": "float32"},
+       device_ok=False, host_only_reason="rate conversion at egress")
+class Merge:
+    """One token per lane -> 8 sequential tokens."""
 
-def make_bitonic8(n_vectors: int = 512) -> Tuple[ActorGraph, List]:
-    """8-lane bitonic sorting network; tokens stream down 8 wires."""
-    g = ActorGraph("Bitonic8")
-    n = n_vectors * 8
-    _lcg_source(g, n, mod=1000)
-
-    # deal: 8 sequential tokens -> one on each lane
-    def deal_fire(st, t):
-        vals = t["IN"]
-        return st, {f"O{i}": [vals[i]] for i in range(8)}
-
-    g.add(Actor("deal", inputs=[Port("IN", "float32")],
-                outputs=[Port(f"O{i}", "float32") for i in range(8)],
-                actions=[Action("d", consumes={"IN": 8},
-                                produces={f"O{i}": 1 for i in range(8)},
-                                fire=deal_fire)],
-                device_ok=False, host_only_reason="rate conversion at ingest"))
-    g.connect("source", "deal", "OUT", "IN")
-
-    # bitonic network stage structure for 8 lanes (Batcher):
-    wires = {i: ("deal", f"O{i}") for i in range(8)}
-    stage_pairs = [
-        [(0, 1, True), (2, 3, False), (4, 5, True), (6, 7, False)],
-        [(0, 2, True), (1, 3, True), (4, 6, False), (5, 7, False)],
-        [(0, 1, True), (2, 3, True), (4, 5, False), (6, 7, False)],
-        [(0, 4, True), (1, 5, True), (2, 6, True), (3, 7, True)],
-        [(0, 2, True), (1, 3, True), (4, 6, True), (5, 7, True)],
-        [(0, 1, True), (2, 3, True), (4, 5, True), (6, 7, True)],
-    ]
-    k = 0
-    for stage in stage_pairs:
-        for (i, j, asc) in stage:
-            name = f"ce{k}"
-            k += 1
-            g.add(_ce_actor(name, asc))
-            si, pi = wires[i]
-            sj, pj = wires[j]
-            g.connect(si, name, pi, "IN0")
-            g.connect(sj, name, pj, "IN1")
-            wires[i] = (name, "OUT0")
-            wires[j] = (name, "OUT1")
-
-    def merge_fire(st, t):
+    @action(name="m", consumes={f"I{i}": 1 for i in range(8)},
+            produces={"OUT": 8})
+    def m(st, t):
         return st, {"OUT": [t[f"I{i}"][0] for i in range(8)]}
 
-    g.add(Actor("merge", inputs=[Port(f"I{i}", "float32") for i in range(8)],
-                outputs=[Port("OUT", "float32")],
-                actions=[Action("m", consumes={f"I{i}": 1 for i in range(8)},
-                                produces={"OUT": 8}, fire=merge_fire)],
-                device_ok=False, host_only_reason="rate conversion at egress"))
+
+# bitonic network stage structure for 8 lanes (Batcher)
+_BITONIC_STAGES = [
+    [(0, 1, True), (2, 3, False), (4, 5, True), (6, 7, False)],
+    [(0, 2, True), (1, 3, True), (4, 6, False), (5, 7, False)],
+    [(0, 1, True), (2, 3, True), (4, 5, False), (6, 7, False)],
+    [(0, 4, True), (1, 5, True), (2, 6, True), (3, 7, True)],
+    [(0, 2, True), (1, 3, True), (4, 6, True), (5, 7, True)],
+    [(0, 1, True), (2, 3, True), (4, 5, True), (6, 7, True)],
+]
+
+
+def bitonic8(n_vectors: int = 512) -> Tuple[Network, List]:
+    net = network("Bitonic8")
+    src = _lcg_source(net, n_vectors * 8, mod=1000)
+    deal = net.add(Deal, "deal")
+    src.OUT >> deal.IN
+
+    wires = {i: deal.port(f"O{i}") for i in range(8)}
+    k = 0
+    for stage in _BITONIC_STAGES:
+        for (i, j, asc) in stage:
+            ce = net.add(CompareExchange(asc), f"ce{k}")
+            k += 1
+            wires[i] >> ce.IN0
+            wires[j] >> ce.IN1
+            wires[i] = ce.OUT0
+            wires[j] = ce.OUT1
+
+    merge = net.add(Merge, "merge")
     for i in range(8):
-        s, p = wires[i]
-        g.connect(s, "merge", p, f"I{i}")
+        wires[i] >> merge.port(f"I{i}")
     got: List = []
-    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
-    g.connect("merge", "sink", "OUT", "IN")
-    return g, got
+    snk = net.sink("sink", collect=got)
+    merge.OUT >> snk.IN
+    return net, got
 
 
-def make_idct8(n_blocks: int = 512) -> Tuple[ActorGraph, List]:
-    """8-point IDCT network: scale -> idct (8-token SDF matmul actor) -> clip."""
-    g = ActorGraph("IDCT8")
-    n = n_blocks * 8
-    _lcg_source(g, n, mod=256)
+# ---------------------------------------------------------------------------
+# IDCT8 — scale -> idct (8-token SDF matmul actor) -> clip
+# ---------------------------------------------------------------------------
 
-    def descale_vf(state, ins):
-        vals, mask = ins["IN"]
-        return state, {"OUT": ((vals - 128.0) / 8.0, mask)}
 
-    g.add(simple_actor("descale", lambda st, v: (st, (v - 128.0) / 8.0),
-                       vector_fire=descale_vf))
-    g.connect("source", "descale")
-
+def _idct_basis() -> np.ndarray:
     basis = np.zeros((8, 8), np.float32)
     for kk in range(8):
         for nn in range(8):
             c = math.sqrt(0.5) if kk == 0 else 1.0
             basis[kk, nn] = c * math.cos(math.pi * (nn + 0.5) * kk / 8.0) / 2.0
+    return basis
 
-    def idct_fire(st, t):
+
+_IDCT_BASIS = _idct_basis()
+
+
+@actor(inputs={"IN": "float32"}, outputs={"OUT": "float32"})
+class Idct:
+    """8-point IDCT: one SDF firing transforms a block of 8 tokens."""
+
+    @action(name="t", consumes={"IN": 8}, produces={"OUT": 8})
+    def t(st, t):
         x = np.asarray(t["IN"], np.float32)
-        y = x @ basis
+        y = x @ _IDCT_BASIS
         return st, {"OUT": [float(v) for v in y]}
 
-    def idct_vf(state, ins):
+    def vector_fire(state, ins):
         import jax.numpy as jnp
 
         vals, mask = ins["IN"]
         blocks = vals.reshape(-1, 8)
-        y = (blocks @ jnp.asarray(basis)).reshape(-1)
+        y = (blocks @ jnp.asarray(_IDCT_BASIS)).reshape(-1)
         return state, {"OUT": (y, mask)}
 
-    g.add(Actor("idct", inputs=[Port("IN", "float32")],
-                outputs=[Port("OUT", "float32")],
-                actions=[Action("t", consumes={"IN": 8}, produces={"OUT": 8},
-                                fire=idct_fire)],
-                vector_fire=idct_vf))
-    g.connect("descale", "idct")
 
-    def clip_vf(state, ins):
-        import jax.numpy as jnp
+def _descale_vf(state, ins):
+    vals, mask = ins["IN"]
+    return state, {"OUT": ((vals - 128.0) / 8.0, mask)}
 
-        vals, mask = ins["IN"]
-        return state, {"OUT": (jnp.clip(vals, -256.0, 255.0), mask)}
 
-    g.add(simple_actor("clip", lambda st, v: (st, max(-256.0, min(255.0, v))),
-                       vector_fire=clip_vf))
-    g.connect("idct", "clip")
+def _clip_vf(state, ins):
+    import jax.numpy as jnp
+
+    vals, mask = ins["IN"]
+    return state, {"OUT": (jnp.clip(vals, -256.0, 255.0), mask)}
+
+
+def idct8(n_blocks: int = 512) -> Tuple[Network, List]:
+    net = network("IDCT8")
+    src = _lcg_source(net, n_blocks * 8, mod=256)
+    descale = net.map("descale", lambda st, v: (st, (v - 128.0) / 8.0),
+                      vector_fire=_descale_vf)
+    idct = net.add(Idct, "idct")
+    clip = net.map("clip", lambda st, v: (st, max(-256.0, min(255.0, v))),
+                   vector_fire=_clip_vf)
     got: List = []
-    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
-    g.connect("clip", "sink")
-    return g, got
+    snk = net.sink("sink", collect=got)
+    src >> descale >> idct >> clip >> snk
+    return net, got
 
 
+# ---------------------------------------------------------------------------
+# Seed-API shims + registries
+# ---------------------------------------------------------------------------
+
+
+def make_topfilter(n: int = 4096, param: float = 50.0) -> Tuple[ActorGraph, List]:
+    net, got = topfilter(n, param)
+    return net.graph(), got
+
+
+def make_fir(taps: int = 32, n: int = 4096) -> Tuple[ActorGraph, List]:
+    net, got = fir(taps, n)
+    return net.graph(), got
+
+
+def make_bitonic8(n_vectors: int = 512) -> Tuple[ActorGraph, List]:
+    net, got = bitonic8(n_vectors)
+    return net.graph(), got
+
+
+def make_idct8(n_blocks: int = 512) -> Tuple[ActorGraph, List]:
+    net, got = idct8(n_blocks)
+    return net.graph(), got
+
+
+# DSL builders: name -> callable returning (Network, outputs)
+NETWORKS = {
+    "TopFilter": topfilter,
+    "FIR32": fir,
+    "Bitonic8": bitonic8,
+    "IDCT8": idct8,
+}
+
+# Seed-compatible: name -> callable returning (ActorGraph, outputs)
 BENCHMARKS = {
     "TopFilter": make_topfilter,
     "FIR32": make_fir,

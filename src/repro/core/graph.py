@@ -14,6 +14,15 @@ from typing import Dict, Iterator, List, Optional, Set, Tuple
 from repro.core.actor import Actor
 
 
+class GraphError(ValueError):
+    """Invalid graph construction (unknown actor/port, conflicting channel).
+
+    Raised at *build* time so authoring mistakes surface before any runtime is
+    constructed — the frontend DSL and the legacy ``connect`` API both route
+    through these checks.
+    """
+
+
 @dataclass(frozen=True)
 class Channel:
     src: str  # actor instance name
@@ -40,26 +49,62 @@ class ActorGraph:
 
     # -- construction -------------------------------------------------------
     def add(self, actor: Actor) -> Actor:
-        assert actor.name not in self.actors, f"duplicate actor {actor.name}"
+        if actor.name in self.actors:
+            raise GraphError(
+                f"{self.name}: duplicate actor {actor.name!r} — instance names "
+                f"must be unique within a network"
+            )
         self.actors[actor.name] = actor
         return actor
+
+    def _actor(self, name: str, role: str) -> Actor:
+        try:
+            return self.actors[name]
+        except KeyError:
+            raise GraphError(
+                f"{self.name}: connect() {role} refers to unknown actor "
+                f"{name!r} — add() it first (known actors: "
+                f"{sorted(self.actors) or 'none'})"
+            ) from None
+
+    def _port(self, actor: Actor, port: str, direction: str):
+        ports = actor.inputs if direction == "input" else actor.outputs
+        for p in ports:
+            if p.name == port:
+                return p
+        raise GraphError(
+            f"{self.name}: actor {actor.name!r} has no {direction} port "
+            f"{port!r} (its {direction}s: {[p.name for p in ports] or 'none'})"
+        )
 
     def connect(
         self, src: str, dst: str,
         src_port: str = "OUT", dst_port: str = "IN",
         depth: Optional[int] = None,
     ) -> Channel:
-        sa, da = self.actors[src], self.actors[dst]
-        sa.port(src_port)  # validates
-        da.port(dst_port)
+        sa, da = self._actor(src, "source"), self._actor(dst, "destination")
+        sp = self._port(sa, src_port, "output")
+        dp = self._port(da, dst_port, "input")
+        if "object" not in (sp.dtype, dp.dtype) and sp.dtype != dp.dtype:
+            raise GraphError(
+                f"{self.name}: dtype mismatch on {src}.{src_port} "
+                f"({sp.dtype}) -> {dst}.{dst_port} ({dp.dtype}) — tokens are "
+                f"not converted in flight; align the port dtypes"
+            )
         # point-to-point: one writer and one reader per port
         for c in self.channels:
-            assert not (c.src == src and c.src_port == src_port), (
-                f"port {src}.{src_port} already connected"
-            )
-            assert not (c.dst == dst and c.dst_port == dst_port), (
-                f"port {dst}.{dst_port} already connected"
-            )
+            if c.src == src and c.src_port == src_port:
+                raise GraphError(
+                    f"{self.name}: output {src}.{src_port} already feeds "
+                    f"{c.dst}.{c.dst_port} — channels are point-to-point; "
+                    f"use the frontend's tee() for fan-out"
+                )
+            if c.dst == dst and c.dst_port == dst_port:
+                raise GraphError(
+                    f"{self.name}: input {dst}.{dst_port} is already fed by "
+                    f"{c.src}.{c.src_port} — channels are point-to-point; "
+                    f"merge upstream with an explicit actor instead"
+                )
         ch = Channel(src, src_port, dst, dst_port, depth)
         self.channels.append(ch)
         return ch
@@ -80,13 +125,19 @@ class ActorGraph:
     def validate(self) -> None:
         for name, a in self.actors.items():
             for p in a.inputs:
-                assert any(
+                if not any(
                     c.dst == name and c.dst_port == p.name for c in self.channels
-                ), f"unconnected input {name}.{p.name}"
+                ):
+                    raise GraphError(
+                        f"{self.name}: unconnected input {name}.{p.name}"
+                    )
             for p in a.outputs:
-                assert any(
+                if not any(
                     c.src == name and c.src_port == p.name for c in self.channels
-                ), f"unconnected output {name}.{p.name}"
+                ):
+                    raise GraphError(
+                        f"{self.name}: unconnected output {name}.{p.name}"
+                    )
 
     def topo_order(self) -> List[str]:
         """Topological order ignoring back-edges (graph may be cyclic)."""

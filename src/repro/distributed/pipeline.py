@@ -24,8 +24,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # JAX >= 0.7
     shard_map = jax.shard_map
+    _SHMAP_NOCHECK = {"check_vma": False}
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
+
+    _SHMAP_NOCHECK = {"check_rep": False}  # pre-0.7 spelling
 
 PyTree = Any
 
@@ -83,7 +86,7 @@ def gpipe_apply(
         mesh=mesh,
         in_specs=(pspec_params, P()),
         out_specs=P(),
-        check_vma=False,
+        **_SHMAP_NOCHECK,
     )(stage_params, x_micro)
 
 

@@ -1,0 +1,409 @@
+"""One-call compile pipeline: ``repro.compile(net, xcf) -> Program``.
+
+The paper's promise is that *placement is configuration*: the same dataflow
+program runs on host threads, the device partition, or a mix, selected by an
+XCF (§III-A) — recompiling with new directives is the whole design-space
+exploration loop.  ``Program`` makes that loop one method call each:
+
+    prog = repro.compile(net)                  # host-only by default
+    report = prog.run()                        # execute, collect stats
+    prof = prog.profile()                      # MILP inputs (§III-E)
+    points = prog.explore(prof)                # solve the placement MILP
+    best = prog.repartition(points and best_point(points).xcf)
+    best.run()                                 # same graph, new placement
+
+No caller ever touches ``HostRuntime``/``HeteroRuntime``/PLink directly — the
+façade picks the runtime from the XCF (any ``hw`` partition means PLink +
+compiled device program) and rebuilds FIFO depths per configuration, so a
+``repartition`` never mutates or rebuilds the authored network.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Union
+
+from repro.core.graph import ActorGraph
+from repro.core.xcf import XCF, make_xcf
+from repro.frontend.dsl import FrontendError, Network
+from repro.runtime.scheduler import DEFAULT_DEPTH, HeteroRuntime, HostRuntime
+
+BACKENDS = ("auto", "host", "threads", "device")
+
+
+def _as_graph(net: Union[Network, ActorGraph]) -> ActorGraph:
+    if isinstance(net, Network):
+        return net.graph()
+    if isinstance(net, ActorGraph):
+        net.validate()
+        return net
+    raise FrontendError(
+        f"compile() expects a frontend Network or a core ActorGraph, "
+        f"got {type(net).__name__}"
+    )
+
+
+def synthesize_xcf(
+    graph: ActorGraph,
+    backend: str = "host",
+    *,
+    threads: Optional[int] = None,
+    accel: str = "accel",
+) -> XCF:
+    """Produce a placement configuration without running the partitioner.
+
+    ``host``    — every actor on one software thread,
+    ``threads`` — round-robin over ``threads`` software threads (default: one
+                  thread per actor, the paper's "many" corner),
+    ``device``  — every device-eligible actor on the accelerator partition,
+                  IO/host-only actors on one software thread.
+    """
+    if backend == "host":
+        assignment = {a: "t0" for a in graph.actors}
+    elif backend == "threads":
+        order = graph.topo_order()
+        n = len(order) if threads is None else max(1, threads)
+        assignment = {a: f"t{i % n}" for i, a in enumerate(order)}
+    elif backend == "device":
+        eligible = [a for a, act in graph.actors.items() if act.device_ok]
+        if not eligible:
+            reasons = {
+                a: act.host_only_reason or "host-only"
+                for a, act in graph.actors.items()
+            }
+            raise FrontendError(
+                f"backend='device': no device-eligible actors in "
+                f"{graph.name!r} ({reasons})"
+            )
+        assignment = {
+            a: (accel if act.device_ok else "t0")
+            for a, act in graph.actors.items()
+        }
+    else:
+        raise FrontendError(
+            f"unknown backend {backend!r}; choose from {BACKENDS[1:]} "
+            f"or pass an explicit xcf"
+        )
+    return make_xcf(graph.name, assignment, accel=accel)
+
+
+def _load_xcf(xcf: Union[XCF, str, Path]) -> XCF:
+    if isinstance(xcf, (str, Path)):
+        return XCF.load(xcf)
+    if isinstance(xcf, XCF):
+        return xcf
+    raise FrontendError(f"expected an XCF or a path to one, got {type(xcf).__name__}")
+
+
+@dataclass
+class RunReport:
+    """What one ``Program.run()`` observed."""
+
+    network: str
+    backend: str                      # "host(n threads)" | "hetero(accel)"
+    seconds: float
+    fires: int
+    actor_fires: Dict[str, int]
+    actor_tests: Dict[str, int]       # controller condition tests (paper §IV)
+    channel_tokens: Dict[str, int]
+    plink_launches: int = 0
+    plink_tokens_out: int = 0
+
+    @property
+    def tests(self) -> int:
+        return sum(self.actor_tests.values())
+
+    def __str__(self) -> str:
+        extra = (
+            f" plink_launches={self.plink_launches}"
+            if self.plink_launches
+            else ""
+        )
+        return (
+            f"{self.network}: {self.backend} {self.seconds * 1e3:.1f}ms "
+            f"{self.fires} fires{extra}"
+        )
+
+
+class Program:
+    """An executable placement of a dataflow network.
+
+    Immutable pairing of (network, XCF, runtime options); ``repartition``
+    returns a *new* Program over the same network — the authored graph is
+    never rebuilt or mutated by a placement change.
+    """
+
+    def __init__(
+        self,
+        source: Union[Network, ActorGraph],
+        graph: ActorGraph,
+        xcf: XCF,
+        *,
+        controller: str = "am",
+        block: int = 1024,
+        default_depth: int = DEFAULT_DEPTH,
+        max_execs_per_invoke: int = 10_000,
+        _authored_depths: Optional[Dict] = None,
+    ):
+        xcf.validate(graph)
+        self._source = source
+        self._graph = graph
+        self._xcf = xcf
+        self._opts = dict(
+            controller=controller,
+            block=block,
+            default_depth=default_depth,
+            max_execs_per_invoke=max_execs_per_invoke,
+        )
+        # Authored depths: applied before, and restored after, every runtime
+        # build so per-XCF depth overrides never leak between placements.
+        # repartition() threads the original snapshot through because the
+        # shared graph may be observed mid-build by concurrent snapshots.
+        self._authored_depths = dict(
+            _authored_depths
+            if _authored_depths is not None
+            else {ch.key: ch.depth for ch in graph.channels}
+        )
+        # jitted device partition, built lazily and reused across run() calls
+        # (the (graph, xcf, opts) triple is fixed for this Program's lifetime)
+        self._device_program = None
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def graph(self) -> ActorGraph:
+        return self._graph
+
+    @property
+    def network(self) -> Optional[Network]:
+        return self._source if isinstance(self._source, Network) else None
+
+    @property
+    def xcf(self) -> XCF:
+        return self._xcf
+
+    @property
+    def hw_partition(self) -> Optional[str]:
+        hw = [p for p, spec in self._xcf.partitions.items()
+              if spec.code_generator == "hw"]
+        if len(hw) > 1:
+            raise FrontendError(
+                f"XCF for {self._graph.name!r} declares {len(hw)} hw "
+                f"partitions; the runtime supports one device partition"
+            )
+        return hw[0] if hw else None
+
+    def describe(self) -> str:
+        asg = self._xcf.assignment()
+        lines = [f"Program {self._graph.name}"]
+        for pid, spec in sorted(self._xcf.partitions.items()):
+            lines.append(
+                f"  {pid} [{spec.code_generator}/{spec.pe}]: "
+                f"{', '.join(sorted(a for a, p in asg.items() if p == pid))}"
+            )
+        return "\n".join(lines)
+
+    # -- execution -------------------------------------------------------------
+    def _build_runtime(self):
+        depths = self._xcf.fifo_depths()
+        for ch in self._graph.channels:
+            object.__setattr__(
+                ch, "depth", depths.get(ch.key, self._authored_depths[ch.key])
+            )
+        asg = self._xcf.assignment()
+        accel = self.hw_partition
+        try:
+            if accel is not None:
+                rt = HeteroRuntime(
+                    self._graph,
+                    asg,
+                    accel=accel,
+                    block=self._opts["block"],
+                    controller=self._opts["controller"],
+                    default_depth=self._opts["default_depth"],
+                    max_execs_per_invoke=self._opts["max_execs_per_invoke"],
+                    program=self._device_program,
+                )
+                # reuse the jitted device partition on subsequent runs
+                self._device_program = rt.program
+            else:
+                rt = HostRuntime(
+                    self._graph,
+                    asg,
+                    controller=self._opts["controller"],
+                    default_depth=self._opts["default_depth"],
+                    max_execs_per_invoke=self._opts["max_execs_per_invoke"],
+                )
+        finally:
+            # leave the shared graph with its authored depths: Channel objects
+            # outlive this Program (repartition / fresh compiles re-snapshot)
+            for ch in self._graph.channels:
+                object.__setattr__(ch, "depth", self._authored_depths[ch.key])
+        return rt
+
+    def _reset_collectors(self) -> None:
+        if isinstance(self._source, Network):
+            for lst in self._source.collectors:
+                lst.clear()
+
+    def run(
+        self,
+        *,
+        threaded: Optional[bool] = None,
+        reset_collectors: bool = True,
+    ) -> RunReport:
+        """Execute to quiescence on the placement the XCF describes."""
+        if reset_collectors:
+            self._reset_collectors()
+        rt = self._build_runtime()
+        hetero = isinstance(rt, HeteroRuntime)
+        t0 = time.perf_counter()
+        if hetero:
+            rt.run_threads()
+        elif threaded is None:
+            rt.run()
+        elif threaded:
+            rt.run_threads()
+        else:
+            rt.run_single()
+        seconds = time.perf_counter() - t0
+        n_sw = len(rt.partitions)
+        backend = (
+            f"hetero({self.hw_partition}+{n_sw}thr)" if hetero
+            else f"host({n_sw}thr)"
+        )
+        return RunReport(
+            network=self._graph.name,
+            backend=backend,
+            seconds=seconds,
+            fires=rt.total_fires(),
+            actor_fires={a: p.fires for a, p in rt.profiles.items()},
+            actor_tests={a: p.tests for a, p in rt.profiles.items()},
+            channel_tokens=rt.channel_tokens(),
+            plink_launches=rt.plink.stats.launches if hetero else 0,
+            plink_tokens_out=rt.plink.stats.tokens_out if hetero else 0,
+        )
+
+    # -- the recompile-with-directives loop ------------------------------------
+    def repartition(
+        self,
+        xcf: Optional[Union[XCF, str, Path]] = None,
+        *,
+        backend: Optional[str] = None,
+        threads: Optional[int] = None,
+    ) -> "Program":
+        """Same network, new placement — the paper's "change the directives
+        and recompile" as one call.  Pass an XCF (object or path) or a
+        synthesized corner via ``backend=``."""
+        if (xcf is None) == (backend is None):
+            raise FrontendError(
+                "repartition() takes exactly one of xcf= or backend="
+            )
+        new = (
+            synthesize_xcf(self._graph, backend, threads=threads)
+            if backend is not None
+            else _load_xcf(xcf)
+        )
+        return Program(
+            self._source, self._graph, new,
+            _authored_depths=self._authored_depths, **self._opts,
+        )
+
+    def profile(
+        self,
+        *,
+        block: int = 2048,
+        include_device: bool = True,
+        include_links: bool = True,
+        bandwidth_sizes=(256, 2048),
+    ):
+        """Measure the MILP's inputs (§III-E): per-actor sw/hw times, channel
+        token counts, and link models.  Returns a ``NetworkProfile``."""
+        import os
+
+        from repro.core.profiler import (
+            measure_fifo_bandwidth,
+            profile_device,
+            profile_host,
+        )
+
+        self._reset_collectors()
+        prof, _rt = profile_host(
+            self._graph, controller=self._opts["controller"]
+        )
+        if include_device:
+            prof = profile_device(self._graph, prof, block=block)
+        if include_links:
+            intra, _ = measure_fifo_bandwidth(
+                cross_thread=False, sizes=bandwidth_sizes
+            )
+            inter, _ = measure_fifo_bandwidth(
+                cross_thread=True, sizes=bandwidth_sizes
+            )
+            prof.links["intra"], prof.links["inter"] = intra, inter
+        prof.n_cores = os.cpu_count()
+        self._reset_collectors()
+        return prof
+
+    def explore(
+        self,
+        prof=None,
+        *,
+        thread_counts=(1, 2, 3),
+        accel_options=(False, True),
+        **explore_kw,
+    ):
+        """Profile (if needed) and solve the placement MILP across the
+        (thread-count x accelerator) grid; returns the design points."""
+        from repro.core.partitioner import explore as _explore
+
+        if prof is None:
+            prof = self.profile()
+        return _explore(
+            self._graph, prof,
+            thread_counts=thread_counts, accel_options=accel_options,
+            **explore_kw,
+        )
+
+
+def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
+    net: Union[Network, ActorGraph],
+    xcf: Optional[Union[XCF, str, Path]] = None,
+    *,
+    backend: str = "auto",
+    threads: Optional[int] = None,
+    controller: str = "am",
+    block: int = 1024,
+    default_depth: int = DEFAULT_DEPTH,
+    max_execs_per_invoke: int = 10_000,
+) -> Program:
+    """Compile a dataflow network into an executable ``Program``.
+
+    Placement comes from ``xcf`` when given (object or path — the partitioner's
+    output slots straight in); otherwise from ``backend``: ``"auto"``/``"host"``
+    (one software thread), ``"threads"`` (round-robin over ``threads`` threads,
+    default one per actor), or ``"device"`` (device-eligible actors on the
+    accelerator behind a PLink).
+    """
+    graph = _as_graph(net)
+    if xcf is not None:
+        if backend != "auto":
+            raise FrontendError(
+                f"pass xcf= or backend={backend!r}, not both — the XCF already "
+                f"fixes the placement"
+            )
+        resolved = _load_xcf(xcf)
+    else:
+        resolved = synthesize_xcf(
+            graph, "host" if backend == "auto" else backend, threads=threads
+        )
+    return Program(
+        net,
+        graph,
+        resolved,
+        controller=controller,
+        block=block,
+        default_depth=default_depth,
+        max_execs_per_invoke=max_execs_per_invoke,
+    )

@@ -16,6 +16,7 @@ Double buffering: one step can be in flight while the next block is staged.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -25,8 +26,40 @@ import numpy as np
 
 from repro.runtime.device_runtime import DeviceProgram
 
+try:
+    from ml_dtypes import bfloat16 as _BF16
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    _BF16 = None
+
 _NP_DTYPE = {"float32": np.float32, "int32": np.int32, "float64": np.float64,
-             "bfloat16": np.float32, "object": np.float32}
+             "object": np.float32}
+if _BF16 is not None:
+    _NP_DTYPE["bfloat16"] = _BF16
+
+_warned_bf16 = False
+
+
+def _np_dtype(dt: str):
+    """Numpy dtype for a port's token type at the host/device boundary.
+
+    bfloat16 stages as a true bfloat16 buffer (via ml_dtypes) so host-device
+    transfers move 2 bytes/token; without ml_dtypes we fall back to float32 and
+    warn once, because silently widening doubles PCIe traffic and changes
+    rounding.
+    """
+    global _warned_bf16
+    if dt == "bfloat16" and _BF16 is None:
+        if not _warned_bf16:
+            _warned_bf16 = True
+            warnings.warn(
+                "ml_dtypes is not installed: staging bfloat16 channels as "
+                "float32 (2x transfer volume, different rounding). "
+                "Install ml_dtypes for true bfloat16 host buffers.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return np.float32
+    return _NP_DTYPE.get(dt, np.float32)
 
 
 @dataclass
@@ -71,7 +104,7 @@ class PLink:
             ep = self.env.inputs[f"{a}.{p}"]
             n = min(ep.count(), block)
             vals = ep.read(n) if n else ()
-            arr = np.zeros((block,), _NP_DTYPE.get(dt, np.float32))
+            arr = np.zeros((block,), _np_dtype(dt))
             mask = np.zeros((block,), bool)
             if n:
                 arr[:n] = np.asarray(vals, dtype=arr.dtype)
@@ -100,6 +133,13 @@ class PLink:
         return moved
 
     # -- scheduler contract ------------------------------------------------------
+    @property
+    def pending(self) -> bool:
+        """True while a device step is in flight — the scheduler must not
+        declare quiescence until the step retires (its outputs may wake
+        downstream actors)."""
+        return self.inflight is not None
+
     def invoke(self, max_execs: int = 1) -> int:
         progress = 0
         # 1) retire a completed in-flight step without blocking

@@ -83,6 +83,11 @@ class ThreadPartition:
         self.post_fire()
         return e
 
+    def has_pending_async(self) -> bool:
+        """True if any instance (e.g. a PLink) has an async step in flight
+        whose retirement may still move tokens."""
+        return any(getattr(inst, "pending", False) for inst in self.instances)
+
 
 class HostRuntime:
     """Builds FIFOs + actor machines from a graph and an actor→thread mapping."""
@@ -151,12 +156,26 @@ class HostRuntime:
             execs = sum(p.run_round() for p in parts)
             total += execs
             if execs == 0:
+                pending = any(p.has_pending_async() for p in parts)
                 moved = any(f.unpublished for f in self.fifos.values())
-                if not moved:
+                if not moved and not pending:
                     break
+                if pending:  # let the in-flight device step complete
+                    time.sleep(0.0002)
         return total
 
     # ------------------------------------------------------------------ threads --
+    def _safe_round(self, part: ThreadPartition) -> Optional[int]:
+        """Run one round; on error record it, trigger termination, return None."""
+        try:
+            return part.run_round()
+        except BaseException as e:  # noqa: BLE001 — surface to run_threads
+            with self._cv:
+                self._thread_error = e
+                self._terminate = True
+                self._cv.notify_all()
+            return None
+
     def _thread_main(self, part: ThreadPartition, core: Optional[int]) -> None:
         if core is not None and hasattr(os, "sched_setaffinity"):
             try:
@@ -167,13 +186,8 @@ class HostRuntime:
             with self._cv:
                 if self._terminate:
                     return
-            try:
-                execs = part.run_round()
-            except BaseException as e:  # noqa: BLE001 — surface to run_threads
-                with self._cv:
-                    self._thread_error = e
-                    self._terminate = True
-                    self._cv.notify_all()
+            execs = self._safe_round(part)
+            if execs is None:
                 return
             if execs:
                 with self._cv:
@@ -184,11 +198,38 @@ class HostRuntime:
             # progress count.  Terminate only when every thread has completed a
             # no-progress round at the *same* progress count — any token movement
             # bumps progress and invalidates all stamps.
+            #
+            # The stamp must come from a round whose pre-fire FIFO snapshot
+            # happened *after* the progress count was read: a publish by another
+            # thread can land between this thread's snapshot and its stamp, and
+            # stamping the post-publish count against a pre-publish snapshot
+            # terminates the network with tokens still in flight.  So capture
+            # the count first, run a verification round, and stamp only if the
+            # count is unchanged.
             with self._cv:
                 if self._terminate:
                     return
-                self._quiet[part.name] = self._progress
-                if all(q == self._progress for q in self._quiet.values()):
+                if part.has_pending_async():
+                    # An async device step is still in flight: its retirement
+                    # will produce/consume tokens, so this thread is not quiet.
+                    self._cv.wait(timeout=0.001)
+                    continue
+                p0 = self._progress
+            execs = self._safe_round(part)
+            if execs is None:
+                return
+            if execs:
+                with self._cv:
+                    self._progress += execs
+                    self._cv.notify_all()
+                continue
+            with self._cv:
+                if self._terminate:
+                    return
+                if self._progress != p0 or part.has_pending_async():
+                    continue  # something moved (or launched) — not quiet
+                self._quiet[part.name] = p0
+                if all(q == p0 for q in self._quiet.values()):
                     self._terminate = True
                     self._cv.notify_all()
                     return
@@ -233,21 +274,33 @@ class HostRuntime:
 
 def runtime_from_xcf(graph: ActorGraph, xcf, **kw):
     """Build the right runtime (host-only or heterogeneous) from an XCF
-    configuration — the paper's flow: partitioning is a config artifact."""
+    configuration — the paper's flow: partitioning is a config artifact.
+
+    Legacy entry point; ``repro.compile(graph, xcf)`` is the supported
+    surface (it additionally caches the jitted device partition across runs).
+    """
     xcf.validate(graph)
     assignment = xcf.assignment()
     hw = {
         pid for pid, p in xcf.partitions.items() if p.code_generator == "hw"
     }
-    assert len(hw) <= 1, "one device partition per XCF (paper §III-D)"
+    if len(hw) > 1:
+        raise ValueError("one device partition per XCF (paper §III-D)")
     depths = xcf.fifo_depths()
+    saved = {ch.key: ch.depth for ch in graph.channels}
     for ch in graph.channels:
         if ch.key in depths:
             object.__setattr__(ch, "depth", depths[ch.key])
-    if hw:
-        accel = next(iter(hw))
-        return HeteroRuntime(graph, assignment, accel=accel, **kw)
-    return HostRuntime(graph, assignment, **kw)
+    try:
+        if hw:
+            accel = next(iter(hw))
+            return HeteroRuntime(graph, assignment, accel=accel, **kw)
+        return HostRuntime(graph, assignment, **kw)
+    finally:
+        # FIFOs capture their capacity at construction; leave the shared
+        # graph's authored depths untouched for later (re)compiles
+        for ch in graph.channels:
+            object.__setattr__(ch, "depth", saved[ch.key])
 
 
 class HeteroRuntime(HostRuntime):
@@ -270,6 +323,7 @@ class HeteroRuntime(HostRuntime):
         controller: str = "am",
         default_depth: int = DEFAULT_DEPTH,
         max_execs_per_invoke: int = 10_000,
+        program=None,  # prebuilt DeviceProgram for this partition (else compiled)
     ):
         from repro.core.actor import Actor as _Actor
         from repro.core.graph import ActorGraph as _AG
@@ -356,7 +410,14 @@ class HeteroRuntime(HostRuntime):
             self.partitions[host_map[name]].instances.append(inst)
             self.profiles[name] = ActorProfile()
 
-        self.program = compile_partition(
+        if program is not None and (
+            program.actors != device_actors or program.block != block
+        ):
+            raise ValueError(
+                f"prebuilt device program covers {program.actors} @block="
+                f"{program.block}, mapping needs {device_actors} @block={block}"
+            )
+        self.program = program or compile_partition(
             graph, device_actors, block=block, name=accel
         )
         self.plink = PLink(self.program, PortEnv(plink_in, plink_out))

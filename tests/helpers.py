@@ -1,11 +1,57 @@
-"""Shared test fixtures: the paper's TopFilter network and friends."""
+"""Shared test fixtures: the paper's TopFilter network and friends.
+
+Also provides an optional-``hypothesis`` shim: modules that mix example-based
+and property-based tests import ``given``/``settings``/``st`` from here, so a
+missing ``hypothesis`` degrades the property tests to skips instead of failing
+the whole module at collection (install via requirements-dev.txt).
+"""
 
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+import pytest
+
 from repro.core.actor import Actor, Action, Port, simple_actor, sink_actor, source_actor
 from repro.core.graph import ActorGraph
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade property tests to skips
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Stands in for ``hypothesis.strategies`` so strategy expressions at
+        decoration time (``st.lists(st.integers(0, 9)).map(...)``) evaluate."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _Anything()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r requirements-dev.txt)"
+        )
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """jax.sharding.AbstractMesh across the signature change: newer jax takes
+    (axis_sizes, axis_names), 0.4.x takes ((name, size), ...) pairs."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
 
 
 def lcg_values(n: int, mod: int = 100) -> List[int]:

@@ -1,0 +1,270 @@
+"""Verbatim copy of the seed's hand-built Table-I networks (pre-frontend).
+
+Golden reference for tests/test_frontend.py: the DSL-authored networks in
+``repro.apps.streams`` must build an ``ActorGraph`` structurally identical
+(actors, ports, rates, channels, depths) to these hand-wired ones.  Do not
+"modernize" this file — its whole value is staying frozen at the seed API.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.actor import (
+    Action,
+    Actor,
+    Port,
+    simple_actor,
+    sink_actor,
+    source_actor,
+)
+from repro.core.graph import ActorGraph
+
+
+def _lcg_source(g: ActorGraph, n: int, name: str = "source", mod: int = 100):
+    def gen(st):
+        x = st.get("x", 0)
+        return {**st, "x": x + 1}, float((x * 1103515245 + 12345) % mod)
+
+    return g.add(
+        source_actor(name, gen, has_next=lambda st: st.get("x", 0) < n)
+    )
+
+
+def make_topfilter(n: int = 4096, param: float = 50.0) -> Tuple[ActorGraph, List]:
+    g = ActorGraph("TopFilter")
+    _lcg_source(g, n)
+
+    def pred(st, peeked):
+        return peeked["IN"][0] < param
+
+    def vf(state, ins):
+        vals, mask = ins["IN"]
+        return state, {"OUT": (vals, mask & (vals < param))}
+
+    g.add(
+        Actor(
+            "filter",
+            inputs=[Port("IN", "float32")],
+            outputs=[Port("OUT", "float32")],
+            actions=[
+                Action("t0", consumes={"IN": 1}, produces={"OUT": 1},
+                       guard=pred, fire=lambda st, t: (st, {"OUT": [t["IN"][0]]})),
+                Action("t1", consumes={"IN": 1}, fire=lambda st, t: (st, {})),
+            ],
+            vector_fire=vf,
+        )
+    )
+    got: List = []
+    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
+    g.connect("source", "filter")
+    g.connect("filter", "sink")
+    return g, got
+
+
+def make_fir(taps: int = 32, n: int = 4096) -> Tuple[ActorGraph, List]:
+    """Systolic FIR: per-tap MAC actors with x/acc forwarding channels."""
+    g = ActorGraph(f"FIR{taps}")
+    _lcg_source(g, n)
+
+    def seed_fire(st, t):
+        v = t["IN"][0]
+        return st, {"XOUT": [v], "AOUT": [0.0]}
+
+    def seed_vf(state, ins):
+        vals, mask = ins["IN"]
+        import jax.numpy as jnp
+
+        return state, {"XOUT": (vals, mask), "AOUT": (jnp.zeros_like(vals), mask)}
+
+    g.add(Actor("seed", inputs=[Port("IN", "float32")],
+                outputs=[Port("XOUT", "float32"), Port("AOUT", "float32")],
+                actions=[Action("s", consumes={"IN": 1},
+                                produces={"XOUT": 1, "AOUT": 1}, fire=seed_fire)],
+                vector_fire=seed_vf))
+    g.connect("source", "seed", "OUT", "IN")
+    prev = "seed"
+    rng = np.random.default_rng(0)
+    coeffs = rng.normal(size=(taps,)) / taps
+    for i in range(taps):
+        c = float(coeffs[i])
+
+        def mac_fire(st, t, c=c):
+            x = t["XIN"][0]
+            a = t["AIN"][0]
+            return st, {"XOUT": [x], "AOUT": [a + c * x]}
+
+        def mac_vf(state, ins, c=c):
+            xv, xm = ins["XIN"]
+            av, am = ins["AIN"]
+            return state, {"XOUT": (xv, xm), "AOUT": (av + c * xv, am)}
+
+        g.add(Actor(f"mac{i}",
+                    inputs=[Port("XIN", "float32"), Port("AIN", "float32")],
+                    outputs=[Port("XOUT", "float32"), Port("AOUT", "float32")],
+                    actions=[Action("m", consumes={"XIN": 1, "AIN": 1},
+                                    produces={"XOUT": 1, "AOUT": 1},
+                                    fire=mac_fire)],
+                    vector_fire=mac_vf))
+        g.connect(prev, f"mac{i}", "XOUT", "XIN")
+        g.connect(prev, f"mac{i}", "AOUT", "AIN")
+        prev = f"mac{i}"
+    got: List = []
+    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
+    # swallow the x-forward tail
+    g.add(sink_actor("xsink", lambda st, v: st, inp="IN"))
+    g.connect(prev, "sink", "AOUT", "IN")
+    g.connect(prev, "xsink", "XOUT", "IN")
+    return g, got
+
+
+def _ce_actor(name: str, ascending: bool = True) -> Actor:
+    def fire(st, t):
+        a, b = t["IN0"][0], t["IN1"][0]
+        lo, hi = (min(a, b), max(a, b))
+        if not ascending:
+            lo, hi = hi, lo
+        return st, {"OUT0": [lo], "OUT1": [hi]}
+
+    def vf(state, ins, ascending=ascending):
+        import jax.numpy as jnp
+
+        a, am = ins["IN0"]
+        b, bm = ins["IN1"]
+        lo = jnp.minimum(a, b)
+        hi = jnp.maximum(a, b)
+        if not ascending:
+            lo, hi = hi, lo
+        return state, {"OUT0": (lo, am), "OUT1": (hi, bm)}
+
+    return Actor(name,
+                 inputs=[Port("IN0", "float32"), Port("IN1", "float32")],
+                 outputs=[Port("OUT0", "float32"), Port("OUT1", "float32")],
+                 actions=[Action("ce", consumes={"IN0": 1, "IN1": 1},
+                                 produces={"OUT0": 1, "OUT1": 1}, fire=fire)],
+                 vector_fire=vf)
+
+
+def make_bitonic8(n_vectors: int = 512) -> Tuple[ActorGraph, List]:
+    """8-lane bitonic sorting network; tokens stream down 8 wires."""
+    g = ActorGraph("Bitonic8")
+    n = n_vectors * 8
+    _lcg_source(g, n, mod=1000)
+
+    # deal: 8 sequential tokens -> one on each lane
+    def deal_fire(st, t):
+        vals = t["IN"]
+        return st, {f"O{i}": [vals[i]] for i in range(8)}
+
+    g.add(Actor("deal", inputs=[Port("IN", "float32")],
+                outputs=[Port(f"O{i}", "float32") for i in range(8)],
+                actions=[Action("d", consumes={"IN": 8},
+                                produces={f"O{i}": 1 for i in range(8)},
+                                fire=deal_fire)],
+                device_ok=False, host_only_reason="rate conversion at ingest"))
+    g.connect("source", "deal", "OUT", "IN")
+
+    # bitonic network stage structure for 8 lanes (Batcher):
+    wires = {i: ("deal", f"O{i}") for i in range(8)}
+    stage_pairs = [
+        [(0, 1, True), (2, 3, False), (4, 5, True), (6, 7, False)],
+        [(0, 2, True), (1, 3, True), (4, 6, False), (5, 7, False)],
+        [(0, 1, True), (2, 3, True), (4, 5, False), (6, 7, False)],
+        [(0, 4, True), (1, 5, True), (2, 6, True), (3, 7, True)],
+        [(0, 2, True), (1, 3, True), (4, 6, True), (5, 7, True)],
+        [(0, 1, True), (2, 3, True), (4, 5, True), (6, 7, True)],
+    ]
+    k = 0
+    for stage in stage_pairs:
+        for (i, j, asc) in stage:
+            name = f"ce{k}"
+            k += 1
+            g.add(_ce_actor(name, asc))
+            si, pi = wires[i]
+            sj, pj = wires[j]
+            g.connect(si, name, pi, "IN0")
+            g.connect(sj, name, pj, "IN1")
+            wires[i] = (name, "OUT0")
+            wires[j] = (name, "OUT1")
+
+    def merge_fire(st, t):
+        return st, {"OUT": [t[f"I{i}"][0] for i in range(8)]}
+
+    g.add(Actor("merge", inputs=[Port(f"I{i}", "float32") for i in range(8)],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("m", consumes={f"I{i}": 1 for i in range(8)},
+                                produces={"OUT": 8}, fire=merge_fire)],
+                device_ok=False, host_only_reason="rate conversion at egress"))
+    for i in range(8):
+        s, p = wires[i]
+        g.connect(s, "merge", p, f"I{i}")
+    got: List = []
+    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
+    g.connect("merge", "sink", "OUT", "IN")
+    return g, got
+
+
+def make_idct8(n_blocks: int = 512) -> Tuple[ActorGraph, List]:
+    """8-point IDCT network: scale -> idct (8-token SDF matmul actor) -> clip."""
+    g = ActorGraph("IDCT8")
+    n = n_blocks * 8
+    _lcg_source(g, n, mod=256)
+
+    def descale_vf(state, ins):
+        vals, mask = ins["IN"]
+        return state, {"OUT": ((vals - 128.0) / 8.0, mask)}
+
+    g.add(simple_actor("descale", lambda st, v: (st, (v - 128.0) / 8.0),
+                       vector_fire=descale_vf))
+    g.connect("source", "descale")
+
+    basis = np.zeros((8, 8), np.float32)
+    for kk in range(8):
+        for nn in range(8):
+            c = math.sqrt(0.5) if kk == 0 else 1.0
+            basis[kk, nn] = c * math.cos(math.pi * (nn + 0.5) * kk / 8.0) / 2.0
+
+    def idct_fire(st, t):
+        x = np.asarray(t["IN"], np.float32)
+        y = x @ basis
+        return st, {"OUT": [float(v) for v in y]}
+
+    def idct_vf(state, ins):
+        import jax.numpy as jnp
+
+        vals, mask = ins["IN"]
+        blocks = vals.reshape(-1, 8)
+        y = (blocks @ jnp.asarray(basis)).reshape(-1)
+        return state, {"OUT": (y, mask)}
+
+    g.add(Actor("idct", inputs=[Port("IN", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("t", consumes={"IN": 8}, produces={"OUT": 8},
+                                fire=idct_fire)],
+                vector_fire=idct_vf))
+    g.connect("descale", "idct")
+
+    def clip_vf(state, ins):
+        import jax.numpy as jnp
+
+        vals, mask = ins["IN"]
+        return state, {"OUT": (jnp.clip(vals, -256.0, 255.0), mask)}
+
+    g.add(simple_actor("clip", lambda st, v: (st, max(-256.0, min(255.0, v))),
+                       vector_fire=clip_vf))
+    g.connect("idct", "clip")
+    got: List = []
+    g.add(sink_actor("sink", lambda st, v: (got.append(float(v)), st)[1]))
+    g.connect("clip", "sink")
+    return g, got
+
+
+BENCHMARKS = {
+    "TopFilter": make_topfilter,
+    "FIR32": make_fir,
+    "Bitonic8": make_bitonic8,
+    "IDCT8": make_idct8,
+}

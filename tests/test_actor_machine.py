@@ -1,7 +1,7 @@
 """Actor-machine semantics: controller synthesis, priorities, persistence."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.core.actor import Actor, Action, Port
 from repro.core.actor_machine import (

@@ -3,6 +3,9 @@ priorities) the Actor Machine controller is semantically equivalent to the
 re-test-everything basic controller, under any FIFO capacities.  This is the
 MIAM→SIAM soundness claim of the paper (§II-B) checked mechanically."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based suite needs hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.actor import Action, Actor, Port

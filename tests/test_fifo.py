@@ -1,6 +1,6 @@
 """Ring-FIFO invariants (paper §III-C): order, counts, deferred publication."""
 
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.runtime.fifo import RingFifo
 

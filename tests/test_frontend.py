@@ -1,0 +1,363 @@
+"""Frontend: DSL golden-equivalence vs the seed's hand-built networks,
+build-time validation, and the one-Program / many-placements loop."""
+
+import numpy as np
+import pytest
+
+import repro
+import seed_networks
+from repro.apps import streams
+from repro.core.graph import ActorGraph, GraphError
+from repro.core.xcf import make_xcf
+from repro.frontend import FrontendError, action, actor, network
+from repro.runtime.scheduler import HostRuntime
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: DSL-authored == seed hand-wired
+# ---------------------------------------------------------------------------
+
+
+def graph_signature(g: ActorGraph) -> dict:
+    """Structural fingerprint: everything but the callables."""
+    actors = {}
+    for name, a in g.actors.items():
+        actors[name] = dict(
+            inputs=[(p.name, p.dtype) for p in a.inputs],
+            outputs=[(p.name, p.dtype) for p in a.outputs],
+            actions=[
+                (ac.name, tuple(sorted(ac.consumes.items())),
+                 tuple(sorted(ac.produces.items())), ac.guard is not None)
+                for ac in a.actions
+            ],
+            device_ok=a.device_ok,
+            host_only_reason=a.host_only_reason,
+            state=dict(a.initial_state),
+            has_vector_fire=a.vector_fire is not None,
+        )
+    return dict(
+        name=g.name,
+        actors=actors,
+        channels=sorted((c.key, c.depth) for c in g.channels),
+    )
+
+
+GOLDEN = [
+    ("TopFilter", seed_networks.make_topfilter, streams.make_topfilter,
+     dict(n=256)),
+    ("FIR32", seed_networks.make_fir, streams.make_fir, dict(n=256)),
+    ("Bitonic8", seed_networks.make_bitonic8, streams.make_bitonic8,
+     dict(n_vectors=32)),
+    ("IDCT8", seed_networks.make_idct8, streams.make_idct8,
+     dict(n_blocks=32)),
+]
+
+
+@pytest.mark.parametrize("name,seed_factory,dsl_factory,kw",
+                         GOLDEN, ids=[g[0] for g in GOLDEN])
+def test_dsl_graph_structurally_identical_to_seed(
+    name, seed_factory, dsl_factory, kw
+):
+    g_seed, _ = seed_factory(**kw)
+    g_dsl, _ = dsl_factory(**kw)
+    assert graph_signature(g_dsl) == graph_signature(g_seed)
+
+
+@pytest.mark.parametrize("name,seed_factory,dsl_factory,kw",
+                         GOLDEN, ids=[g[0] for g in GOLDEN])
+def test_dsl_network_behaviorally_identical_to_seed(
+    name, seed_factory, dsl_factory, kw
+):
+    g_seed, got_seed = seed_factory(**kw)
+    g_dsl, got_dsl = dsl_factory(**kw)
+    HostRuntime(g_seed, None).run_single()
+    HostRuntime(g_dsl, None).run_single()
+    assert got_seed and got_dsl == got_seed
+
+
+# ---------------------------------------------------------------------------
+# one Program, three placements — outputs identical, selected by XCF alone
+# ---------------------------------------------------------------------------
+
+
+def test_program_host_device_mixed_equivalent():
+    net, got = streams.idct8(48)
+    prog = repro.compile(net, block=128)
+
+    prog.run()
+    host_out = list(got)
+    assert len(host_out) == 48 * 8
+
+    r_dev = prog.repartition(backend="device").run()
+    dev_out = list(got)
+    assert r_dev.plink_launches >= 1
+
+    mixed_xcf = make_xcf(
+        prog.graph.name,
+        {"source": "t0", "descale": "t1", "idct": "accel",
+         "clip": "accel", "sink": "t0"},
+    )
+    r_mix = prog.repartition(mixed_xcf).run()
+    mix_out = list(got)
+    assert r_mix.plink_launches >= 1
+
+    # host path computes in python float64, device partition in f32
+    np.testing.assert_allclose(dev_out, host_out, atol=1e-3)
+    np.testing.assert_allclose(mix_out, host_out, atol=1e-3)
+
+
+def test_program_repeated_runs_reset_collectors():
+    net, got = streams.topfilter(128)
+    prog = repro.compile(net)
+    r1 = prog.run()
+    first = list(got)
+    r2 = prog.run()
+    assert got == first  # not doubled
+    assert r1.fires == r2.fires
+
+
+def test_xcf_depth_overrides_do_not_leak_between_placements():
+    from repro.core.xcf import ConnectionSpec
+
+    net, _ = streams.topfilter(64)
+    prog = repro.compile(net)
+    pinned = make_xcf(
+        "TopFilter", {"source": "t0", "filter": "t1", "sink": "t0"}
+    )
+    pinned.connections.append(ConnectionSpec("source", "OUT", "filter", "IN", 7))
+    a = prog.repartition(pinned)
+    a.run()
+    # a later placement without overrides gets the authored default back
+    rt = a.repartition(backend="host")._build_runtime()
+    assert rt.fifos["source.OUT->filter.IN"].capacity == 4096
+    # and the shared graph is left with its authored depths
+    assert all(c.depth is None for c in prog.graph.channels)
+
+
+def test_device_program_reused_across_runs():
+    net, got = streams.idct8(16)
+    prog = repro.compile(net, block=64).repartition(backend="device")
+    prog.run()
+    first = list(got)
+    jitted = prog._device_program
+    assert jitted is not None
+    prog.run()
+    assert prog._device_program is jitted  # no re-jit
+    assert list(got) == first
+
+
+def test_program_threads_backend_matches_host():
+    net, got = streams.topfilter(256)
+    host_out_ref = None
+    for backend in ("host", "threads"):
+        repro.compile(net, backend=backend).run()
+        if host_out_ref is None:
+            host_out_ref = list(got)
+        else:
+            assert got == host_out_ref
+
+
+def test_program_from_xcf_file_roundtrip(tmp_path):
+    net, got = streams.topfilter(200)
+    prog = repro.compile(net)
+    xcf = prog.repartition(backend="device").xcf
+    p = tmp_path / "placement.json"
+    xcf.save(p)
+    r = repro.compile(net, str(p)).run()   # path, not object
+    assert r.plink_launches >= 1
+    assert len(got) > 0
+
+
+def test_compile_rejects_xcf_plus_backend():
+    net, _ = streams.topfilter(16)
+    xcf = make_xcf("TopFilter", {"source": "t0", "filter": "t0", "sink": "t0"})
+    with pytest.raises(FrontendError):
+        repro.compile(net, xcf, backend="device")
+
+
+def test_run_report_contents():
+    net, got = streams.topfilter(100)
+    r = repro.compile(net).run()
+    assert r.network == "TopFilter"
+    assert r.actor_fires["source"] == 100
+    assert r.actor_fires["filter"] == 100
+    assert r.channel_tokens["source.OUT->filter.IN"] == 100
+    assert r.fires == sum(r.actor_fires.values())
+    assert "host" in r.backend and "TopFilter" in str(r)
+
+
+def test_program_profile_and_explore():
+    net, _ = streams.topfilter(600)
+    prog = repro.compile(net, block=256)
+    prof = prog.profile(block=256, include_links=False)
+    assert prof.exec_sw["filter"] > 0
+    assert prof.exec_hw  # the filter is device-eligible
+    points = prog.explore(
+        prof, thread_counts=(1, 2), accel_options=(False, True)
+    )
+    assert points
+    best = min(points, key=lambda p: p.predicted)
+    report = prog.repartition(best.xcf).run()
+    assert report.seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# DSL build-time validation
+# ---------------------------------------------------------------------------
+
+
+def _mini_net():
+    net = network("mini")
+    src = net.source("src", lambda st: (st, None))
+    snk = net.sink("snk")
+    return net, src, snk
+
+
+def test_unknown_port_is_attribute_error_listing_ports():
+    net, src, snk = _mini_net()
+    with pytest.raises(AttributeError, match="OUT"):
+        src.NOPE
+    with pytest.raises(FrontendError, match="no port"):
+        src.port("NOPE")
+
+
+def test_direction_checked():
+    net, src, snk = _mini_net()
+    with pytest.raises(FrontendError, match="input port"):
+        net.connect(snk.IN, src.OUT)
+
+
+def test_dtype_mismatch_rejected():
+    net = network("dt")
+    a = net.source("a", lambda st: (st, None), dtype="float32")
+    b = net.sink("b", dtype="int32")
+    with pytest.raises(GraphError, match="dtype mismatch"):
+        a.OUT >> b.IN
+
+
+def test_double_connect_rejected_at_build_time():
+    net, src, snk = _mini_net()
+    src >> snk
+    other = net.sink("other")
+    with pytest.raises(GraphError, match="point-to-point"):
+        src.OUT >> other.IN
+
+
+def test_cross_network_wiring_rejected():
+    net1, src1, _ = _mini_net()
+    net2 = network("other")
+    snk2 = net2.sink("snk2")
+    with pytest.raises(FrontendError, match="cannot be wired across"):
+        net1.connect(src1.OUT, snk2.IN)
+
+
+def test_incomplete_network_fails_at_graph_build():
+    net = network("dangling")
+    net.source("src", lambda st: (st, None))  # OUT never connected
+    with pytest.raises(FrontendError, match="incomplete"):
+        net.graph()
+
+
+def test_actor_decorator_rejects_unknown_rate_ports():
+    with pytest.raises(FrontendError, match="unknown input"):
+        @actor(inputs={"IN": "float32"})
+        class Bad:
+            @action(consumes={"TYPO": 1})
+            def f(st, t):
+                return st, {}
+
+
+def test_tee_fans_out_and_stays_point_to_point():
+    net = network("fan")
+    vals = iter(range(5))
+
+    def gen(st):
+        x = st.get("x", 0)
+        return {**st, "x": x + 1}, float(x)
+
+    src = net.source("src", gen, has_next=lambda st: st.get("x", 0) < 5)
+    got_a, got_b = [], []
+    a = net.sink("a", collect=got_a)
+    b = net.sink("b", collect=got_b)
+    tee = net.tee(src.OUT, a.IN, b.IN)
+    assert tee.name == "src_OUT_tee"
+    g = net.graph()
+    HostRuntime(g, None).run_single()
+    assert got_a == got_b == [0.0, 1.0, 2.0, 3.0, 4.0]
+
+
+def test_tee_requires_two_destinations():
+    net, src, snk = _mini_net()
+    with pytest.raises(FrontendError, match="at least two"):
+        net.tee(src.OUT, snk.IN)
+
+
+# ---------------------------------------------------------------------------
+# legacy ActorGraph API keeps (and gains) the same checks
+# ---------------------------------------------------------------------------
+
+
+def test_graph_connect_unknown_actor_actionable():
+    g = ActorGraph("g")
+    with pytest.raises(GraphError, match="unknown actor 'nope'"):
+        g.connect("nope", "also_missing")
+
+
+def test_graph_connect_unknown_port_actionable():
+    from repro.core.actor import simple_actor, sink_actor
+
+    g = ActorGraph("g")
+    g.add(simple_actor("a", lambda st, v: (st, v)))
+    g.add(sink_actor("b", lambda st, v: st))
+    with pytest.raises(GraphError, match="no output port 'TYPO'"):
+        g.connect("a", "b", "TYPO", "IN")
+
+
+def test_graph_duplicate_destination_rejected():
+    from repro.core.actor import simple_actor, sink_actor
+
+    g = ActorGraph("g")
+    g.add(simple_actor("a", lambda st, v: (st, v)))
+    g.add(simple_actor("c", lambda st, v: (st, v)))
+    g.add(sink_actor("b", lambda st, v: st))
+    g.connect("a", "b")
+    with pytest.raises(GraphError, match="already fed by"):
+        g.connect("c", "b")
+
+
+def test_legacy_graph_still_compiles_through_facade():
+    """A hand-built ActorGraph (no DSL) goes straight into repro.compile."""
+    from helpers import make_topfilter, topfilter_expected
+
+    g, got = make_topfilter(n=300)
+    r = repro.compile(g).run()
+    assert got == topfilter_expected(n=300)
+    assert r.fires > 0
+
+
+# ---------------------------------------------------------------------------
+# plink dtype staging (satellite: bfloat16)
+# ---------------------------------------------------------------------------
+
+
+def test_plink_bfloat16_uses_ml_dtypes_when_available():
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    from repro.runtime import plink
+
+    assert plink._np_dtype("bfloat16") == ml_dtypes.bfloat16
+    assert plink._np_dtype("float32") == np.float32
+
+
+def test_plink_bfloat16_fallback_warns_once(monkeypatch):
+    from repro.runtime import plink
+
+    monkeypatch.setattr(plink, "_BF16", None)
+    monkeypatch.setattr(plink, "_warned_bf16", False)
+    with pytest.warns(RuntimeWarning, match="bfloat16"):
+        assert plink._np_dtype("bfloat16") == np.float32
+    # second call is silent
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert plink._np_dtype("bfloat16") == np.float32

@@ -69,12 +69,14 @@ def test_elastic_remesh_restore(tmp_path):
 
 
 def test_full_dp_rules_structure():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     from repro.configs import get_config
     from repro.distributed.sharding import full_dp_rules, make_pspec
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    from helpers import abstract_mesh
+
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     cfg = get_config("mamba2-130m")
     rules = full_dp_rules(cfg, mesh)
     # batch shards over both axes; nothing else touches the model axis

@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.core.cost_model import LinkModel, NetworkProfile, evaluate
 from repro.core.graph import ActorGraph

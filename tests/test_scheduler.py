@@ -3,7 +3,7 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.runtime.scheduler import HeteroRuntime, HostRuntime
 

@@ -13,9 +13,9 @@ def mesh():
     # single-device 'mesh' with named axes of size 1 won't exercise divisibility,
     # so fabricate an abstract mesh via jax.sharding.Mesh over a reshaped device
     # list is impossible with 1 CPU; use AbstractMesh instead.
-    from jax.sharding import AbstractMesh
+    from helpers import abstract_mesh
 
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_divisible_dims_shard(mesh):
@@ -35,9 +35,9 @@ def test_axis_used_once(mesh):
 
 
 def test_batch_pod_suffix_drop():
-    from jax.sharding import AbstractMesh
+    from helpers import abstract_mesh
 
-    m3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    m3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     rules = dict(BASE_RULES)
     # batch=32 divides pod*data=32 exactly
     assert make_pspec(("batch",), (32,), m3, rules) == P(("pod", "data"))

@@ -46,13 +46,15 @@ SCRIPT = textwrap.dedent(
     from repro.distributed.compression import all_reduce_int8
     try:
         shard_map = jax.shard_map
+        nocheck = {"check_vma": False}
     except AttributeError:
         from jax.experimental.shard_map import shard_map
+        nocheck = {"check_rep": False}
     mesh2 = jax.make_mesh((8,), ("d",))
     y = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 128))
     f = shard_map(lambda a: all_reduce_int8(a[0], "d")[None],
                   mesh=mesh2, in_specs=P("d"), out_specs=P("d"),
-                  check_vma=False)
+                  **nocheck)
     with mesh2:
         red = f(y)
     true = jnp.sum(y, 0, keepdims=True)
