@@ -1,15 +1,30 @@
-"""Shared benchmark plumbing."""
+"""Shared benchmark plumbing.
+
+``emit`` prints the CSV row *and* records it in ``RECORDS`` so the harness
+(``benchmarks/run.py``) can serialize every suite's numbers into
+``BENCH_streams.json`` — the machine-readable perf trajectory tracked across
+PRs.  ``smoke_scale`` lets CI run the suites at a fraction of the full token
+counts (``BENCH_SMOKE=1``).
+"""
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 from pathlib import Path
+from typing import Dict, List
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+# every emit() of the current process, in order: {"name", "us_per_call", "derived"}
+RECORDS: List[Dict] = []
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RECORDS.append(
+        {"name": name, "us_per_call": us_per_call, "derived": derived}
+    )
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
@@ -17,3 +32,10 @@ def wall(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return time.perf_counter() - t0, out
+
+
+def smoke_scale(sizes: Dict[str, int], factor: int = 10) -> Dict[str, int]:
+    """Shrink workload sizes by ``factor`` when BENCH_SMOKE is set (CI)."""
+    if not os.environ.get("BENCH_SMOKE"):
+        return sizes
+    return {k: max(8, v // factor) for k, v in sizes.items()}

@@ -1,12 +1,17 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Run as
-``PYTHONPATH=src python -m benchmarks.run`` (all) or with a subset:
-``... -m benchmarks.run roofline am_vs_basic``.
+Prints ``name,us_per_call,derived`` CSV rows and, at the end, writes
+``BENCH_streams.json`` — the machine-readable per-suite numbers (plus the
+fused-vs-unfused device-step comparison) used to track the perf trajectory
+across PRs.  Run as ``PYTHONPATH=src python -m benchmarks.run`` (all) or with
+a subset: ``... -m benchmarks.run roofline am_vs_basic``.  Set
+``BENCH_SMOKE=1`` to shrink workloads ~10x (CI smoke mode).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
@@ -14,6 +19,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import _util
 
 SUITES = [
     ("am_vs_basic", "table_am_vs_basic"),   # §IV: AM vs basic controller
@@ -25,22 +32,61 @@ SUITES = [
     ("roofline", "roofline"),               # §Roofline from dry-run artifacts
 ]
 
+JSON_PATH = Path(os.environ.get("BENCH_JSON", "BENCH_streams.json"))
+
+
+def _device_step_summary(rows):
+    """Pull the fused/unfused device-step rows out of the table1 suite."""
+    per_net = {}
+    for r in rows:
+        parts = r["name"].split("/")
+        if len(parts) != 3 or not parts[2].startswith("device_step_"):
+            continue
+        net, metric = parts[1], parts[2][len("device_step_"):]
+        if metric in ("fused", "unfused", "fused_opt2"):
+            per_net.setdefault(net, {})[f"{metric}_us"] = r["us_per_call"]
+    for net, d in per_net.items():
+        if "fused_us" in d and "unfused_us" in d and d["fused_us"] > 0:
+            d["speedup"] = d["unfused_us"] / d["fused_us"]
+        if "fused_opt2_us" in d and "unfused_us" in d and d["fused_opt2_us"] > 0:
+            d["speedup_opt2"] = d["unfused_us"] / d["fused_opt2_us"]
+    return per_net
+
 
 def main() -> None:
     wanted = set(sys.argv[1:])
     failures = 0
+    suites = {}
     for tag, module in SUITES:
         if wanted and tag not in wanted:
             continue
         print(f"# --- {tag} ({module}) ---", flush=True)
         t0 = time.time()
+        mark = len(_util.RECORDS)
         try:
             mod = __import__(module)
             mod.main()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# {tag} FAILED:\n{traceback.format_exc()}", flush=True)
-        print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+        dt = time.time() - t0
+        suites[tag] = {
+            "seconds": round(dt, 3),
+            "rows": _util.RECORDS[mark:],
+        }
+        print(f"# {tag} done in {dt:.1f}s", flush=True)
+
+    payload = {
+        "generated_unix": int(time.time()),
+        "smoke": bool(os.environ.get("BENCH_SMOKE")),
+        "suites": suites,
+        "device_step": _device_step_summary(
+            suites.get("table1", {}).get("rows", [])
+        ),
+        "failures": failures,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=1))
+    print(f"# wrote {JSON_PATH} ({len(_util.RECORDS)} rows)", flush=True)
     if failures:
         sys.exit(1)
 

@@ -6,22 +6,79 @@ jitted XLA program (this container's accelerator stand-in).
 Each network is compiled once via the frontend; the corners are pure
 ``repartition`` calls — placement is configuration, not code.
 
+Also measures the *device partition step* in isolation, fused vs unfused:
+the middle-end's SDF region fusion collapses each static-rate chain into one
+fused kernel (``repro.ir.passes.FuseSDFRegions``), and this is where that
+shows up as µs/call.  Rows land in BENCH_streams.json via the harness.
+
 Reproduces the paper's qualitative findings: thread-per-actor frequently *hurts*
 (scheduling + cross-thread FIFO cost), and all-hardware is not always best.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Dict
 
-from _util import emit
+from _util import emit, smoke_scale
 
 import repro
 from repro.apps.streams import NETWORKS
 from repro.frontend import FrontendError
 
-SIZES = {"TopFilter": 40000, "FIR32": 8000, "Bitonic8": 1500, "IDCT8": 1500}
+SIZES = smoke_scale(
+    {"TopFilter": 40000, "FIR32": 8000, "Bitonic8": 1500, "IDCT8": 1500}
+)
 CORNERS = {"hardware": "device", "single": "host", "many": "threads"}
+BLOCK = 4096
+
+
+def bench_device_steps(
+    progs: Dict[str, object], *, warmup: int = 5, iters: int = 40,
+    repeats: int = 12,
+) -> Dict[str, float]:
+    """µs per jitted device-partition step call for several compiled
+    variants of the same network, full valid block staged.
+
+    Batches are round-robined across the variants and the per-variant
+    minimum is kept: host load drift then hits every variant equally
+    instead of masquerading as a fusion effect, and the min is the stable
+    estimator of each program's actual cost."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    runs = {}
+    for tag, prog in progs.items():
+        dp = prog.device_program()
+        if dp is None:
+            continue
+        rng = np.random.default_rng(0)
+        ins = {
+            f"{a}.{p}": (
+                jnp.asarray(rng.random(dp.block).astype(np.float32) * 100.0),
+                jnp.ones((dp.block,), bool),
+            )
+            for (a, p, _dt) in dp.in_ports
+        }
+        state = dp.init_state
+        for _ in range(warmup):
+            state, outs, idle = dp.step(state, ins)
+            jax.block_until_ready(outs)
+        runs[tag] = [dp, state, ins]
+    best = {tag: float("inf") for tag in runs}
+    for _ in range(repeats):
+        for tag, slot in runs.items():
+            dp, state, ins = slot
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                state, outs, idle = dp.step(state, ins)
+            jax.block_until_ready((outs, idle))
+            best[tag] = min(
+                best[tag], (time.perf_counter() - t0) * 1e6 / iters
+            )
+            slot[1] = state
+    return best
 
 
 def main() -> None:
@@ -29,7 +86,7 @@ def main() -> None:
         size = SIZES[name]
         net, got = builder(size) if name != "FIR32" else builder(n=size)
         tokens = size if name in ("TopFilter", "FIR32") else size * 8
-        prog = repro.compile(net, block=4096)
+        prog = repro.compile(net, block=BLOCK)
         row: Dict[str, float] = {}
         for corner, backend in CORNERS.items():
             try:
@@ -49,6 +106,42 @@ def main() -> None:
                 0.0,
                 f"{row['single'] / row['hardware']:.2f}x",
             )
+
+        # fused vs unfused device partition step (the middle-end's win).
+        # Variants are measured in interleaved rounds so slow drift on a
+        # shared host (CI) cannot masquerade as a fusion effect.
+        try:
+            variants = {
+                "fused": repro.compile(net, backend="device", block=BLOCK),
+                "unfused": repro.compile(
+                    net, backend="device", block=BLOCK, fuse=False
+                ),
+                "fused_opt2": repro.compile(
+                    net, backend="device", block=BLOCK, opt_level=2
+                ),
+            }
+        except FrontendError:
+            continue
+        us = bench_device_steps(variants)
+        if "fused" not in us or "unfused" not in us:
+            continue
+        for tag, t in us.items():
+            emit(
+                f"table1/{name}/device_step_{tag}", t,
+                f"actors={len(variants[tag].device_program().actors)}",
+            )
+        fused_something = len(variants["fused"].device_program().actors) < len(
+            variants["unfused"].device_program().actors
+        )
+        emit(
+            f"table1/{name}/device_step_speedup", 0.0,
+            (
+                f"{us['unfused'] / us['fused']:.2f}x "
+                f"(opt2 {us['unfused'] / us['fused_opt2']:.2f}x)"
+                if fused_something
+                else "no fusable SDF region (identical programs)"
+            ),
+        )
 
 
 if __name__ == "__main__":

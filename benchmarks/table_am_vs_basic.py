@@ -4,12 +4,14 @@ The controller is a ``repro.compile`` option; the networks never change."""
 
 from __future__ import annotations
 
-from _util import emit
+from _util import emit, smoke_scale
 
 import repro
 from repro.apps.streams import NETWORKS
 
-SIZES = {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
+SIZES = smoke_scale(
+    {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
+)
 
 
 def main() -> None:

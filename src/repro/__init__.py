@@ -10,9 +10,11 @@ Public surface (the frontend):
     prog.run()                              # host / device / mixed, from XCF
     prog.repartition(other_xcf).run()       # re-placement, no graph rebuild
 
-Lower layers remain importable directly: ``repro.core`` (actor IR, XCF, MILP
-partitioner), ``repro.runtime`` (host scheduler, device programs, PLink), and
-the model/serving stack used by the LM workloads.
+Lower layers remain importable directly: ``repro.ir`` (the typed dataflow IR
+and pass pipeline every backend consumes — see ``docs/compiler.md``),
+``repro.core`` (actors, XCF, MILP partitioner), ``repro.runtime`` (host
+scheduler, device programs, PLink), and the model/serving stack used by the
+LM workloads.
 """
 
 from repro.frontend import (

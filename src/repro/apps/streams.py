@@ -83,6 +83,8 @@ def topfilter(n: int = 4096, param: float = 50.0) -> Tuple[Network, List]:
 class FirSeed:
     """Fans each sample into the (x, acc) systolic pair with acc = 0."""
 
+    stream_op = ("fir_seed",)
+
     @action(name="s", consumes={"IN": 1}, produces={"XOUT": 1, "AOUT": 1})
     def s(st, t):
         v = t["IN"][0]
@@ -102,6 +104,7 @@ class Mac:
 
     def __init__(self, c: float):
         self.c = c
+        self.stream_op = ("mac", c)
 
     @action(name="m", consumes={"XIN": 1, "AIN": 1},
             produces={"XOUT": 1, "AOUT": 1})
@@ -160,6 +163,7 @@ class Deal:
 class CompareExchange:
     def __init__(self, ascending: bool = True):
         self.ascending = ascending
+        self.stream_op = ("cmpx", ascending)
 
     @action(name="ce", consumes={"IN0": 1, "IN1": 1},
             produces={"OUT0": 1, "OUT1": 1})
@@ -252,6 +256,8 @@ _IDCT_BASIS = _idct_basis()
 class Idct:
     """8-point IDCT: one SDF firing transforms a block of 8 tokens."""
 
+    stream_op = ("matmul8", _IDCT_BASIS)
+
     @action(name="t", consumes={"IN": 8}, produces={"OUT": 8})
     def t(st, t):
         x = np.asarray(t["IN"], np.float32)
@@ -283,10 +289,12 @@ def idct8(n_blocks: int = 512) -> Tuple[Network, List]:
     net = network("IDCT8")
     src = _lcg_source(net, n_blocks * 8, mod=256)
     descale = net.map("descale", lambda st, v: (st, (v - 128.0) / 8.0),
-                      vector_fire=_descale_vf)
+                      vector_fire=_descale_vf,
+                      stream_op=("affine", -128.0, 0.125, 0.0))
     idct = net.add(Idct, "idct")
     clip = net.map("clip", lambda st, v: (st, max(-256.0, min(255.0, v))),
-                   vector_fire=_clip_vf)
+                   vector_fire=_clip_vf,
+                   stream_op=("clip", -256.0, 255.0))
     got: List = []
     snk = net.sink("sink", collect=got)
     src >> descale >> idct >> clip >> snk

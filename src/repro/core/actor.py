@@ -56,6 +56,12 @@ class Actor:
     # Static rates (SDF) enable vectorized device execution; None = dynamic (DDF).
     #   If every action has identical consume/produce rates, the actor is SDF.
     vector_fire: Optional[Callable] = None  # jnp-based batched fire (device path)
+    # Declarative semantics for the fusion pass (repro.ir.fusion): e.g.
+    # ("affine", pre, mul, post), ("clip", lo, hi), ("matmul8", basis),
+    # ("mac", c), ("fir_seed",), ("cmpx", ascending), ("dup", n).  Actors in
+    # an SDF device region all carrying specs fuse into one Pallas stream
+    # kernel; without specs the region fuses via composed vector_fires.
+    stream_op: Optional[tuple] = None
 
     def __post_init__(self):
         in_names = {p.name for p in self.inputs}
@@ -97,6 +103,7 @@ def simple_actor(
     dtype: str = "float32",
     state: Optional[State] = None,
     vector_fire: Optional[Callable] = None,
+    stream_op: Optional[tuple] = None,
 ) -> Actor:
     """One-action SDF actor: consumes 1 token per input, applies fn, emits result(s).
 
@@ -124,6 +131,7 @@ def simple_actor(
         ],
         initial_state=dict(state or {}),
         vector_fire=vector_fire,
+        stream_op=stream_op,
     )
 
 

@@ -21,9 +21,10 @@ from repro.core.cost_model import (
     evaluate,
     lm_layer_profile,
 )
-from repro.core.graph import ActorGraph
+from repro.core.graph import ActorGraph, GraphError
 from repro.core.milp import Solution, solve, solve_chain_dp
 from repro.core.xcf import XCF, make_xcf
+from repro.ir.passes import legalize_xcf
 
 
 @dataclass
@@ -68,6 +69,16 @@ def explore(
                 graph.name, sol.assignment, accel=accel,
                 meta={"predicted_T": sol.objective, "n_threads": n},
             )
+            # Every emitted XCF must pass the middle-end's placement
+            # legalization — the same pass ``repro.compile`` runs — so a
+            # solver bug can never hand the runtimes an illegal placement.
+            try:
+                legalize_xcf(graph, xcf)
+            except GraphError as e:  # pragma: no cover - solver invariant
+                raise GraphError(
+                    f"partitioner produced an illegal placement for "
+                    f"{graph.name!r} (threads={n}, accel={use_accel}): {e}"
+                ) from e
             points.append(DesignPoint(n, use_accel, sol, xcf))
     return points
 

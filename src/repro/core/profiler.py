@@ -18,7 +18,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cost_model import LinkModel, NetworkProfile
-from repro.core.graph import ActorGraph
+from repro.core.graph import ActorGraph, GraphError
 from repro.runtime.scheduler import HostRuntime
 
 
@@ -60,7 +60,9 @@ def profile_device(
             continue
         try:
             program = compile_partition(graph, [name], block=block, donate=False)
-        except AssertionError:
+        except (AssertionError, GraphError):
+            # not device-compilable (host-only, or legalization rejects the
+            # channel dtypes) — no hw time for this actor
             continue
         ins = {
             f"{a}.{p}": (

@@ -207,6 +207,12 @@ def actor(
             vf = self.__dict__.get("vector_fire") or _bind(
                 getattr(type(self), "vector_fire", None), self
             )
+            # Fusion spec: instances may set self.stream_op in __init__
+            # (parameterized actors) or declare it as a class attribute /
+            # zero-arg method.
+            sop = getattr(self, "stream_op", None)
+            if callable(sop):
+                sop = sop()
             st = getattr(self, "state", None)
             return Actor(
                 name=instance_name,
@@ -217,6 +223,7 @@ def actor(
                 device_ok=meta["device_ok"],
                 host_only_reason=meta["host_only_reason"],
                 vector_fire=vf,
+                stream_op=sop,
             )
 
         c.build = build
@@ -437,11 +444,13 @@ class Network:
         dtype: str = "float32",
         state: Optional[Dict[str, Any]] = None,
         vector_fire: Optional[Callable] = None,
+        stream_op: Optional[tuple] = None,
     ) -> ActorHandle:
         """One-action SDF actor: ``fn(state, *in_tokens) -> (state, out)``."""
         return self.add(
             simple_actor(name, fn, inputs=inputs, outputs=outputs, dtype=dtype,
-                         state=state, vector_fire=vector_fire)
+                         state=state, vector_fire=vector_fire,
+                         stream_op=stream_op)
         )
 
     # -- wiring ---------------------------------------------------------------
@@ -521,6 +530,7 @@ class Network:
                     )
                 ],
                 vector_fire=vf,
+                stream_op=("dup", len(outs)),
             )
         )
         self.connect(s, h.port("IN"), depth=depth)

@@ -12,22 +12,25 @@ exploration loop.  ``Program`` makes that loop one method call each:
     best = prog.repartition(points and best_point(points).xcf)
     best.run()                                 # same graph, new placement
 
-No caller ever touches ``HostRuntime``/``HeteroRuntime``/PLink directly — the
-façade picks the runtime from the XCF (any ``hw`` partition means PLink +
-compiled device program) and rebuilds FIFO depths per configuration, so a
-``repartition`` never mutates or rebuilds the authored network.
+Compilation runs the middle-end pass pipeline (``repro.ir``): the authored
+network is lowered to a typed IR module — placement legalized, dead actors
+eliminated, FIFO depths inferred, SDF device regions fused — and every
+backend consumes that module.  ``Program.ir_dump()`` shows the module after
+each pass; the authored network is never mutated by a placement change.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Union
+from typing import Dict, Optional, Union
 
 from repro.core.graph import ActorGraph
 from repro.core.xcf import XCF, make_xcf
 from repro.frontend.dsl import FrontendError, Network
+from repro.ir.ir import IRModule
+from repro.ir.passes import lower
 from repro.runtime.scheduler import DEFAULT_DEPTH, HeteroRuntime, HostRuntime
 
 BACKENDS = ("auto", "host", "threads", "device")
@@ -130,8 +133,10 @@ class RunReport:
 class Program:
     """An executable placement of a dataflow network.
 
-    Immutable pairing of (network, XCF, runtime options); ``repartition``
-    returns a *new* Program over the same network — the authored graph is
+    Immutable pairing of (network, XCF, runtime options).  Compilation lowers
+    the network through the pass pipeline into ``self.module`` — the typed IR
+    every backend consumes; ``repartition`` re-runs the pipeline with a new
+    XCF and returns a *new* Program over the same authored network, which is
     never rebuilt or mutated by a placement change.
     """
 
@@ -145,9 +150,9 @@ class Program:
         block: int = 1024,
         default_depth: int = DEFAULT_DEPTH,
         max_execs_per_invoke: int = 10_000,
-        _authored_depths: Optional[Dict] = None,
+        fuse: bool = True,
+        opt_level: int = 1,
     ):
-        xcf.validate(graph)
         self._source = source
         self._graph = graph
         self._xcf = xcf
@@ -156,15 +161,18 @@ class Program:
             block=block,
             default_depth=default_depth,
             max_execs_per_invoke=max_execs_per_invoke,
+            fuse=fuse,
+            opt_level=opt_level,
         )
-        # Authored depths: applied before, and restored after, every runtime
-        # build so per-XCF depth overrides never leak between placements.
-        # repartition() threads the original snapshot through because the
-        # shared graph may be observed mid-build by concurrent snapshots.
-        self._authored_depths = dict(
-            _authored_depths
-            if _authored_depths is not None
-            else {ch.key: ch.depth for ch in graph.channels}
+        # The middle-end: every placement check, depth resolution, and fusion
+        # decision happens here, once per (graph, xcf, opts) triple.
+        self._module = lower(
+            graph,
+            xcf,
+            default_depth=default_depth,
+            block=block,
+            fuse=fuse,
+            opt_level=opt_level,
         )
         # jitted device partition, built lazily and reused across run() calls
         # (the (graph, xcf, opts) triple is fixed for this Program's lifetime)
@@ -176,6 +184,11 @@ class Program:
         return self._graph
 
     @property
+    def module(self) -> IRModule:
+        """The lowered IR this Program executes."""
+        return self._module
+
+    @property
     def network(self) -> Optional[Network]:
         return self._source if isinstance(self._source, Network) else None
 
@@ -185,14 +198,13 @@ class Program:
 
     @property
     def hw_partition(self) -> Optional[str]:
-        hw = [p for p, spec in self._xcf.partitions.items()
-              if spec.code_generator == "hw"]
-        if len(hw) > 1:
-            raise FrontendError(
-                f"XCF for {self._graph.name!r} declares {len(hw)} hw "
-                f"partitions; the runtime supports one device partition"
-            )
-        return hw[0] if hw else None
+        hw = self._module.hw_region
+        return hw.id if hw is not None else None
+
+    def ir_dump(self, pass_name: Optional[str] = None) -> str:
+        """The module after every pass (or after ``pass_name`` only) — the
+        compiler's pass-by-pass story for this placement."""
+        return self._module.dump_trace(pass_name)
 
     def describe(self) -> str:
         asg = self._xcf.assignment()
@@ -205,41 +217,38 @@ class Program:
         return "\n".join(lines)
 
     # -- execution -------------------------------------------------------------
-    def _build_runtime(self):
-        depths = self._xcf.fifo_depths()
-        for ch in self._graph.channels:
-            object.__setattr__(
-                ch, "depth", depths.get(ch.key, self._authored_depths[ch.key])
+    def device_program(self):
+        """The compiled (jitted) device partition, or None for host-only
+        placements.  Compiled on first use and cached for this Program."""
+        if self.hw_partition is None:
+            return None
+        if self._device_program is None:
+            from repro.runtime.device_runtime import compile_partition
+
+            self._device_program = compile_partition(
+                self._module,
+                block=self._opts["block"],
+                name=self.hw_partition,
             )
-        asg = self._xcf.assignment()
-        accel = self.hw_partition
-        try:
-            if accel is not None:
-                rt = HeteroRuntime(
-                    self._graph,
-                    asg,
-                    accel=accel,
-                    block=self._opts["block"],
-                    controller=self._opts["controller"],
-                    default_depth=self._opts["default_depth"],
-                    max_execs_per_invoke=self._opts["max_execs_per_invoke"],
-                    program=self._device_program,
-                )
-                # reuse the jitted device partition on subsequent runs
-                self._device_program = rt.program
-            else:
-                rt = HostRuntime(
-                    self._graph,
-                    asg,
-                    controller=self._opts["controller"],
-                    default_depth=self._opts["default_depth"],
-                    max_execs_per_invoke=self._opts["max_execs_per_invoke"],
-                )
-        finally:
-            # leave the shared graph with its authored depths: Channel objects
-            # outlive this Program (repartition / fresh compiles re-snapshot)
-            for ch in self._graph.channels:
-                object.__setattr__(ch, "depth", self._authored_depths[ch.key])
+        return self._device_program
+
+    def _build_runtime(self):
+        if self.hw_partition is not None:
+            rt = HeteroRuntime(
+                self._module,
+                block=self._opts["block"],
+                controller=self._opts["controller"],
+                default_depth=self._opts["default_depth"],
+                max_execs_per_invoke=self._opts["max_execs_per_invoke"],
+                program=self.device_program(),
+            )
+        else:
+            rt = HostRuntime(
+                self._module,
+                controller=self._opts["controller"],
+                default_depth=self._opts["default_depth"],
+                max_execs_per_invoke=self._opts["max_execs_per_invoke"],
+            )
         return rt
 
     def _reset_collectors(self) -> None:
@@ -305,10 +314,7 @@ class Program:
             if backend is not None
             else _load_xcf(xcf)
         )
-        return Program(
-            self._source, self._graph, new,
-            _authored_depths=self._authored_depths, **self._opts,
-        )
+        return Program(self._source, self._graph, new, **self._opts)
 
     def profile(
         self,
@@ -377,6 +383,8 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
     block: int = 1024,
     default_depth: int = DEFAULT_DEPTH,
     max_execs_per_invoke: int = 10_000,
+    fuse: bool = True,
+    opt_level: int = 1,
 ) -> Program:
     """Compile a dataflow network into an executable ``Program``.
 
@@ -385,6 +393,10 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
     (one software thread), ``"threads"`` (round-robin over ``threads`` threads,
     default one per actor), or ``"device"`` (device-eligible actors on the
     accelerator behind a PLink).
+
+    ``fuse=False`` disables SDF region fusion in the device partition (the
+    unfused per-actor baseline); ``opt_level=2`` additionally folds fused op
+    chains algebraically (faster, no longer bit-identical to unfused).
     """
     graph = _as_graph(net)
     if xcf is not None:
@@ -406,4 +418,6 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
         block=block,
         default_depth=default_depth,
         max_execs_per_invoke=max_execs_per_invoke,
+        fuse=fuse,
+        opt_level=opt_level,
     )

@@ -1,0 +1,484 @@
+"""The compiler middle-end: passes over the typed dataflow IR.
+
+``lower()`` is the one entry point every backend uses::
+
+    module = lower(net_or_graph, xcf, block=4096)   # runs the pipeline
+    HostRuntime(module) / HeteroRuntime(module) / compile_partition(module)
+
+Default pipeline (in order):
+
+  lower-frontend       Network/ActorGraph -> IRModule (rates, dtypes)
+  legalize-placement   XCF -> regions; rejects illegal placements with
+                       actionable GraphErrors (subsumes the partitioner's
+                       ad-hoc checks + compile-time device-dtype validation)
+  eliminate-dead       drops actors (and their channels) that cannot reach
+                       any sink — they can never affect an observable output
+  infer-fifo-depths    resolves every channel depth: XCF-pinned > authored >
+                       inferred (rate- and boundary-aware); replaces the old
+                       mutate-the-graph-per-XCF depth rebuild
+  detect-sdf-regions   finds maximal static-rate regions inside the device
+                       partition
+  fuse-sdf-regions     collapses each SDF region into one fused actor
+                       (Pallas stream kernel when specs allow, composed-jnp
+                       otherwise)
+
+Every pass appends a full module dump to ``module.trace`` —
+``Program.ir_dump()`` renders it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core.graph import ActorGraph, GraphError
+from repro.core.xcf import XCF
+from repro.ir import fusion
+from repro.ir.ir import IRActor, IRChannel, IRModule, RateSig, Region
+
+__all__ = [
+    "PassContext",
+    "Pass",
+    "PassPipeline",
+    "default_pipeline",
+    "lower",
+    "legalize_xcf",
+    "device_dtype_ok",
+]
+
+
+@dataclass
+class PassContext:
+    """Inputs the pipeline closes over (never stored in the module)."""
+
+    graph: ActorGraph
+    xcf: Optional[XCF] = None
+    default_depth: int = 4096
+    block: int = 1024
+    fuse: bool = True
+    opt_level: int = 1  # 2 adds algebraic folding (not bit-preserving)
+
+
+class Pass:
+    name = "pass"
+
+    def run(self, module: Optional[IRModule], ctx: PassContext) -> IRModule:
+        raise NotImplementedError
+
+
+class PassPipeline:
+    """Runs passes in order, recording a dump after each for ``ir_dump``.
+
+    ``record=False`` skips the per-pass dump rendering — used by hot callers
+    (e.g. the partitioner legalizing every DSE candidate) that never read
+    the trace."""
+
+    def __init__(self, passes: Sequence[Pass], *, record: bool = True):
+        self.passes = list(passes)
+        self.record = record
+
+    @property
+    def names(self) -> List[str]:
+        return [p.name for p in self.passes]
+
+    def run(self, ctx: PassContext) -> IRModule:
+        module: Optional[IRModule] = None
+        for p in self.passes:
+            module = p.run(module, ctx)
+            if self.record:
+                module.record(p.name)
+        assert module is not None, "empty pipeline"
+        return module
+
+
+# ---------------------------------------------------------------------------
+# Passes
+# ---------------------------------------------------------------------------
+
+
+class LowerFrontend(Pass):
+    """ActorGraph -> IRModule: rate signatures, channel dtypes, no regions."""
+
+    name = "lower-frontend"
+
+    def run(self, module, ctx: PassContext) -> IRModule:
+        g = ctx.graph
+        g.validate()
+        mod = IRModule(name=g.name, source=g)
+        for name, a in g.actors.items():
+            mod.actors[name] = IRActor(
+                name=name,
+                inputs=list(a.inputs),
+                outputs=list(a.outputs),
+                rate=RateSig.of(a),
+                device_ok=a.device_ok,
+                host_only_reason=a.host_only_reason,
+                impl=a,
+            )
+        for ch in g.channels:
+            mod.channels.append(
+                IRChannel(
+                    src=ch.src, src_port=ch.src_port,
+                    dst=ch.dst, dst_port=ch.dst_port,
+                    dtype=g.actors[ch.src].port(ch.src_port).dtype,
+                    authored_depth=ch.depth,
+                )
+            )
+        return mod
+
+
+def device_dtype_ok(dt: str) -> bool:
+    """Token dtypes the device boundary can stage as a dense numeric buffer."""
+    if dt == "bfloat16":  # np.dtype() needs ml_dtypes for this one
+        return True
+    try:
+        return np.dtype(dt).kind in "fiub"
+    except TypeError:
+        return False
+
+
+class LegalizePlacement(Pass):
+    """XCF -> regions, with every placement rule checked up front.
+
+    Subsumes the checks previously scattered across ``XCF.validate``, the
+    partitioner, and the runtimes: unknown/duplicate/unassigned instances,
+    host-only actors on hw, more than one hw partition, and device-partition
+    channels whose token dtype cannot cross the host/device boundary.
+    """
+
+    name = "legalize-placement"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        if ctx.xcf is None:
+            module.regions["t0"] = Region(
+                "t0", "sw", "x86_64", list(module.actors)
+            )
+            return module
+        xcf = ctx.xcf
+        seen: Set[str] = set()
+        hw_ids = [
+            pid for pid, p in xcf.partitions.items()
+            if p.code_generator == "hw"
+        ]
+        if len(hw_ids) > 1:
+            raise GraphError(
+                f"{module.name}: XCF declares {len(hw_ids)} hw partitions "
+                f"({sorted(hw_ids)}); the runtime supports one device "
+                f"partition (paper §III-D)"
+            )
+        for pid, p in xcf.partitions.items():
+            for a in p.instances:
+                if a not in module.actors:
+                    raise GraphError(
+                        f"{module.name}: XCF partition {pid!r} places unknown "
+                        f"actor {a!r} (known: {sorted(module.actors)})"
+                    )
+                if a in seen:
+                    raise GraphError(
+                        f"{module.name}: XCF places {a!r} in multiple "
+                        f"partitions"
+                    )
+                seen.add(a)
+                ir = module.actors[a]
+                if p.code_generator == "hw" and not ir.device_ok:
+                    raise GraphError(
+                        f"{module.name}: XCF places {a!r} on hw partition "
+                        f"{pid!r} but it is host-only "
+                        f"({ir.host_only_reason or 'no reason recorded'})"
+                    )
+            module.regions[pid] = Region(
+                pid, p.code_generator, p.pe, list(p.instances)
+            )
+        missing = set(module.actors) - seen
+        if missing:
+            raise GraphError(
+                f"{module.name}: XCF leaves actors unassigned: "
+                f"{sorted(missing)}"
+            )
+        hw = set(module.regions[hw_ids[0]].actors) if hw_ids else set()
+        for ch in module.channels:
+            if (ch.src in hw or ch.dst in hw) and not device_dtype_ok(ch.dtype):
+                raise GraphError(
+                    f"{module.name}: channel {ch} has dtype {ch.dtype!r}, "
+                    f"which cannot be staged across the device partition "
+                    f"boundary — give the ports a concrete numeric dtype or "
+                    f"keep both endpoints on sw partitions"
+                )
+        return module
+
+
+class EliminateDead(Pass):
+    """Remove actors with no path to any sink.
+
+    A sink (an actor with no output ports) is the only observable effect a
+    network has; anything that cannot reach one can never influence an
+    output, so it — and its channels — are dropped before the backends see
+    the module.  Dead actors *fed by* a live actor are kept, though:
+    removing them would sever the live producer's output channel and leave
+    a dangling port the runtimes have no endpoint for.  Networks with no
+    sinks at all are left untouched.
+    """
+
+    name = "eliminate-dead"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        sinks = [n for n, a in module.actors.items() if not a.outputs]
+        if not sinks:
+            return module
+        live: Set[str] = set()
+        work = list(sinks)
+        while work:
+            n = work.pop()
+            if n in live:
+                continue
+            live.add(n)
+            work.extend(module.predecessors(n) - live)
+        # keep the forward closure of the live set: a dead region consuming
+        # from a live actor must survive so every live output stays wired
+        work = list(live)
+        while work:
+            n = work.pop()
+            for m in module.successors(n):
+                if m not in live:
+                    live.add(m)
+                    work.append(m)
+        dead = sorted(set(module.actors) - live)
+        if dead:
+            for n in dead:
+                del module.actors[n]
+            module.channels = [
+                c for c in module.channels if c.src in live and c.dst in live
+            ]
+            for r in module.regions.values():
+                r.actors = [a for a in r.actors if a in live]
+            module.meta["eliminated"] = dead
+        return module
+
+
+class InferFifoDepths(Pass):
+    """Resolve every channel depth without touching the authored graph.
+
+    Priority: XCF-pinned > authored > inferred.  Inference is rate- and
+    boundary-aware: a channel crossing the device partition needs room for
+    two in-flight PLink blocks (double buffering), and a multi-rate edge
+    needs at least a couple of firings' worth of tokens.
+    """
+
+    name = "infer-fifo-depths"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        pinned = ctx.xcf.fifo_depths() if ctx.xcf is not None else {}
+        hw = module.hw_region
+        hw_actors = set(hw.actors) if hw else set()
+        for ch in module.channels:
+            ch.xcf_depth = pinned.get(ch.key)
+            rate = max(
+                module.actors[ch.src].rate.produce_rate(ch.src_port),
+                module.actors[ch.dst].rate.consume_rate(ch.dst_port),
+                1,
+            )
+            crossing = (ch.src in hw_actors) != (ch.dst in hw_actors)
+            if crossing:
+                ch.inferred_depth = max(ctx.default_depth, 2 * ctx.block)
+            else:
+                ch.inferred_depth = max(ctx.default_depth, 2 * rate)
+        return module
+
+
+class DetectSDFRegions(Pass):
+    """Find maximal static-rate (SDF) regions inside the device partition.
+
+    Members must be guard-free single-action actors (``RateSig.static``);
+    regions are the connected components of such actors over the partition's
+    internal channels.  A region must additionally be *convex*: no path
+    between two members may pass through an outside actor — fusing a
+    non-convex group would put the outsider both upstream and downstream of
+    the fused actor, i.e. introduce a cycle.  Non-convex groups are skipped
+    (recorded in ``meta["sdf_groups_skipped"]``).  Only multi-actor regions
+    are worth fusing.
+    """
+
+    name = "detect-sdf-regions"
+
+    @staticmethod
+    def _is_convex(module: IRModule, group: Set[str]) -> bool:
+        succs: Dict[str, Set[str]] = {}
+        preds: Dict[str, Set[str]] = {}
+        for ch in module.channels:
+            succs.setdefault(ch.src, set()).add(ch.dst)
+            preds.setdefault(ch.dst, set()).add(ch.src)
+
+        def closure(seed: Set[str], edges: Dict[str, Set[str]]) -> Set[str]:
+            out: Set[str] = set()
+            work = list(seed)
+            while work:
+                n = work.pop()
+                for m in edges.get(n, ()):
+                    if m not in out:
+                        out.add(m)
+                        work.append(m)
+            return out
+
+        downstream = closure(group, succs) - group
+        upstream = closure(group, preds) - group
+        return not (downstream & upstream)
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        hw = module.hw_region
+        if hw is None:
+            return module
+        static = {
+            a for a in hw.actors if module.actors[a].rate.static
+        }
+        parent = {a: a for a in static}
+
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for ch in module.channels:
+            if ch.src in static and ch.dst in static:
+                parent[find(ch.src)] = find(ch.dst)
+        groups: Dict[str, List[str]] = {}
+        for a in static:
+            groups.setdefault(find(a), []).append(a)
+        sdf, skipped = [], []
+        for g in groups.values():
+            if len(g) < 2:
+                continue
+            (sdf if self._is_convex(module, set(g)) else skipped).append(
+                sorted(g)
+            )
+        if sdf:
+            module.meta["sdf_groups"] = sorted(sdf)
+        if skipped:
+            module.meta["sdf_groups_skipped"] = sorted(skipped)
+        return module
+
+
+class FuseSDFRegions(Pass):
+    """Collapse each detected SDF region into one fused device actor.
+
+    The fused actor inherits the region's boundary channels (ports renamed
+    ``member__PORT``) with their resolved depths; internal channels vanish.
+    Codegen is the Pallas stream kernel when every member carries a
+    ``stream_op`` spec, else a composed-jnp ``vector_fire``.  Disabled with
+    ``fuse=False`` (used by the unfused baseline in benchmarks and the
+    bit-equivalence tests).
+    """
+
+    name = "fuse-sdf-regions"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        groups = module.meta.get("sdf_groups", [])
+        if not ctx.fuse or not groups:
+            return module
+        hw = module.hw_region
+        fused_meta: Dict[str, Dict] = {}
+        for i, members in enumerate(groups):
+            name = f"fused{i}"
+            while name in module.actors:
+                name += "_"
+            build = fusion.build_fused(
+                module, members, name, opt_level=ctx.opt_level
+            )
+            mset = set(members)
+            impl = build.actor
+            module.actors[name] = IRActor(
+                name=name,
+                inputs=list(impl.inputs),
+                outputs=list(impl.outputs),
+                rate=RateSig.of(impl),
+                device_ok=True,
+                host_only_reason="",
+                impl=impl,
+                fused_from=build.members,
+                codegen=build.codegen,
+            )
+            for m in members:
+                del module.actors[m]
+            keep: List[IRChannel] = []
+            for ch in module.channels:
+                s_in, d_in = ch.src in mset, ch.dst in mset
+                if s_in and d_in:
+                    continue  # internal: fused away
+                if d_in:
+                    ch.dst, ch.dst_port = (
+                        name, build.in_port_of[(ch.dst, ch.dst_port)]
+                    )
+                elif s_in:
+                    ch.src, ch.src_port = (
+                        name, build.out_port_of[(ch.src, ch.src_port)]
+                    )
+                keep.append(ch)
+            module.channels = keep
+            hw.actors = [a for a in hw.actors if a not in mset] + [name]
+            fused_meta[name] = {
+                "members": list(build.members),
+                "codegen": build.codegen,
+                "ops": str(build.program) if build.program else None,
+            }
+        module.meta["fused"] = fused_meta
+        return module
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def default_pipeline() -> PassPipeline:
+    return PassPipeline([
+        LowerFrontend(),
+        LegalizePlacement(),
+        EliminateDead(),
+        InferFifoDepths(),
+        DetectSDFRegions(),
+        FuseSDFRegions(),
+    ])
+
+
+def _as_graph(src) -> ActorGraph:
+    if isinstance(src, ActorGraph):
+        return src
+    if hasattr(src, "graph") and callable(src.graph):  # frontend Network
+        return src.graph()
+    raise GraphError(
+        f"lower() expects an ActorGraph or frontend Network, got "
+        f"{type(src).__name__}"
+    )
+
+
+def lower(
+    src,
+    xcf: Optional[XCF] = None,
+    *,
+    default_depth: int = 4096,
+    block: int = 1024,
+    fuse: bool = True,
+    opt_level: int = 1,
+) -> IRModule:
+    """Lower a network/graph (+ optional XCF placement) through the default
+    pipeline.  This is the only road from authored graphs to the backends."""
+    ctx = PassContext(
+        graph=_as_graph(src),
+        xcf=xcf,
+        default_depth=default_depth,
+        block=block,
+        fuse=fuse,
+        opt_level=opt_level,
+    )
+    return default_pipeline().run(ctx)
+
+
+def legalize_xcf(graph: ActorGraph, xcf: XCF) -> IRModule:
+    """Placement legalization only (no depth/fusion work) — what the
+    partitioner runs over every candidate XCF before emitting it."""
+    ctx = PassContext(graph=graph, xcf=xcf)
+    return PassPipeline(
+        [LowerFrontend(), LegalizePlacement()], record=False
+    ).run(ctx)

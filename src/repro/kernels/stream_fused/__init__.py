@@ -1,0 +1,7 @@
+from repro.kernels.stream_fused.ops import (  # noqa: F401
+    StreamOp,
+    StreamProgram,
+    fold,
+    fused_stream,
+)
+from repro.kernels.stream_fused.ref import fused_stream_ref  # noqa: F401

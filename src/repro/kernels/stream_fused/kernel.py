@@ -1,0 +1,81 @@
+"""Fused SDF stream-region kernel (Pallas TPU).
+
+One fused region = one ``pl.pallas_call``: the whole chain of per-actor
+elementwise/block ops runs over a token tile while it sits in VMEM — one HBM
+read of the input wire stack and one write of the output stack, instead of a
+round trip per actor.  The op list is static at trace time (it comes from the
+fusion pass), so the kernel body unrolls into straight-line VPU/MXU code.
+
+Layout: inputs are packed as a ``(n_in, N)`` float32 wire stack, outputs as
+``(n_out, N)``; the grid tiles the token axis.  ``matmul8`` reshapes the tile
+to ``(T/8, 8)`` and hits the MXU with the 8x8 basis; tiles are kept a
+multiple of 8 so block transforms never straddle a tile edge.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.stream_fused.ref import apply_op
+
+
+def _stream_kernel(x_ref, *rest, program):
+    # rest = (*basis_refs, o_ref): matmul8 bases ride in as operands because
+    # Pallas kernels may not capture array constants.
+    basis_refs, o_ref = rest[:-1], rest[-1]
+    regs = [None] * program.n_regs
+    for i in range(program.n_inputs):
+        regs[i] = x_ref[i, :]
+    bi = 0
+    for op in program.ops:
+        if op.kind == "matmul8":
+            b = basis_refs[bi][...]
+            bi += 1
+            x = regs[op.ins[0]]
+            regs[op.out] = (x.reshape(-1, 8) @ b).reshape(x.shape)
+        else:
+            regs[op.out] = apply_op(
+                op.kind, op.params, [regs[j] for j in op.ins]
+            )
+    for j, r in enumerate(program.outputs):
+        o_ref[j, :] = regs[r]
+
+
+def _tile(n: int, want: int = 512) -> int:
+    """Largest tile <= want that divides n and keeps matmul8 blocks whole."""
+    t = min(want, n)
+    while n % t or t % 8:
+        t -= 8 if t > 8 else 1
+        if t <= 8:
+            return n if n % 8 else 8
+    return t
+
+
+def fused_stream_fwd(
+    stack: jax.Array,  # (n_in, N) float32 wire stack
+    program,
+    *,
+    interpret: bool = False,
+) -> jax.Array:  # (n_out, N)
+    n_in, n = stack.shape
+    t = _tile(n)
+    bases = [
+        jnp.asarray(op.params[0], jnp.float32)
+        for op in program.ops
+        if op.kind == "matmul8"
+    ]
+    return pl.pallas_call(
+        functools.partial(_stream_kernel, program=program),
+        grid=(n // t,),
+        in_specs=[pl.BlockSpec((n_in, t), lambda i: (0, i))]
+        + [pl.BlockSpec((8, 8), lambda i: (0, 0)) for _ in bases],
+        out_specs=pl.BlockSpec((len(program.outputs), t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(
+            (len(program.outputs), n), jnp.float32
+        ),
+        interpret=interpret,
+    )(stack, *bases)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for fused SDF stream regions.
+
+Evaluates a ``StreamProgram`` (see ``ops.py``) over a register file of
+``(N,)`` token arrays.  Each op mirrors — bit-for-bit in float32 — the
+expression the corresponding *unfused* actor's ``vector_fire`` computes, so
+the fused region is verifiably equivalent to the per-actor device path:
+
+  affine   (x + pre) * mul + post      identity components skipped exactly
+  clip     jnp.clip(x, lo, hi)
+  matmul8  x.reshape(-1, 8) @ B        the 8-point block transform
+  axpy     a + c * x                   one MAC tap
+  const    jnp.full_like               rate seed (e.g. FIR acc = 0)
+  min2/max2  jnp.minimum / jnp.maximum compare-exchange lanes
+
+This module is also the device fallback: on CPU the fused region runs this
+reference inside the device-step ``jax.jit`` (XLA fuses the op chain), while
+on TPU ``ops.fused_stream`` dispatches to the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_op(kind: str, params, ins: Sequence[jax.Array]) -> jax.Array:
+    if kind == "affine":
+        pre, mul, post = params
+        x = ins[0]
+        if pre != 0.0:
+            x = x + pre
+        if mul != 1.0:
+            x = x * mul
+        if post != 0.0:
+            x = x + post
+        return x
+    if kind == "clip":
+        lo, hi = params
+        return jnp.clip(ins[0], lo, hi)
+    if kind == "matmul8":
+        (basis,) = params
+        x = ins[0]
+        return (x.reshape(-1, 8) @ jnp.asarray(basis)).reshape(-1)
+    if kind == "axpy":
+        (c,) = params
+        x, a = ins
+        return a + c * x
+    if kind == "const":
+        (v,) = params
+        return jnp.full_like(ins[0], v)
+    if kind == "min2":
+        return jnp.minimum(ins[0], ins[1])
+    if kind == "max2":
+        return jnp.maximum(ins[0], ins[1])
+    raise ValueError(f"unknown stream op {kind!r}")
+
+
+def fused_stream_ref(inputs: Sequence[jax.Array], program) -> List[jax.Array]:
+    """Evaluate ``program`` over per-port input arrays; returns output arrays
+    in the program's declared output order."""
+    regs: List[jax.Array] = [None] * program.n_regs
+    for i, x in enumerate(inputs):
+        regs[i] = x
+    for op in program.ops:
+        regs[op.out] = apply_op(op.kind, op.params, [regs[i] for i in op.ins])
+    return [regs[i] for i in program.outputs]

@@ -1,21 +1,23 @@
-"""Device partition compilation (the paper's hardware code generation, §III-B).
+"""Device partition code generation (the paper's hardware backend, §III-B).
 
-A device partition is a subgraph of actors compiled into ONE jitted XLA program —
-the TPU analogue of synthesizing the partition's actors to RTL inside a dynamic
-region.  Actors execute "in parallel in fabric": XLA fuses and schedules them; on
-a real mesh the program is additionally SPMD-sharded.
+A device partition is the hw region of a *lowered IR module*
+(``repro.ir.lower``) compiled into ONE jitted XLA program — the TPU analogue
+of synthesizing the partition's actors to RTL inside a dynamic region.  By
+the time this backend runs, the middle-end has already legalized the
+placement, resolved FIFO depths, and (by default) fused every static-rate
+(SDF) sub-region into a single fused actor — so the step traced here invokes
+one ``vector_fire`` per *region*, not one per authored actor, and the fused
+regions dispatch to the Pallas stream kernel (``repro.kernels.stream_fused``)
+on TPU with a bit-identical jnp path on CPU.
 
-Execution model: the partition step processes a *block* of tokens per invocation
-(vectorized firing — the analogue of the HLS controller taking the maximum number
-of steps per invocation).  Dynamic-rate actors (e.g. Filter) emit a validity mask;
-tokens flow between in-partition actors as (values, mask) pairs so the whole
-dynamic dataflow stays inside one fused program.  The step also returns per-output
-token counts and an ``idle`` flag — hardware idleness detection (§III-B): the host
-(PLink) never polls internal state, it just reads the flag.
-
-Requirements for device placement (checked by the partitioner): every actor is
-``device_ok`` and provides ``vector_fire`` (batched jnp semantics) or is a
-one-action SDF actor whose ``fire`` is jnp-traceable.
+Execution model: the partition step processes a *block* of tokens per
+invocation (vectorized firing — the analogue of the HLS controller taking the
+maximum number of steps per invocation).  Dynamic-rate actors (e.g. Filter)
+emit a validity mask; tokens flow between in-partition actors as
+(values, mask) pairs so the whole dynamic dataflow stays inside one fused
+program.  The step also returns an ``idle`` flag — hardware idleness
+detection (§III-B): the host (PLink) never polls internal state, it just
+reads the flag.
 """
 
 from __future__ import annotations
@@ -25,10 +27,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.actor import Actor
 from repro.core.graph import ActorGraph
+from repro.ir.ir import IRModule
 
 
 @dataclass
@@ -42,9 +44,10 @@ class DeviceProgram:
     step: Callable  # jitted: (state, {in:(vals,mask)}) -> (state, {out:(vals,mask)}, idle)
     init_state: Dict[str, Any]
     block: int
+    fused: Dict[str, Tuple[str, ...]] = None  # fused actor -> member names
 
 
-def _default_vector_fire(actor: Actor):
+def default_vector_fire(actor: Actor):
     """Vectorize a 1-action SDF actor's scalar fire over a token block via scan."""
     action = actor.actions[0]
     in_ports = [p.name for p in actor.inputs]
@@ -70,40 +73,79 @@ def _default_vector_fire(actor: Actor):
     return vf
 
 
+# legacy name, kept for external callers
+_default_vector_fire = default_vector_fire
+
+
+def _lower_legacy(graph: ActorGraph, names: Sequence[str]) -> IRModule:
+    """Lower a raw graph with ``names`` on the device partition, *without*
+    fusion — the legacy ``compile_partition(graph, [...])`` contract exposes
+    per-actor boundary ports, which fusion would rename."""
+    from repro.core.xcf import make_xcf
+    from repro.ir.passes import lower
+
+    sub = set(names)
+    assignment = {
+        a: ("accel" if a in sub else "t0") for a in graph.actors
+    }
+    return lower(graph, make_xcf(graph.name, assignment), fuse=False)
+
+
 def compile_partition(
-    graph: ActorGraph,
-    actor_names: Sequence[str],
+    src,
+    actor_names: Optional[Sequence[str]] = None,
     *,
     block: int = 1024,
     name: str = "accel",
     mesh=None,
     donate: bool = True,
 ) -> DeviceProgram:
-    names = list(actor_names)
-    sub = set(names)
-    for a in names:
-        actor = graph.actors[a]
-        assert actor.device_ok, f"{a}: {actor.host_only_reason or 'host-only actor'}"
+    """Compile the hw region of ``src`` into one jitted step.
 
-    # boundary ports
+    ``src`` is a lowered ``IRModule`` (the supported path — fusion and depth
+    inference already applied) or a raw ``ActorGraph`` plus ``actor_names``
+    (legacy path: lowered on the spot, unfused, per-actor boundary ports).
+    """
+    if isinstance(src, IRModule):
+        module = src
+        if actor_names is None:
+            hw = module.hw_region
+            assert hw is not None, f"{module.name}: module has no hw region"
+            actor_names = hw.actors
+        names = sorted(actor_names)
+    else:
+        assert actor_names is not None, "compile_partition(graph, names)"
+        names = list(actor_names)
+        for a in names:
+            actor = src.actors[a]
+            assert actor.device_ok, (
+                f"{a}: {actor.host_only_reason or 'host-only actor'}"
+            )
+        module = _lower_legacy(src, names)
+        names = sorted(names)
+    sub = set(names)
+
+    # boundary ports (post-fusion names — what PLink stages against)
     in_ports, out_ports = [], []
     internal: List = []
-    for ch in graph.channels:
+    for ch in module.channels:
         if ch.dst in sub and ch.src not in sub:
-            in_ports.append((ch.dst, ch.dst_port, graph.actors[ch.dst].port(ch.dst_port).dtype))
+            in_ports.append((ch.dst, ch.dst_port, ch.dtype))
         elif ch.src in sub and ch.dst not in sub:
-            out_ports.append((ch.src, ch.src_port, graph.actors[ch.src].port(ch.src_port).dtype))
+            out_ports.append((ch.src, ch.src_port, ch.dtype))
         elif ch.src in sub and ch.dst in sub:
             internal.append(ch)
 
     # topological order of the partition's actors (feedback not supported on device)
-    order = [a for a in graph.topo_order() if a in sub]
+    order = [a for a in module.topo_order() if a in sub]
 
+    impls = {a: module.actors[a].impl for a in names}
     vfs = {
-        a: (graph.actors[a].vector_fire or _default_vector_fire(graph.actors[a]))
+        a: (impls[a].vector_fire or default_vector_fire(impls[a]))
         for a in names
     }
-    init_state = {a: dict(graph.actors[a].initial_state) for a in names}
+    init_state = {a: dict(impls[a].initial_state) for a in names}
+    actor_in_ports = {a: [p.name for p in impls[a].inputs] for a in names}
 
     def step(state, inputs):
         """inputs: {(actor,port): (vals (block,), mask (block,))}"""
@@ -114,8 +156,7 @@ def compile_partition(
         outs: Dict[str, Tuple[jax.Array, jax.Array]] = {}
         produced = jnp.zeros((), jnp.int32)
         for a in order:
-            actor = graph.actors[a]
-            ins = {p.name: wires[(a, p.name)] for p in actor.inputs}
+            ins = {p: wires[(a, p)] for p in actor_in_ports[a]}
             st, a_outs = vfs[a](new_state[a], ins)
             new_state[a] = st
             for ch in internal:
@@ -132,7 +173,6 @@ def compile_partition(
         idle = (produced + consumed) == 0
         return new_state, outs, idle
 
-    jit_kwargs = {}
     jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
     return DeviceProgram(
         name=name,
@@ -142,4 +182,9 @@ def compile_partition(
         step=jitted,
         init_state=init_state,
         block=block,
+        fused={
+            a: module.actors[a].fused_from
+            for a in names
+            if module.actors[a].is_fused
+        },
     )

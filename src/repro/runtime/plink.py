@@ -31,35 +31,55 @@ try:
 except ImportError:  # pragma: no cover - ml_dtypes ships with jax
     _BF16 = None
 
-_NP_DTYPE = {"float32": np.float32, "int32": np.int32, "float64": np.float64,
-             "object": np.float32}
+_NP_DTYPE = {"float32": np.float32, "int32": np.int32, "float64": np.float64}
 if _BF16 is not None:
     _NP_DTYPE["bfloat16"] = _BF16
 
-_warned_bf16 = False
+_warned_dtypes = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _warned_dtypes:
+        _warned_dtypes.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def _np_dtype(dt: str):
     """Numpy dtype for a port's token type at the host/device boundary.
 
     bfloat16 stages as a true bfloat16 buffer (via ml_dtypes) so host-device
-    transfers move 2 bytes/token; without ml_dtypes we fall back to float32 and
-    warn once, because silently widening doubles PCIe traffic and changes
-    rounding.
+    transfers move 2 bytes/token; without ml_dtypes we fall back to float32
+    and warn once, because silently widening doubles PCIe traffic and changes
+    rounding.  Unknown-but-numeric dtypes resolve through numpy; anything the
+    boundary genuinely cannot stage (e.g. ``object``) is rejected at compile
+    time by the placement-legalization pass — reaching here with one means a
+    hand-built program bypassed the pipeline, so we warn explicitly instead
+    of silently miscasting.
     """
-    global _warned_bf16
-    if dt == "bfloat16" and _BF16 is None:
-        if not _warned_bf16:
-            _warned_bf16 = True
-            warnings.warn(
-                "ml_dtypes is not installed: staging bfloat16 channels as "
-                "float32 (2x transfer volume, different rounding). "
-                "Install ml_dtypes for true bfloat16 host buffers.",
-                RuntimeWarning,
-                stacklevel=2,
-            )
+    if dt == "bfloat16" and _BF16 is None:  # ml_dtypes missing
+        _warn_once(
+            "bfloat16",
+            "ml_dtypes is not installed: staging bfloat16 channels as "
+            "float32 (2x transfer volume, different rounding). "
+            "Install ml_dtypes for true bfloat16 host buffers.",
+        )
         return np.float32
-    return _NP_DTYPE.get(dt, np.float32)
+    if dt in _NP_DTYPE:
+        return _NP_DTYPE[dt]
+    try:
+        resolved = np.dtype(dt)
+        if resolved.kind in "fiub":
+            return resolved.type
+    except TypeError:
+        pass
+    _warn_once(
+        dt,
+        f"PLink: channel dtype {dt!r} is not stageable across the "
+        f"host/device boundary; falling back to float32. The compile-time "
+        f"legalization pass rejects such placements — this program was "
+        f"built without it.",
+    )
+    return np.float32
 
 
 @dataclass

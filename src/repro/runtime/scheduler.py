@@ -1,5 +1,12 @@
 """Multi-threaded software runtime (paper §III-C).
 
+Both runtimes consume *lowered IR* (``repro.ir.IRModule``): regions say which
+thread owns which actor, channels carry their resolved FIFO depths, and the
+device partition (if any) is already legalized and fused.  Raw
+``ActorGraph`` + mapping is still accepted — it is lowered on the spot
+through the same pass pipeline, so there is exactly one road from authored
+graphs to executable runtimes.
+
 Each thread owns a *partition* of actor instances and runs the three-step loop:
 
   Pre-fire  — snapshot the published counters of every FIFO endpoint it owns,
@@ -19,14 +26,19 @@ from __future__ import annotations
 import os
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 from repro.core.actor_machine import ActorMachine, BasicController, PortEnv
-from repro.core.graph import ActorGraph
+from repro.core.xcf import make_xcf
+from repro.ir.ir import IRModule
 from repro.runtime.fifo import ReaderEndpoint, RingFifo, WriterEndpoint
 
 DEFAULT_DEPTH = 4096
+
+# Sentinel accel id that matches no partition: a plain actor->thread mapping
+# lowered through make_xcf must produce sw regions only.
+_NO_HW = "__no_hw__"
 
 
 @dataclass
@@ -89,12 +101,25 @@ class ThreadPartition:
         return any(getattr(inst, "pending", False) for inst in self.instances)
 
 
+def _lower_host(graph, mapping, default_depth: int) -> IRModule:
+    from repro.ir.passes import lower
+
+    mapping = mapping or {a: "t0" for a in graph.actors}
+    return lower(
+        graph,
+        make_xcf(graph.name, mapping, accel=_NO_HW),
+        default_depth=default_depth,
+        fuse=False,
+    )
+
+
 class HostRuntime:
-    """Builds FIFOs + actor machines from a graph and an actor→thread mapping."""
+    """Builds FIFOs + actor machines from a lowered module (or a graph + an
+    actor→thread mapping, lowered on the spot)."""
 
     def __init__(
         self,
-        graph: ActorGraph,
+        src,  # IRModule | ActorGraph
         mapping: Optional[Dict[str, str]] = None,  # actor -> partition name
         *,
         controller: str = "am",  # "am" | "basic"
@@ -102,12 +127,21 @@ class HostRuntime:
         max_execs_per_invoke: int = 10_000,
         pin_threads: bool = False,
     ):
-        graph.validate()
-        self.graph = graph
+        if isinstance(src, IRModule):
+            if mapping is not None:
+                raise ValueError(
+                    "HostRuntime(module): the lowered module already fixes "
+                    "the placement; pass a graph to use mapping="
+                )
+            module = src
+        else:
+            module = _lower_host(src, mapping, default_depth)
+        self.module = module
+        self.graph = module.source
         self.max_execs_per_invoke = max_execs_per_invoke
         self.controller_kind = controller
         self.pin_threads = pin_threads
-        mapping = mapping or {a: "t0" for a in graph.actors}
+        mapping = module.assignment()
         self.mapping = dict(mapping)
 
         self.partitions: Dict[str, ThreadPartition] = {}
@@ -116,12 +150,12 @@ class HostRuntime:
 
         # FIFOs: deferred protocol only when the endpoints are on different threads
         self.fifos: Dict[str, RingFifo] = {}
-        readers: Dict[str, Dict[str, ReaderEndpoint]] = {a: {} for a in graph.actors}
-        writers: Dict[str, Dict[str, WriterEndpoint]] = {a: {} for a in graph.actors}
-        for ch in graph.channels:
+        readers: Dict[str, Dict[str, ReaderEndpoint]] = {a: {} for a in module.actors}
+        writers: Dict[str, Dict[str, WriterEndpoint]] = {a: {} for a in module.actors}
+        for ch in module.channels:
             cross = mapping[ch.src] != mapping[ch.dst]
             f = RingFifo(
-                ch.depth or default_depth, name=str(ch), deferred=cross
+                ch.resolved_depth or default_depth, name=str(ch), deferred=cross
             )
             self.fifos[str(ch)] = f
             writers[ch.src][ch.src_port] = WriterEndpoint(f)
@@ -131,12 +165,12 @@ class HostRuntime:
 
         self.profiles: Dict[str, ActorProfile] = {}
         self.instances: Dict[str, object] = {}
-        for name, actor in graph.actors.items():
+        for name, ir_actor in module.actors.items():
             env = PortEnv(readers[name], writers[name])
             inst = (
-                ActorMachine(actor, env)
+                ActorMachine(ir_actor.impl, env)
                 if controller == "am"
-                else BasicController(actor, env)
+                else BasicController(ir_actor.impl, env)
             )
             self.instances[name] = inst
             self.partitions[mapping[name]].instances.append(inst)
@@ -272,50 +306,41 @@ class HostRuntime:
         return sum(p.fires for p in self.profiles.values())
 
 
-def runtime_from_xcf(graph: ActorGraph, xcf, **kw):
+def runtime_from_xcf(graph, xcf, *, fuse: bool = True, **kw):
     """Build the right runtime (host-only or heterogeneous) from an XCF
     configuration — the paper's flow: partitioning is a config artifact.
 
     Legacy entry point; ``repro.compile(graph, xcf)`` is the supported
     surface (it additionally caches the jitted device partition across runs).
     """
-    xcf.validate(graph)
-    assignment = xcf.assignment()
-    hw = {
-        pid for pid, p in xcf.partitions.items() if p.code_generator == "hw"
-    }
-    if len(hw) > 1:
-        raise ValueError("one device partition per XCF (paper §III-D)")
-    depths = xcf.fifo_depths()
-    saved = {ch.key: ch.depth for ch in graph.channels}
-    for ch in graph.channels:
-        if ch.key in depths:
-            object.__setattr__(ch, "depth", depths[ch.key])
-    try:
-        if hw:
-            accel = next(iter(hw))
-            return HeteroRuntime(graph, assignment, accel=accel, **kw)
-        return HostRuntime(graph, assignment, **kw)
-    finally:
-        # FIFOs capture their capacity at construction; leave the shared
-        # graph's authored depths untouched for later (re)compiles
-        for ch in graph.channels:
-            object.__setattr__(ch, "depth", saved[ch.key])
+    from repro.ir.passes import lower
+
+    module = lower(
+        graph,
+        xcf,
+        default_depth=kw.get("default_depth", DEFAULT_DEPTH),
+        block=kw.get("block", 1024),
+        fuse=fuse,
+    )
+    if module.hw_region is not None:
+        return HeteroRuntime(module, **kw)
+    return HostRuntime(module, **kw)
 
 
 class HeteroRuntime(HostRuntime):
     """Host threads + one compiled device partition bridged by a PLink actor
     (paper Fig. 6: input/output stages + PLink + dynamic region).
 
-    ``device_actors`` are compiled into a single jitted DeviceProgram; channels
-    crossing the boundary become host FIFOs read/written by the PLink, which is
+    The module's hw region is compiled into a single jitted DeviceProgram
+    (SDF sub-regions arrive already fused by the pipeline); channels crossing
+    the boundary become host FIFOs read/written by the PLink, which is
     scheduled like a normal actor on ``plink_thread`` (the paper puts it on p1).
     """
 
     def __init__(
         self,
-        graph: ActorGraph,
-        mapping: Dict[str, str],  # host actors -> thread; device actors -> "accel"
+        src,  # IRModule | ActorGraph
+        mapping: Optional[Dict[str, str]] = None,  # host -> thread; device -> accel
         *,
         accel: str = "accel",
         plink_thread: Optional[str] = None,
@@ -324,87 +349,98 @@ class HeteroRuntime(HostRuntime):
         default_depth: int = DEFAULT_DEPTH,
         max_execs_per_invoke: int = 10_000,
         program=None,  # prebuilt DeviceProgram for this partition (else compiled)
+        fuse: bool = True,
     ):
-        from repro.core.actor import Actor as _Actor
-        from repro.core.graph import ActorGraph as _AG
+        from repro.ir.passes import lower
         from repro.runtime.device_runtime import compile_partition
         from repro.runtime.plink import PLink
 
-        device_actors = sorted(a for a, p in mapping.items() if p == accel)
-        host_map = {a: p for a, p in mapping.items() if p != accel}
-        assert device_actors, "HeteroRuntime needs at least one device actor"
+        if isinstance(src, IRModule):
+            if mapping is not None:
+                raise ValueError(
+                    "HeteroRuntime(module): the lowered module already fixes "
+                    "the placement (and its hw region id overrides accel=); "
+                    "pass a graph to use mapping="
+                )
+            module = src
+        else:
+            assert mapping, "HeteroRuntime needs an actor -> partition mapping"
+            module = lower(
+                src,
+                make_xcf(src.name, mapping, accel=accel),
+                default_depth=default_depth,
+                block=block,
+                fuse=fuse,
+            )
+        hw = module.hw_region
+        assert hw is not None and hw.actors, (
+            "HeteroRuntime needs at least one device actor"
+        )
+        accel = hw.id
+        device_actors = sorted(hw.actors)
+        devset = set(device_actors)
+        host_map = {
+            a: r for a, r in module.assignment().items() if r != accel
+        }
         threads = sorted(set(host_map.values()))
         plink_thread = plink_thread or (threads[0] if threads else "t0")
 
-        # host-side graph: device actors removed; crossing channels become the
-        # PLink's boundary FIFOs
-        hg = _AG(graph.name + "_host")
-        for a, act in graph.actors.items():
-            if a not in device_actors:
-                hg.add(act)
-        crossing_in: List = []   # host -> device
-        crossing_out: List = []  # device -> host
-        for ch in graph.channels:
-            s_dev, d_dev = ch.src in device_actors, ch.dst in device_actors
-            if not s_dev and not d_dev:
-                hg.channels.append(ch)
-            elif s_dev and d_dev:
-                pass  # internal to the device program
-            elif d_dev:
-                crossing_in.append(ch)
-            else:
-                crossing_out.append(ch)
-
-        # Build the host runtime over the reduced graph (skip validation of
-        # now-dangling ports by connecting through the plink FIFOs below).
-        self.graph = graph
+        self.module = module
+        self.graph = module.source
         self.max_execs_per_invoke = max_execs_per_invoke
         self.controller_kind = controller
         self.pin_threads = False
         self.mapping = dict(host_map)
         self.partitions = {}
-        for a, part in host_map.items():
+        for part in host_map.values():
             self.partitions.setdefault(part, ThreadPartition(part, self))
         self.partitions.setdefault(plink_thread, ThreadPartition(plink_thread, self))
 
         self.fifos = {}
-        readers = {a: {} for a in hg.actors}
-        writers = {a: {} for a in hg.actors}
+        readers = {a: {} for a in module.actors if a not in devset}
+        writers = {a: {} for a in module.actors if a not in devset}
         plink_in = {}
         plink_out = {}
-        for ch in hg.channels:
-            cross = host_map[ch.src] != host_map[ch.dst]
-            f = RingFifo(ch.depth or default_depth, name=str(ch), deferred=cross)
-            self.fifos[str(ch)] = f
-            writers[ch.src][ch.src_port] = WriterEndpoint(f)
-            readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
-            self.partitions[host_map[ch.src]].writer_fifos.append(f)
-            self.partitions[host_map[ch.dst]].reader_fifos.append(f)
-        for ch in crossing_in:  # host writer -> plink reader
-            cross = host_map[ch.src] != plink_thread
-            f = RingFifo(ch.depth or default_depth, name=str(ch), deferred=cross)
-            self.fifos[str(ch)] = f
-            writers[ch.src][ch.src_port] = WriterEndpoint(f)
-            plink_in[f"{ch.dst}.{ch.dst_port}"] = ReaderEndpoint(f)
-            self.partitions[host_map[ch.src]].writer_fifos.append(f)
-            self.partitions[plink_thread].reader_fifos.append(f)
-        for ch in crossing_out:  # plink writer -> host reader
-            cross = host_map[ch.dst] != plink_thread
-            f = RingFifo(ch.depth or default_depth, name=str(ch), deferred=cross)
-            self.fifos[str(ch)] = f
-            plink_out[f"{ch.src}.{ch.src_port}"] = WriterEndpoint(f)
-            readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
-            self.partitions[plink_thread].writer_fifos.append(f)
-            self.partitions[host_map[ch.dst]].reader_fifos.append(f)
+        for ch in module.channels:
+            s_dev, d_dev = ch.src in devset, ch.dst in devset
+            if s_dev and d_dev:
+                continue  # internal to the device program
+            depth = ch.resolved_depth or default_depth
+            if not s_dev and not d_dev:  # host <-> host
+                cross = host_map[ch.src] != host_map[ch.dst]
+                f = RingFifo(depth, name=str(ch), deferred=cross)
+                self.fifos[str(ch)] = f
+                writers[ch.src][ch.src_port] = WriterEndpoint(f)
+                readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+                self.partitions[host_map[ch.src]].writer_fifos.append(f)
+                self.partitions[host_map[ch.dst]].reader_fifos.append(f)
+            elif d_dev:  # host writer -> plink reader
+                cross = host_map[ch.src] != plink_thread
+                f = RingFifo(depth, name=str(ch), deferred=cross)
+                self.fifos[str(ch)] = f
+                writers[ch.src][ch.src_port] = WriterEndpoint(f)
+                plink_in[f"{ch.dst}.{ch.dst_port}"] = ReaderEndpoint(f)
+                self.partitions[host_map[ch.src]].writer_fifos.append(f)
+                self.partitions[plink_thread].reader_fifos.append(f)
+            else:  # plink writer -> host reader
+                cross = host_map[ch.dst] != plink_thread
+                f = RingFifo(depth, name=str(ch), deferred=cross)
+                self.fifos[str(ch)] = f
+                plink_out[f"{ch.src}.{ch.src_port}"] = WriterEndpoint(f)
+                readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+                self.partitions[plink_thread].writer_fifos.append(f)
+                self.partitions[host_map[ch.dst]].reader_fifos.append(f)
 
         self.profiles = {}
         self.instances = {}
-        for name, actor in hg.actors.items():
+        for name, ir_actor in module.actors.items():
+            if name in devset:
+                continue
             env = PortEnv(readers[name], writers[name])
             inst = (
-                ActorMachine(actor, env)
+                ActorMachine(ir_actor.impl, env)
                 if controller == "am"
-                else BasicController(actor, env)
+                else BasicController(ir_actor.impl, env)
             )
             self.instances[name] = inst
             self.partitions[host_map[name]].instances.append(inst)
@@ -418,7 +454,7 @@ class HeteroRuntime(HostRuntime):
                 f"{program.block}, mapping needs {device_actors} @block={block}"
             )
         self.program = program or compile_partition(
-            graph, device_actors, block=block, name=accel
+            module, device_actors, block=block, name=accel
         )
         self.plink = PLink(self.program, PortEnv(plink_in, plink_out))
         self.instances["plink"] = self.plink

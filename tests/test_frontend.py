@@ -352,7 +352,7 @@ def test_plink_bfloat16_fallback_warns_once(monkeypatch):
     from repro.runtime import plink
 
     monkeypatch.setattr(plink, "_BF16", None)
-    monkeypatch.setattr(plink, "_warned_bf16", False)
+    monkeypatch.setattr(plink, "_warned_dtypes", set())
     with pytest.warns(RuntimeWarning, match="bfloat16"):
         assert plink._np_dtype("bfloat16") == np.float32
     # second call is silent

@@ -1,0 +1,383 @@
+"""Middle-end: typed IR, pass pipeline, legalization, dead elimination,
+depth inference, SDF detection/fusion plumbing, ir_dump."""
+
+import pytest
+
+import repro
+from repro.core.actor import Action, Actor, Port, simple_actor
+from repro.core.graph import ActorGraph, GraphError
+from repro.core.xcf import ConnectionSpec, make_xcf
+from repro.ir import IRModule, legalize_xcf, lower
+from repro.ir.passes import device_dtype_ok
+
+from helpers import make_chain, make_topfilter
+
+
+# ---------------------------------------------------------------------------
+# Lowering basics
+# ---------------------------------------------------------------------------
+
+
+def test_lower_host_default():
+    g, _ = make_topfilter(n=16)
+    mod = lower(g)
+    assert isinstance(mod, IRModule)
+    assert set(mod.actors) == {"source", "filter", "sink"}
+    assert [r.kind for r in mod.regions.values()] == ["sw"]
+    assert mod.assignment() == {a: "t0" for a in g.actors}
+    # rates: filter has two actions with different produces -> dynamic
+    assert not mod.actors["filter"].rate.static
+    assert mod.actors["filter"].rate.consume_rate("IN") == 1
+    # sink/source host-only survives lowering
+    assert not mod.actors["sink"].device_ok
+
+
+def test_lower_records_pass_trace():
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    mod = lower(g)
+    names = [n for n, _ in mod.trace]
+    assert names == [
+        "lower-frontend", "legalize-placement", "eliminate-dead",
+        "infer-fifo-depths", "detect-sdf-regions", "fuse-sdf-regions",
+    ]
+    assert "module chain" in mod.dump_trace("lower-frontend")
+    with pytest.raises(KeyError):
+        mod.dump_trace("no-such-pass")
+
+
+def test_program_ir_dump():
+    from repro.apps.streams import idct8
+
+    net, _ = idct8(8)
+    prog = repro.compile(net, backend="device", block=64)
+    full = prog.ir_dump()
+    assert "// after fuse-sdf-regions" in full
+    assert "fused0" in prog.ir_dump("fuse-sdf-regions")
+    # before fusion the members are still distinct actors
+    assert "idct" in prog.ir_dump("detect-sdf-regions")
+
+
+# ---------------------------------------------------------------------------
+# Placement legalization
+# ---------------------------------------------------------------------------
+
+
+def test_legalize_rejects_unknown_actor():
+    g, _ = make_topfilter(n=16)
+    xcf = make_xcf(g.name, {"source": "t0", "filter": "t0", "sink": "t0",
+                            "ghost": "t0"})
+    with pytest.raises(GraphError, match="unknown actor 'ghost'"):
+        legalize_xcf(g, xcf)
+
+
+def test_legalize_rejects_unassigned():
+    g, _ = make_topfilter(n=16)
+    xcf = make_xcf(g.name, {"source": "t0", "filter": "t0"})
+    with pytest.raises(GraphError, match="unassigned"):
+        legalize_xcf(g, xcf)
+
+
+def test_legalize_rejects_host_only_on_hw():
+    g, _ = make_topfilter(n=16, vectorized=True)
+    xcf = make_xcf(g.name, {"source": "accel", "filter": "t0", "sink": "t0"})
+    with pytest.raises(GraphError, match="host-only"):
+        legalize_xcf(g, xcf)
+
+
+def test_legalize_rejects_two_hw_partitions():
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    xcf = make_xcf(g.name, {"src": "t0", "s0": "acc_a", "s1": "acc_b",
+                            "snk": "t0"})
+    for pid in ("acc_a", "acc_b"):
+        xcf.partitions[pid].code_generator = "hw"
+    with pytest.raises(GraphError, match="hw partitions"):
+        legalize_xcf(g, xcf)
+
+
+def test_legalize_rejects_object_dtype_on_device():
+    g = ActorGraph("objnet")
+    g.add(simple_actor("a", lambda st, v: (st, v), dtype="object"))
+    g.add(simple_actor("b", lambda st, v: (st, v), dtype="object"))
+    src = Actor("src", outputs=[Port("OUT", "object")],
+                actions=[Action("g", produces={"OUT": 1},
+                                fire=lambda st, t: (st, {"OUT": [1]}))])
+    snk = Actor("snk", inputs=[Port("IN", "object")],
+                actions=[Action("e", consumes={"IN": 1},
+                                fire=lambda st, t: (st, {}))])
+    g.add(src)
+    g.add(snk)
+    g.connect("src", "a")
+    g.connect("a", "b")
+    g.connect("b", "snk")
+    xcf = make_xcf(g.name, {"src": "t0", "a": "accel", "b": "accel",
+                            "snk": "t0"})
+    with pytest.raises(GraphError, match="cannot be staged"):
+        legalize_xcf(g, xcf)
+
+
+def test_device_dtype_ok():
+    assert device_dtype_ok("float32")
+    assert device_dtype_ok("int32")
+    assert device_dtype_ok("bfloat16")
+    assert not device_dtype_ok("object")
+
+
+# ---------------------------------------------------------------------------
+# Dead-actor/channel elimination
+# ---------------------------------------------------------------------------
+
+
+def test_dead_cycle_eliminated():
+    g, _ = make_chain(n_stages=1, n_tok=8)
+    # a 2-cycle that reaches no sink: valid (all ports connected) but dead
+    g.add(simple_actor("loop_a", lambda st, v: (st, v)))
+    g.add(simple_actor("loop_b", lambda st, v: (st, v)))
+    g.connect("loop_a", "loop_b")
+    g.connect("loop_b", "loop_a")
+    mod = lower(g)
+    assert "loop_a" not in mod.actors and "loop_b" not in mod.actors
+    assert mod.meta["eliminated"] == ["loop_a", "loop_b"]
+    assert all(
+        ch.src not in ("loop_a", "loop_b") and ch.dst not in ("loop_a", "loop_b")
+        for ch in mod.channels
+    )
+    # region membership is pruned too, and the live path still runs
+    assert set(mod.assignment()) == set(mod.actors)
+    from repro.runtime.scheduler import HostRuntime
+
+    HostRuntime(mod).run_single()
+
+
+def test_dead_region_fed_by_live_actor_is_kept():
+    """Removing a dead region that consumes from a live actor would leave
+    the live producer's output port dangling — it must be kept instead."""
+    g = ActorGraph("fed_dead")
+
+    def gen(st):
+        x = st.get("i", 0)
+        return {"i": x + 1}, float(x)
+
+    from repro.core.actor import sink_actor, source_actor
+
+    g.add(source_actor("src", gen, has_next=lambda st: st.get("i", 0) < 8))
+    # live tee-like actor: one output to the sink, one into a dead cycle
+    g.add(Actor(
+        "t", inputs=[Port("IN", "float32")],
+        outputs=[Port("O0", "float32"), Port("O1", "float32")],
+        actions=[Action("d", consumes={"IN": 1},
+                        produces={"O0": 1, "O1": 1},
+                        fire=lambda st, tk: (st, {"O0": [tk["IN"][0]],
+                                                  "O1": [tk["IN"][0]]}))],
+    ))
+    g.add(simple_actor("loop_a", lambda st, v, w: (st, v + w),
+                       inputs=("I0", "I1"), outputs=("O0",)))
+    g.add(simple_actor("loop_b", lambda st, v: (st, v)))
+    got = []
+    g.add(sink_actor("snk", lambda st, v: (got.append(float(v)), st)[1]))
+    g.connect("src", "t", "OUT", "IN")
+    g.connect("t", "snk", "O0", "IN")
+    g.connect("t", "loop_a", "O1", "I0")    # live actor feeds the dead region
+    g.connect("loop_a", "loop_b", "O0", "IN")
+    g.connect("loop_b", "loop_a", "OUT", "I1")
+    mod = lower(g)
+    assert "eliminated" not in mod.meta
+    assert set(mod.actors) == {"src", "t", "loop_a", "loop_b", "snk"}
+    from repro.runtime.scheduler import HostRuntime
+
+    HostRuntime(mod).run_single()
+    assert got == [float(v) for v in range(8)]
+
+
+def test_no_sinks_left_untouched():
+    g = ActorGraph("cycleonly")
+    g.add(simple_actor("a", lambda st, v: (st, v)))
+    g.add(simple_actor("b", lambda st, v: (st, v)))
+    g.connect("a", "b")
+    g.connect("b", "a")
+    mod = lower(g)
+    assert set(mod.actors) == {"a", "b"}
+
+
+# ---------------------------------------------------------------------------
+# FIFO depth inference
+# ---------------------------------------------------------------------------
+
+
+def test_depth_priority_xcf_over_authored_over_inferred():
+    g, _ = make_topfilter(n=16)
+    xcf = make_xcf(g.name, {a: "t0" for a in g.actors})
+    xcf.connections.append(ConnectionSpec("source", "OUT", "filter", "IN", 8))
+    mod = lower(g, xcf, default_depth=512)
+    by_key = {ch.key: ch for ch in mod.channels}
+    pinned = by_key[("source", "OUT", "filter", "IN")]
+    assert pinned.resolved_depth == 8 and pinned.depth_source() == "xcf"
+    rest = by_key[("filter", "OUT", "sink", "IN")]
+    assert rest.resolved_depth == 512 and rest.depth_source() == "inferred"
+
+
+def test_depth_authored_wins_over_inferred():
+    g = ActorGraph("authored")
+    g.add(simple_actor("a", lambda st, v: (st, v)))
+    src = Actor("src", outputs=[Port("OUT", "float32")],
+                actions=[Action("g", produces={"OUT": 1},
+                                fire=lambda st, t: (st, {"OUT": [1.0]}))])
+    snk = Actor("snk", inputs=[Port("IN", "float32")],
+                actions=[Action("e", consumes={"IN": 1},
+                                fire=lambda st, t: (st, {}))])
+    g.add(src)
+    g.add(snk)
+    g.connect("src", "a", depth=32)
+    g.connect("a", "snk")
+    mod = lower(g, default_depth=256)
+    by_key = {ch.key: ch for ch in mod.channels}
+    assert by_key[("src", "OUT", "a", "IN")].resolved_depth == 32
+    assert by_key[("a", "OUT", "snk", "IN")].resolved_depth == 256
+
+
+def test_depth_device_boundary_gets_double_buffer():
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    xcf = make_xcf(g.name, {"src": "t0", "s0": "accel", "s1": "accel",
+                            "snk": "t0"})
+    mod = lower(g, xcf, default_depth=256, block=1024)
+    # both surviving channels cross the device boundary: 2 * block wins
+    assert mod.channels, "expected boundary channels"
+    for ch in mod.channels:
+        assert ch.resolved_depth == 2048, str(ch)
+
+
+# ---------------------------------------------------------------------------
+# SDF detection + fusion plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_sdf_region_detected_and_fused():
+    g, _ = make_chain(n_stages=3, n_tok=64)
+    xcf = make_xcf(g.name, {"src": "t0", "s0": "accel", "s1": "accel",
+                            "s2": "accel", "snk": "t0"})
+    mod = lower(g, xcf)
+    assert mod.meta["sdf_groups"] == [["s0", "s1", "s2"]]
+    hw = mod.hw_region
+    assert hw.actors == ["fused0"]
+    fa = mod.actors["fused0"]
+    assert fa.is_fused and fa.fused_from == ("s0", "s1", "s2")
+    assert fa.codegen == "jnp"  # plain lambdas carry no stream_op specs
+    # boundary channels rewired to the fused actor's renamed ports
+    ports = {(ch.src, ch.src_port, ch.dst, ch.dst_port) for ch in mod.channels}
+    assert ("src", "OUT", "fused0", "s0__IN") in ports
+    assert ("fused0", "s2__OUT", "snk", "IN") in ports
+
+
+def test_fuse_off_keeps_actors():
+    g, _ = make_chain(n_stages=3, n_tok=64)
+    xcf = make_xcf(g.name, {"src": "t0", "s0": "accel", "s1": "accel",
+                            "s2": "accel", "snk": "t0"})
+    mod = lower(g, xcf, fuse=False)
+    assert sorted(mod.hw_region.actors) == ["s0", "s1", "s2"]
+    assert "fused" not in mod.meta
+
+
+def test_dynamic_actor_not_fused():
+    """A dynamic-rate (guarded, multi-action) actor stays out of SDF groups."""
+    g, _ = make_topfilter(n=64, vectorized=True)
+    xcf = make_xcf(g.name, {"source": "t0", "filter": "accel", "sink": "t0"})
+    mod = lower(g, xcf)
+    assert "sdf_groups" not in mod.meta
+    assert mod.hw_region.actors == ["filter"]
+
+
+def test_non_convex_sdf_group_not_fused():
+    """Two static actors joined directly AND through a dynamic actor: fusing
+    them would put the dynamic actor both upstream and downstream of the
+    fused region (a cycle).  The pass must skip the group, and the program
+    must still compile and run correctly."""
+    import jax.numpy as jnp
+
+    g = ActorGraph("nonconvex")
+
+    def gen(st):
+        x = st.get("i", 0)
+        return {"i": x + 1}, float(x)
+
+    from repro.core.actor import sink_actor, source_actor
+
+    g.add(source_actor("src", gen, has_next=lambda st: st.get("i", 0) < 32))
+
+    def a_vf(state, ins):
+        v, m = ins["IN"]
+        return state, {"O0": (v, m), "O1": (v, m)}
+
+    g.add(Actor(
+        "a", inputs=[Port("IN", "float32")],
+        outputs=[Port("O0", "float32"), Port("O1", "float32")],
+        actions=[Action("d", consumes={"IN": 1},
+                        produces={"O0": 1, "O1": 1},
+                        fire=lambda st, t: (st, {"O0": [t["IN"][0]],
+                                                 "O1": [t["IN"][0]]}))],
+        vector_fire=a_vf,
+    ))
+    # dynamic (two actions -> not SDF) but device-eligible passthrough
+    g.add(Actor(
+        "b", inputs=[Port("IN", "float32")], outputs=[Port("OUT", "float32")],
+        actions=[
+            Action("t0", consumes={"IN": 1}, produces={"OUT": 1},
+                   guard=lambda st, t: t["IN"][0] >= 0,
+                   fire=lambda st, t: (st, {"OUT": [t["IN"][0]]})),
+            Action("t1", consumes={"IN": 1}, fire=lambda st, t: (st, {})),
+        ],
+        vector_fire=lambda state, ins: (state, {"OUT": ins["IN"]}),
+    ))
+
+    def c_vf(state, ins):
+        v0, m0 = ins["I0"]
+        v1, _ = ins["I1"]
+        return state, {"OUT": (v0 + v1, m0)}
+
+    g.add(Actor(
+        "c", inputs=[Port("I0", "float32"), Port("I1", "float32")],
+        outputs=[Port("OUT", "float32")],
+        actions=[Action("s", consumes={"I0": 1, "I1": 1},
+                        produces={"OUT": 1},
+                        fire=lambda st, t: (st, {"OUT": [t["I0"][0]
+                                                         + t["I1"][0]]}))],
+        vector_fire=c_vf,
+    ))
+    got = []
+    g.add(sink_actor("snk", lambda st, v: (got.append(float(v)), st)[1]))
+    g.connect("src", "a", "OUT", "IN")
+    g.connect("a", "c", "O0", "I0")     # direct static->static edge
+    g.connect("a", "b", "O1", "IN")     # ... and via the dynamic actor
+    g.connect("b", "c", "OUT", "I1")
+    g.connect("c", "snk", "OUT", "IN")
+
+    xcf = make_xcf(g.name, {"src": "t0", "a": "accel", "b": "accel",
+                            "c": "accel", "snk": "t0"})
+    mod = lower(g, xcf, block=16)
+    assert "sdf_groups" not in mod.meta
+    assert mod.meta["sdf_groups_skipped"] == [["a", "c"]]
+    assert sorted(mod.hw_region.actors) == ["a", "b", "c"]
+
+    prog = repro.compile(g, xcf, block=16)
+    prog.run()
+    assert got == [2.0 * v for v in range(32)]
+
+
+def test_runtime_rejects_module_plus_mapping():
+    from repro.runtime.scheduler import HostRuntime
+
+    g, _ = make_chain(n_stages=1, n_tok=8)
+    mod = lower(g)
+    with pytest.raises(ValueError, match="already fixes"):
+        HostRuntime(mod, {"src": "t0"})
+
+
+def test_partitioner_emits_legal_xcfs():
+    """explore() legalizes every design point through the pipeline."""
+    from repro.core.partitioner import explore
+    from repro.core.profiler import profile_host
+
+    g, _ = make_topfilter(n=512, vectorized=True)
+    prof, _ = profile_host(g)
+    pts = explore(g, prof, thread_counts=(1, 2), accel_options=(False, True))
+    assert pts
+    for p in pts:
+        legalize_xcf(g, p.xcf)  # must not raise
