@@ -30,6 +30,8 @@ SUITES = [
     ("milp_accuracy", "milp_accuracy"),     # §VII-B: model accuracy
     ("lm_pipeline", "lm_pipeline_dse"),     # partitioner on the 10 archs
     ("roofline", "roofline"),               # §Roofline from dry-run artifacts
+    ("server_throughput", "server_throughput"),  # StreamServe: batched vs
+    #                                              sequential device dispatch
 ]
 
 JSON_PATH = Path(os.environ.get("BENCH_JSON", "BENCH_streams.json"))
@@ -51,6 +53,26 @@ def _device_step_summary(rows):
         if "fused_opt2_us" in d and "unfused_us" in d and d["fused_opt2_us"] > 0:
             d["speedup_opt2"] = d["unfused_us"] / d["fused_opt2_us"]
     return per_net
+
+
+def _server_summary(rows):
+    """Per-session-count batched vs sequential numbers from the server suite."""
+    per_b = {}
+    for r in rows:
+        parts = r["name"].split("/")
+        if len(parts) != 3 or "_B" not in parts[2]:
+            continue
+        mode, b = parts[2].rsplit("_B", 1)
+        if mode in ("batched", "sequential"):
+            per_b.setdefault(int(b), {})[f"{mode}_us_per_tok"] = (
+                r["us_per_call"]
+            )
+    for d in per_b.values():
+        if d.get("batched_us_per_tok"):
+            d["speedup"] = (
+                d.get("sequential_us_per_tok", 0.0) / d["batched_us_per_tok"]
+            )
+    return {str(b): per_b[b] for b in sorted(per_b)}
 
 
 def main() -> None:
@@ -82,6 +104,9 @@ def main() -> None:
         "suites": suites,
         "device_step": _device_step_summary(
             suites.get("table1", {}).get("rows", [])
+        ),
+        "server_throughput": _server_summary(
+            suites.get("server_throughput", {}).get("rows", [])
         ),
         "failures": failures,
     }

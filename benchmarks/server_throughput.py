@@ -1,0 +1,134 @@
+"""StreamServe throughput: batched vs sequential device dispatch.
+
+Sweeps concurrent sessions 1 -> 32 over a device-placed network and serves
+an identical per-session token stream through the StreamServer twice: once
+with the batcher packing every session's ready block into ONE batched
+device launch (``DeviceProgram.batched_step``), once dispatching one launch
+per session (the pre-server cost model).  The ratio is the dispatch
+amortization the server buys — the per-launch overhead (trace cache lookup,
+argument staging, XLA dispatch) is paid once per *batch* instead of once
+per *session*.
+
+Emits ``server/{net}/{mode}_B{n}`` rows in µs/token (derived: tokens/s)
+plus a ``speedup_B{n}`` row per swept point; everything lands in
+``BENCH_streams.json`` via the harness (smoke mode shrinks streams ~10x).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from _util import emit
+
+import repro
+from repro.apps.streams import NETWORKS
+
+NET = "FIR32"
+BLOCK = 1024
+SESSIONS = (1, 2, 4, 8, 16, 32)
+TOTAL_TOKENS = 262144  # per sweep point, split across the sessions — every
+#                        point moves the same work, so small-B runs are not
+#                        drowned in scheduling jitter
+if os.environ.get("BENCH_SMOKE"):
+    SESSIONS = (1, 2, 4, 8)
+    TOTAL_TOKENS = 32768
+
+
+def _stream(n: int) -> list:
+    out, x = [], 0
+    for _ in range(n):  # the benchmark networks' LCG source
+        out.append(float((x * 1103515245 + 12345) % 100))
+        x += 1
+    return out
+
+
+def _serve_once(prog, batching: bool, n_sessions: int, stream) -> float:
+    """Wall-clock seconds to serve ``n_sessions`` full streams."""
+    with prog.serve(
+        batching=batching,
+        max_batch=max(SESSIONS),
+        admission_depth=2 * BLOCK,
+    ) as server:
+        sessions = [server.open_session() for _ in range(n_sessions)]
+        t0 = time.perf_counter()
+        for i in range(0, len(stream), BLOCK):
+            chunk = stream[i:i + BLOCK]
+            for s in sessions:
+                s.submit(chunk, port="source")
+        for s in sessions:
+            s.close()
+        assert server.drain(timeout=600), "server drain timed out"
+        dt = time.perf_counter() - t0
+        t = server.telemetry.lifetime()
+        expect = n_sessions * len(stream)
+        assert t.device_tokens_in == expect, (
+            f"served {t.device_tokens_in} device tokens, expected {expect}"
+        )
+    return dt
+
+
+def _warm(prog) -> None:
+    """Trace every dispatch variant outside the timed regions: the unbatched
+    step and one batched step per power-of-two bucket the sweep can hit."""
+    import jax
+    import jax.numpy as jnp
+
+    dp = prog.device_program()
+    pay = {
+        f"{a}.{p}": (
+            jnp.zeros((dp.block,), jnp.float32),
+            jnp.ones((dp.block,), bool),
+        )
+        for (a, p, _dt) in dp.in_ports
+    }
+    state = {a: dict(s) for a, s in dp.init_state.items()}
+    jax.block_until_ready(dp.step(state, pay)[1])
+    b = 1
+    while b <= max(SESSIONS):
+        ins_b = {
+            k: (jnp.stack([v[0]] * b), jnp.stack([v[1]] * b))
+            for k, v in pay.items()
+        }
+        st_b = dp.stack_states([dp.init_state] * b)
+        jax.block_until_ready(dp.batched_step(b)(st_b, ins_b)[1])
+        b *= 2
+
+
+def main() -> None:
+    net, _ = NETWORKS[NET](n=TOTAL_TOKENS)
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    full_stream = _stream(TOTAL_TOKENS)
+    # warm the jit caches (unbatched + every batch bucket) and the engine
+    # paths outside the timed region
+    _warm(prog)
+    _serve_once(prog, True, 2, full_stream[: 2 * BLOCK])
+    _serve_once(prog, False, 2, full_stream[: 2 * BLOCK])
+
+    for n in SESSIONS:
+        per_session = max(2 * BLOCK, TOTAL_TOKENS // n)
+        stream = full_stream[:per_session]
+        total = n * per_session
+        secs = {}
+        for mode, batching in (("batched", True), ("sequential", False)):
+            # best-of-3: host load drift must not masquerade as a dispatch
+            # effect (same discipline as table1's interleaved device steps)
+            dt = min(
+                _serve_once(prog, batching, n, stream) for _ in range(3)
+            )
+            secs[mode] = dt
+            emit(
+                f"server/{NET}/{mode}_B{n}",
+                1e6 * dt / total,
+                f"tput={total / dt:.0f}tok/s sessions={n}",
+            )
+        emit(
+            f"server/{NET}/speedup_B{n}",
+            0.0,
+            f"{secs['sequential'] / secs['batched']:.2f}x batched over "
+            f"sequential dispatch",
+        )
+
+
+if __name__ == "__main__":
+    main()

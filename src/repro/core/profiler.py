@@ -27,10 +27,16 @@ def profile_host(
     *,
     controller: str = "am",
     max_rounds: int = 1_000_000,
+    max_seconds: Optional[float] = None,
 ) -> Tuple[NetworkProfile, HostRuntime]:
-    """Run single-threaded, collect exec_sw + channel token counts."""
+    """Run single-threaded, collect exec_sw + channel token counts.
+
+    ``max_seconds`` is a wall-clock budget: a network that never quiesces
+    (server-style pipelines, unbounded sources) yields the profile gathered
+    so far instead of hanging for ``max_rounds`` rounds.
+    """
     rt = HostRuntime(graph, None, controller=controller)
-    rt.run_single(max_rounds)
+    rt.run_single(max_rounds, max_seconds=max_seconds)
     prof = NetworkProfile()
     for name, p in rt.profiles.items():
         prof.exec_sw[name] = p.time_ns / 1e9
@@ -47,15 +53,26 @@ def profile_device(
     *,
     block: int = 4096,
     repeats: int = 5,
+    max_seconds: Optional[float] = None,
 ) -> NetworkProfile:
     """Measure exec_hw per device-placeable actor by running it (plus required
-    context) as a compiled single-actor partition over its observed workload."""
+    context) as a compiled single-actor partition over its observed workload.
+
+    ``max_seconds`` bounds the whole sweep: actors not reached before the
+    budget expires simply keep no ``exec_hw`` entry (the MILP then treats
+    them as host-only), which beats hanging a live server's repartition
+    loop on a slow compile."""
     import jax
     import jax.numpy as jnp
 
     from repro.runtime.device_runtime import compile_partition
 
+    deadline = (
+        None if max_seconds is None else time.perf_counter() + max_seconds
+    )
     for name, actor in graph.actors.items():
+        if deadline is not None and time.perf_counter() >= deadline:
+            break
         if not actor.device_ok:
             continue
         try:
@@ -159,6 +176,70 @@ def measure_fifo_bandwidth(
         [p[0] for p in points], [p[1] for p in points], token_bytes,
     )
     return model, points
+
+
+def profile_from_telemetry(
+    graph: ActorGraph,
+    snap,  # repro.serve_stream.telemetry.TelemetrySnapshot (duck-typed)
+    base: Optional[NetworkProfile] = None,
+) -> NetworkProfile:
+    """Turn a live server telemetry window into MILP inputs (§III-E, online).
+
+    The offline profiler measures a *calibration* run once; a serving engine
+    sees the real traffic, so its window is the better estimate wherever it
+    has one:
+
+      * ``exec_sw``   — live per-actor firing time for actors that ran on
+        host threads this window; actors currently on the device keep the
+        ``base`` profile's software time (they produced no host sample);
+      * ``exec_hw``   — live: the window's device wall time shared across
+        the device actors in proportion to their ``base`` hw times (one
+        batched launch cannot be attributed per actor), falling back to an
+        even split, for actors that rode a dispatch; others keep ``base``;
+      * ``tokens``    — live per-link totals, merged over ``base``'s so
+        links currently fused away keep their calibration counts;
+      * link models / buffers / core counts — carried from ``base``.
+
+    The result is what ``partitioner.explore`` re-solves against in the
+    online repartition loop.
+    """
+    prof = NetworkProfile()
+    if base is not None:
+        prof.exec_sw.update(base.exec_sw)
+        prof.exec_hw.update(base.exec_hw)
+        prof.tokens.update(base.tokens)
+        prof.buffers.update(base.buffers)
+        prof.links.update(base.links)
+        prof.in_situ = base.in_situ
+        prof.n_cores = base.n_cores
+    for actor, t_ns in snap.actor_time_ns.items():
+        if actor in graph.actors:
+            prof.exec_sw[actor] = t_ns / 1e9
+    for key, n in snap.channel_tokens.items():
+        prof.tokens[key] = max(prof.tokens.get(key, 0), n)
+    device_s = snap.device_time_ns / 1e9
+    if device_s > 0:
+        hw_actors = [
+            a for a, act in graph.actors.items()
+            if act.device_ok and a not in snap.actor_time_ns
+        ]
+        if hw_actors:
+            weights = {
+                a: (base.exec_hw.get(a, 0.0) if base is not None else 0.0)
+                for a in hw_actors
+            }
+            total_w = sum(weights.values())
+            for a in hw_actors:
+                share = (
+                    weights[a] / total_w if total_w > 0
+                    else 1.0 / len(hw_actors)
+                )
+                prof.exec_hw[a] = device_s * share
+    if prof.n_cores is None:
+        import os
+
+        prof.n_cores = os.cpu_count()
+    return prof
 
 
 def measure_device_link(

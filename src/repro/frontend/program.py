@@ -184,6 +184,11 @@ class Program:
         return self._graph
 
     @property
+    def opts(self) -> Dict:
+        """The runtime options this Program was compiled with (a copy)."""
+        return dict(self._opts)
+
+    @property
     def module(self) -> IRModule:
         """The lowered IR this Program executes."""
         return self._module
@@ -293,6 +298,37 @@ class Program:
             plink_launches=rt.plink.stats.launches if hetero else 0,
             plink_tokens_out=rt.plink.stats.tokens_out if hetero else 0,
         )
+
+    # -- serving ---------------------------------------------------------------
+    def serve(
+        self,
+        *,
+        admission_depth: Optional[int] = None,
+        batching: bool = True,
+        max_batch: int = 32,
+        repartitioner=None,
+        start: bool = False,
+    ):
+        """A persistent multi-session streaming server over this placement.
+
+        ``run()`` executes one stream and exits; ``serve()`` returns a
+        ``repro.serve_stream.StreamServer`` that keeps the compiled runtimes
+        resident and multiplexes many client sessions over them — batched
+        device dispatch (B sessions, one launch), bounded admission queues,
+        live telemetry, and optional online repartitioning (pass an
+        ``OnlineRepartitioner``).  Use as a context manager, or pass
+        ``start=True``.  See ``docs/server.md``.
+        """
+        from repro.serve_stream import StreamServer
+
+        server = StreamServer(
+            self,
+            admission_depth=admission_depth,
+            batching=batching,
+            max_batch=max_batch,
+            repartitioner=repartitioner,
+        )
+        return server.start() if start else server
 
     # -- the recompile-with-directives loop ------------------------------------
     def repartition(

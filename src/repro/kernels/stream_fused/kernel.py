@@ -56,11 +56,25 @@ def _tile(n: int, want: int = 512) -> int:
 
 
 def fused_stream_fwd(
-    stack: jax.Array,  # (n_in, N) float32 wire stack
+    stack: jax.Array,  # (n_in, N) or (n_in, B, N) float32 wire stack
     program,
     *,
     interpret: bool = False,
-) -> jax.Array:  # (n_out, N)
+) -> jax.Array:  # (n_out, N) / (n_out, B, N)
+    """One Pallas launch per call, batched or not.
+
+    A ``(n_in, B, N)`` stack (B sessions' wires, one row each) is flattened to
+    ``(n_in, B*N)`` and run through the same grid — B sessions cost ONE kernel
+    launch, not B.  Every op is elementwise over the token axis except
+    ``matmul8``, whose 8-blocks stay inside a row when ``N % 8 == 0``, so each
+    row of the batched output is bit-identical to that row dispatched alone.
+    """
+    if stack.ndim == 3:
+        n_in_b, b, n_b = stack.shape
+        out = fused_stream_fwd(
+            stack.reshape(n_in_b, b * n_b), program, interpret=interpret
+        )
+        return out.reshape(len(program.outputs), b, n_b)
     n_in, n = stack.shape
     t = _tile(n)
     bases = [

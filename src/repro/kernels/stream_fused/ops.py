@@ -53,7 +53,7 @@ def _on_cpu() -> bool:
 
 
 def fused_stream(
-    inputs: Sequence[jax.Array],  # per-port (N,) float32 arrays
+    inputs: Sequence[jax.Array],  # per-port (N,) or (B, N) float32 arrays
     program: StreamProgram,
     *,
     use: str = "auto",  # "auto" | "pallas" | "ref"
@@ -63,6 +63,11 @@ def fused_stream(
     ``auto`` picks the jnp reference on CPU (it compiles into the enclosing
     device-step jit) and the Pallas kernel elsewhere; ``pallas`` forces the
     kernel (interpret mode on CPU — used by the equivalence tests).
+
+    Inputs with a leading batch axis — ``(B, N)``, one row per server
+    session — run as ONE kernel launch (the Pallas path flattens the token
+    axis; the ref path is shape-polymorphic), with each row bit-identical to
+    a per-session dispatch (see ``ref.fused_stream_ref``).
     """
     if use == "ref" or (use == "auto" and _on_cpu()):
         return fused_stream_ref(inputs, program)

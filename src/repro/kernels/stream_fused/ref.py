@@ -42,7 +42,10 @@ def apply_op(kind: str, params, ins: Sequence[jax.Array]) -> jax.Array:
     if kind == "matmul8":
         (basis,) = params
         x = ins[0]
-        return (x.reshape(-1, 8) @ jnp.asarray(basis)).reshape(-1)
+        # reshape back to the input's own shape so the op is polymorphic over
+        # a leading batch axis ((B, N) wires — the multi-session server); for
+        # 1-D wires this is exactly the original reshape(-1)
+        return (x.reshape(-1, 8) @ jnp.asarray(basis)).reshape(x.shape)
     if kind == "axpy":
         (c,) = params
         x, a = ins
@@ -59,7 +62,13 @@ def apply_op(kind: str, params, ins: Sequence[jax.Array]) -> jax.Array:
 
 def fused_stream_ref(inputs: Sequence[jax.Array], program) -> List[jax.Array]:
     """Evaluate ``program`` over per-port input arrays; returns output arrays
-    in the program's declared output order."""
+    in the program's declared output order.
+
+    Inputs may be ``(N,)`` wires or ``(B, N)`` batched wires (one row per
+    server session): every op is elementwise over the token axis except
+    ``matmul8``, whose 8-blocks never straddle a row when ``N % 8 == 0``, so
+    each row of the batched result is bit-identical to the row run alone.
+    """
     regs: List[jax.Array] = [None] * program.n_regs
     for i, x in enumerate(inputs):
         regs[i] = x

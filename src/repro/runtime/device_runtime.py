@@ -22,7 +22,7 @@ reads the flag.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -45,6 +45,52 @@ class DeviceProgram:
     init_state: Dict[str, Any]
     block: int
     fused: Dict[str, Tuple[str, ...]] = None  # fused actor -> member names
+    # the untraced step — what batched_step vmaps over (``step`` is jitted
+    # with donation, which a vmap must not close over)
+    raw_step: Callable = None
+    _batched: Dict[str, Callable] = field(default_factory=dict, repr=False)
+
+    def batched_step(self, batch: int) -> Callable:
+        """One jitted launch stepping ``batch`` independent session lanes.
+
+        Signature mirrors ``step`` with a leading batch axis everywhere:
+        ``(state (B,...), {in: (vals (B,block), mask (B,block))}) ->
+        (state', {out: (B,block)...}, idle (B,))``.  Lanes are vmapped, so
+        lane *i* is bit-identical to an unbatched ``step`` over lane *i*'s
+        state and block — B sessions cost one XLA dispatch (and, inside a
+        fused region, one Pallas launch) instead of B.
+
+        One traced-through-vmap callable backs every batch size; jit
+        specializes (and caches) per concrete B, so callers bucket sizes
+        (e.g. powers of two) to bound recompiles.
+        """
+        assert self.raw_step is not None, (
+            f"{self.name}: legacy DeviceProgram without raw_step cannot batch"
+        )
+        if "vmap" not in self._batched:
+            self._batched["vmap"] = jax.jit(
+                jax.vmap(self.raw_step, in_axes=(0, 0))
+            )
+        return self._batched["vmap"]
+
+    def batched_init_state(self, batch: int) -> Dict[str, Any]:
+        """``init_state`` broadcast to ``batch`` lanes."""
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                jnp.asarray(x), (batch,) + jnp.shape(jnp.asarray(x))
+            ),
+            self.init_state,
+        )
+
+    @staticmethod
+    def stack_states(states: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+        """Per-session state trees -> one batched tree (lane order kept)."""
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    @staticmethod
+    def unstack_state(batched: Dict[str, Any], lane: int) -> Dict[str, Any]:
+        """Extract one session's state tree from a batched tree."""
+        return jax.tree.map(lambda x: x[lane], batched)
 
 
 def default_vector_fire(actor: Actor):
@@ -180,6 +226,7 @@ def compile_partition(
         in_ports=in_ports,
         out_ports=out_ports,
         step=jitted,
+        raw_step=step,
         init_state=init_state,
         block=block,
         fused={

@@ -66,8 +66,11 @@ class RingFifo:
 
     def peek(self, n: int) -> Tuple[Any, ...]:
         assert self.count() >= n, f"{self.name}: peek({n}) with {self.count()}"
-        base = self._r_loc
-        return tuple(self._buf[(base + i) % self.capacity] for i in range(n))
+        i0 = self._r_loc % self.capacity
+        if i0 + n <= self.capacity:  # contiguous: one C-level slice
+            return tuple(self._buf[i0:i0 + n])
+        head = self.capacity - i0
+        return tuple(self._buf[i0:]) + tuple(self._buf[:n - head])
 
     def read(self, n: int) -> Tuple[Any, ...]:
         vals = self.peek(n)
@@ -82,12 +85,18 @@ class RingFifo:
         return self.capacity - (self._w_loc - self._r_snap)
 
     def write(self, vals: Sequence[Any]) -> None:
-        assert self.space() >= len(vals), f"{self.name}: overflow"
-        base = self._w_loc
-        for i, v in enumerate(vals):
-            self._buf[(base + i) % self.capacity] = v
-        self._w_loc += len(vals)
-        self.total_written += len(vals)
+        n = len(vals)
+        assert self.space() >= n, f"{self.name}: overflow"
+        i0 = self._w_loc % self.capacity
+        if i0 + n <= self.capacity:  # contiguous: one C-level splice
+            self._buf[i0:i0 + n] = list(vals)
+        else:
+            head = self.capacity - i0
+            vals = list(vals)
+            self._buf[i0:] = vals[:head]
+            self._buf[:n - head] = vals[head:]
+        self._w_loc += n
+        self.total_written += n
         self._sync_now()
 
     # ---- introspection ---------------------------------------------------------------

@@ -38,6 +38,16 @@ if _BF16 is not None:
 _warned_dtypes = set()
 
 
+def reset_dtype_warnings() -> None:
+    """Forget which dtypes already warned, so the next offender warns again.
+
+    The warn-once set is module-global (a process should not spam one
+    warning per staged block), which makes warn-once *assertions* depend on
+    import/execution order.  Tests reset it between cases — see the autouse
+    fixture in ``tests/conftest.py``."""
+    _warned_dtypes.clear()
+
+
 def _warn_once(key: str, msg: str) -> None:
     if key not in _warned_dtypes:
         _warned_dtypes.add(key)

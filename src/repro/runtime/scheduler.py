@@ -41,6 +41,46 @@ DEFAULT_DEPTH = 4096
 _NO_HW = "__no_hw__"
 
 
+class AdaptiveBackoff:
+    """Exponential wait ramp for async-completion polling.
+
+    The device step completes without any host-side notification (JAX async
+    dispatch has no portable completion callback), so waiters must poll —
+    but a fixed poll period either burns a core (too short) or adds latency
+    to every launch (too long), and a server keeps runtimes alive
+    *indefinitely*.  This ramp spins a few times (a step that is nearly done
+    costs nothing extra), then sleeps exponentially longer up to ``cap``;
+    any observed progress ``reset()``s it.  Threaded waiters pass
+    ``next_timeout()`` to a condition-variable wait instead of sleeping, so
+    a publish from another thread still wakes them immediately.
+    """
+
+    def __init__(
+        self, first: float = 20e-6, cap: float = 2e-3, spins: int = 2
+    ):
+        self.first = first
+        self.cap = cap
+        self.spins = spins
+        self._n = 0
+
+    def reset(self) -> None:
+        self._n = 0
+
+    def next_timeout(self) -> float:
+        """The wait budget for the next poll (0.0 while still spinning)."""
+        n = self._n
+        self._n += 1
+        if n < self.spins:
+            return 0.0
+        return min(self.first * (2.0 ** (n - self.spins)), self.cap)
+
+    def pause(self) -> None:
+        """Sleep for the next budget (single-threaded waiters)."""
+        t = self.next_timeout()
+        if t > 0.0:
+            time.sleep(t)
+
+
 @dataclass
 class ActorProfile:
     fires: int = 0
@@ -182,9 +222,23 @@ class HostRuntime:
         self._terminate = False
 
     # ------------------------------------------------------------------ single --
-    def run_single(self, max_rounds: int = 1_000_000) -> int:
-        """Deterministic single-threaded execution (ignores the thread mapping)."""
+    def run_single(
+        self,
+        max_rounds: int = 1_000_000,
+        max_seconds: Optional[float] = None,
+    ) -> int:
+        """Deterministic single-threaded execution (ignores the thread mapping).
+
+        ``max_seconds`` bounds wall-clock time — profiling a network that
+        never quiesces (a server-style pipeline) returns what it measured so
+        far instead of spinning through a million rounds.
+        """
+        deadline = (
+            None if max_seconds is None
+            else time.perf_counter() + max_seconds
+        )
         parts = list(self.partitions.values())
+        backoff = AdaptiveBackoff()
         total = 0
         for _ in range(max_rounds):
             execs = sum(p.run_round() for p in parts)
@@ -195,7 +249,11 @@ class HostRuntime:
                 if not moved and not pending:
                     break
                 if pending:  # let the in-flight device step complete
-                    time.sleep(0.0002)
+                    backoff.pause()
+            else:
+                backoff.reset()
+            if deadline is not None and time.perf_counter() >= deadline:
+                break
         return total
 
     # ------------------------------------------------------------------ threads --
@@ -216,6 +274,7 @@ class HostRuntime:
                 os.sched_setaffinity(0, {core})
             except OSError:
                 pass
+        backoff = AdaptiveBackoff()
         while True:
             with self._cv:
                 if self._terminate:
@@ -224,6 +283,7 @@ class HostRuntime:
             if execs is None:
                 return
             if execs:
+                backoff.reset()
                 with self._cv:
                     self._progress += execs
                     self._cv.notify_all()
@@ -245,8 +305,12 @@ class HostRuntime:
                     return
                 if part.has_pending_async():
                     # An async device step is still in flight: its retirement
-                    # will produce/consume tokens, so this thread is not quiet.
-                    self._cv.wait(timeout=0.001)
+                    # will produce/consume tokens, so this thread is not
+                    # quiet.  Wait on the condition variable (any publish
+                    # wakes us) with an adaptive timeout — a long-lived
+                    # hetero runtime must not busy-burn a core polling the
+                    # device, and a short fixed timeout is exactly that.
+                    self._cv.wait(timeout=max(backoff.next_timeout(), 1e-4))
                     continue
                 p0 = self._progress
             execs = self._safe_round(part)

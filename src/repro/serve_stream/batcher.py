@@ -1,0 +1,199 @@
+"""Batched device dispatch — B sessions, one launch.
+
+The sequential path costs one XLA dispatch (and one Pallas launch inside
+each fused region) *per session per block*.  The batcher stacks the staged
+blocks and device states of every session with work into a single
+``DeviceProgram.batched_step`` call: lanes are vmapped, so each session's
+lane is bit-identical to its own sequential dispatch while the launch
+overhead is paid once.
+
+Mechanics:
+
+  * **bucketing** — batch sizes are rounded up to the next power of two
+    (capped at ``max_batch``) and padded by repeating the last lane, so jit
+    specializes O(log B) programs instead of one per session count; padded
+    lanes are discarded on retire.
+  * **double buffering** — up to two batches may be in flight (a session
+    rides at most one), so the engine stages and stacks the next batch's
+    host-side arrays while the device chews on the previous one, and a
+    fresh launch goes out the moment the older batch retires.
+  * **sequential mode** — ``mode="sequential"`` dispatches one ``step`` per
+    session instead; it exists as the benchmark baseline
+    (``benchmarks/server_throughput.py``) and a debugging aid.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve_stream.session import DeviceStage
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+def _tree_ready(tree) -> bool:
+    return all(
+        getattr(a, "is_ready", lambda: True)()
+        for a in jax.tree.leaves(tree)
+        if hasattr(a, "is_ready")
+    )
+
+
+@dataclass
+class _Inflight:
+    stages: List[DeviceStage]          # one per real lane, in lane order
+    result: Tuple                      # (state', outs, idle) — batched or not
+    batched: bool
+    lanes: int                         # real lanes (≤ padded batch size)
+    t_launch_ns: int = 0
+
+
+class DeviceBatcher:
+    """Owns every in-flight device dispatch of one ``StreamServer``."""
+
+    def __init__(
+        self,
+        program,
+        *,
+        mode: str = "batched",      # "batched" | "sequential"
+        max_batch: int = 32,
+        depth: int = 2,             # in-flight batches (double buffering)
+        telemetry=None,
+    ):
+        if mode not in ("batched", "sequential"):
+            raise ValueError(f"DeviceBatcher mode {mode!r}")
+        self.program = program
+        self.mode = mode
+        self.max_batch = max(1, max_batch)
+        self.depth = max(1, depth)
+        self.telemetry = telemetry
+        self.inflight: List[_Inflight] = []
+
+    # -- launch --------------------------------------------------------------
+    def can_launch(self) -> bool:
+        return len(self.inflight) < self.depth
+
+    def launch(self, stages: List[DeviceStage]) -> int:
+        """Dispatch the staged blocks of ``stages`` (each must have just
+        produced a payload via ``stage()``); returns lanes launched."""
+        payloads = []
+        live: List[DeviceStage] = []
+        for st in stages:
+            staged = st.stage()
+            if staged is not None:
+                payloads.append(staged)
+                live.append(st)
+        if not live:
+            return 0
+        mark = len(self.inflight)
+        t0 = time.perf_counter_ns()
+        if self.mode == "sequential" or len(live) == 1:
+            # one dispatch per session — the per-session baseline
+            for st, staged in zip(live, payloads):
+                ins = {
+                    k: (jnp.asarray(v), jnp.asarray(m))
+                    for k, (v, m) in staged.items()
+                }
+                res = self.program.step(st.state, ins)
+                self.inflight.append(
+                    _Inflight([st], res, batched=False, lanes=1)
+                )
+                if self.telemetry is not None:
+                    self.telemetry.device_dispatched(
+                        1, sum(int(m.sum()) for _, m in staged.values()),
+                    )
+        else:
+            for i in range(0, len(live), self.max_batch):
+                c_live = live[i:i + self.max_batch]
+                c_pay = payloads[i:i + self.max_batch]
+                b = _bucket(len(c_live), self.max_batch)
+                padded = c_pay + [c_pay[-1]] * (b - len(c_live))
+                pad_states = [st.state for st in c_live]
+                pad_states += [c_live[-1].state] * (b - len(c_live))
+                state_b = self.program.stack_states(pad_states)
+                ins_b = {
+                    k: (
+                        jnp.asarray(np.stack([p[k][0] for p in padded])),
+                        jnp.asarray(np.stack([p[k][1] for p in padded])),
+                    )
+                    for k in padded[0]
+                }
+                res = self.program.batched_step(b)(state_b, ins_b)
+                self.inflight.append(
+                    _Inflight(c_live, res, batched=True, lanes=len(c_live))
+                )
+                if self.telemetry is not None:
+                    self.telemetry.device_dispatched(
+                        len(c_live),
+                        sum(
+                            int(m.sum())
+                            for p in c_pay
+                            for _, m in p.values()
+                        ),
+                    )
+        dt = time.perf_counter_ns() - t0
+        new = self.inflight[mark:]
+        for entry in new:  # split the call's wall time across its dispatches
+            entry.t_launch_ns = dt // len(new)
+        return len(live)
+
+    # -- retire --------------------------------------------------------------
+    def poll(self, block: bool = False) -> int:
+        """Retire completed batches (oldest first, preserving per-session
+        order); ``block=True`` forces the oldest to completion.  Returns
+        tokens moved back into host FIFOs."""
+        moved = 0
+        while self.inflight:
+            head = self.inflight[0]
+            if not block and not _tree_ready(head.result):
+                break
+            moved += self._retire(head)
+            self.inflight.pop(0)
+            block = False  # only force the oldest
+        return moved
+
+    def _retire(self, entry: _Inflight) -> int:
+        t0 = time.perf_counter_ns()
+        state, outs, _idle = entry.result
+        moved = 0
+        if entry.batched:
+            outs_np = {
+                k: (np.asarray(v), np.asarray(m)) for k, (v, m) in outs.items()
+            }
+            for lane, st in enumerate(entry.stages):
+                lane_state = self.program.unstack_state(state, lane)
+                lane_outs = {
+                    k: (v[lane], m[lane]) for k, (v, m) in outs_np.items()
+                }
+                moved += st.retire(lane_state, lane_outs)
+        else:
+            (st,) = entry.stages
+            moved += st.retire(state, outs)
+        if self.telemetry is not None:
+            self.telemetry.device_retired(
+                moved, time.perf_counter_ns() - t0 + entry.t_launch_ns
+            )
+        return moved
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def pending(self) -> bool:
+        return bool(self.inflight)
+
+    def drain(self) -> int:
+        """Force-retire everything in flight (poll only forces the oldest)."""
+        moved = 0
+        while self.inflight:
+            moved += self.poll(block=True)
+        return moved

@@ -1,0 +1,457 @@
+"""StreamServe — a persistent multi-session service over one compiled Program.
+
+``Program.run()`` executes one stream to quiescence and exits; a server for
+heavy traffic must instead keep the compiled placement *resident* and run
+many client streams through it concurrently.  ``StreamServer`` does that
+with one engine thread driving cooperative rounds:
+
+  admission pump   sessions' bounded queues -> ingress FIFOs (backpressure)
+  host round       every session's host actor machines fire round-robin
+  device dispatch  the batcher packs ready blocks from many sessions into
+                   ONE batched device launch (``DeviceProgram.batched_step``,
+                   double-buffered) — B sessions, one dispatch
+  egress drain     result FIFOs -> per-session output buffers
+  repartition      telemetry feeds the online repartitioner; an accepted
+                   XCF is hot-swapped at a fully drained chunk boundary
+
+The swap protocol is drain-and-rebuild: admission pumping stops, in-flight
+tokens flow out through the *old* placement, and only when every pipeline
+is empty (admission queues — pure untouched client input — excepted) is the
+program recompiled and each session's plumbing rebuilt, with actor state
+transplanted by name.  No token is dropped or reordered: everything already
+admitted left through the old placement in order, everything still queued
+enters the new one in order.
+
+Idle behavior uses the runtime's ``AdaptiveBackoff`` + a condition variable
+notified by ``submit``/``close``/``stop`` — a parked server burns no core.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.runtime.scheduler import AdaptiveBackoff
+from repro.serve_stream.batcher import DeviceBatcher
+from repro.serve_stream.session import (
+    ServeError,
+    SessionPipeline,
+    StreamSession,
+)
+from repro.serve_stream.telemetry import ServerTelemetry
+
+
+def _authored_key(module, ch_key: Tuple[str, str, str, str]):
+    """Map a lowered channel key back to its authored-graph key.
+
+    Fusion renames boundary endpoints to ``fusedN`` / ``member__PORT``; the
+    MILP evaluates over authored channels, so telemetry must record the
+    authored key.  Ports of fused actors encode their member as
+    ``member__PORT``."""
+    src, sp, dst, dp = ch_key
+    g = module.source
+    if g is None:
+        return ch_key
+    if src not in g.actors and "__" in sp:
+        src, sp = sp.split("__", 1)
+    if dst not in g.actors and "__" in dp:
+        dst, dp = dp.split("__", 1)
+    return (src, sp, dst, dp)
+
+
+class StreamServer:
+    """Persistent serving runtime over one compiled ``Program``.
+
+    Use as a context manager (or call ``start()``/``stop()``)::
+
+        with prog.serve() as server:
+            s = server.open_session()
+            s.submit(chunk)           # bounded admission queue
+            s.close()
+            s.join()
+            s.output()                # bit-identical to prog.run()'s stream
+    """
+
+    def __init__(
+        self,
+        program,
+        *,
+        admission_depth: Optional[int] = None,
+        batching: Union[bool, str] = True,
+        max_batch: int = 32,
+        repartitioner=None,  # OnlineRepartitioner (or None)
+    ):
+        self._program = program
+        self._opts = dict(program.opts)
+        self.telemetry = ServerTelemetry()
+        self.admission_depth = admission_depth or max(
+            2 * self._opts["block"], 4096
+        )
+        self.mode = (
+            batching if isinstance(batching, str)
+            else ("batched" if batching else "sequential")
+        )
+        self.max_batch = max_batch
+        self.repartitioner = repartitioner
+        if repartitioner is not None:
+            repartitioner.bind(self)
+
+        module = program.module
+        devset = set(module.hw_region.actors) if module.hw_region else set()
+        self.ingress_ports = sorted(
+            n for n, a in module.actors.items()
+            if not a.inputs and n not in devset
+        )
+        self.egress_ports = sorted(
+            n for n, a in module.actors.items()
+            if not a.outputs and n not in devset
+        )
+        if not self.ingress_ports:
+            raise ServeError(
+                f"{module.name}: no source actors to serve through — a "
+                f"served program needs at least one ingress"
+            )
+
+        self._batcher = self._make_batcher()
+        self._sessions: List[StreamSession] = []
+        self._next_sid = 0
+        self._lock = threading.RLock()        # session list + swap requests
+        self._wake = threading.Condition()    # work arrival / space freed
+        self._pending_xcf = None              # hot-swap request
+        self._stop = False
+        self._round = 0
+        self._thread: Optional[threading.Thread] = None
+        self._engine_error: Optional[BaseException] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "StreamServer":
+        if self._thread is not None:
+            raise ServeError("server already started")
+        self._thread = threading.Thread(
+            target=self._engine_main, name="streamserve", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        with self._wake:
+            self._stop = True
+            self._wake.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._engine_error is not None:
+            err, self._engine_error = self._engine_error, None
+            raise err
+
+    def __enter__(self) -> "StreamServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client surface --------------------------------------------------------
+    @property
+    def program(self):
+        """The currently served placement (changes on hot-swap)."""
+        return self._program
+
+    def open_session(self) -> StreamSession:
+        self._check_engine()
+        with self._lock:
+            sid = self._next_sid
+            self._next_sid += 1
+            session = StreamSession(
+                sid, self, self.ingress_ports, self.egress_ports,
+                self.admission_depth,
+            )
+            session.pipeline = self._build_pipeline(session)
+            self._sessions.append(session)
+        self.telemetry.count("sessions_opened")
+        self.notify_work()
+        return session
+
+    def request_repartition(self, xcf) -> None:
+        """Ask the engine to hot-swap to ``xcf`` at the next chunk boundary."""
+        self._check_engine()
+        with self._lock:
+            self._pending_xcf = xcf
+        self.notify_work()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every opened session has finished."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._lock:
+            sessions = list(self._sessions)
+        for s in sessions:
+            left = (
+                None if deadline is None
+                else max(deadline - time.perf_counter(), 0.0)
+            )
+            if not s.join(left):
+                return False
+            self._check_engine()
+        return True
+
+    # -- engine plumbing (called from session/client threads) ----------------
+    def notify_work(self, chunks: int = 0, tokens: int = 0) -> None:
+        if chunks:
+            self.telemetry.count("chunks_submitted", chunks)
+        if tokens:
+            self.telemetry.count("tokens_submitted", tokens)
+        with self._wake:
+            self._wake.notify_all()
+
+    def wait_for_space(self, deadline: Optional[float]) -> bool:
+        """Block a submitting client until the engine frees admission space
+        (or the deadline passes).  Engine liveness is re-checked so a dead
+        engine cannot strand clients."""
+        self._check_engine()
+        if self._thread is None:
+            raise ServeError(
+                "server not started: admission queue full and nothing is "
+                "draining it"
+            )
+        with self._wake:
+            timeout = 0.05 if deadline is None else min(
+                max(deadline - time.perf_counter(), 0.0), 0.05
+            )
+            self._wake.wait(timeout)
+        if deadline is not None and time.perf_counter() >= deadline:
+            return False
+        return True
+
+    def _check_engine(self) -> None:
+        if self._engine_error is not None:
+            raise ServeError(
+                f"serving engine died: {self._engine_error!r}"
+            ) from self._engine_error
+
+    # -- engine internals ------------------------------------------------------
+    def _make_batcher(self) -> DeviceBatcher:
+        dp = self._program.device_program()
+        if dp is None:
+            return None
+        return DeviceBatcher(
+            dp, mode=self.mode, max_batch=self.max_batch,
+            telemetry=self.telemetry,
+        )
+
+    def _build_pipeline(
+        self, session: StreamSession, carry: Optional[Dict] = None
+    ) -> SessionPipeline:
+        return SessionPipeline(
+            self._program.module,
+            session,
+            self._program.device_program(),
+            controller=self._opts["controller"],
+            default_depth=self._opts["default_depth"],
+            max_execs_per_invoke=self._opts["max_execs_per_invoke"],
+            carry_state=carry,
+        )
+
+    def _engine_main(self) -> None:
+        try:
+            self._engine_loop()
+        except BaseException as e:  # noqa: BLE001 — surfaced to clients
+            self._engine_error = e
+            # fail every waiter loudly rather than hanging them — and make
+            # sure output() raises instead of returning a truncated stream
+            with self._lock:
+                for s in self._sessions:
+                    if not s.finished.is_set():
+                        s.error = s.error or (
+                            f"serving engine died mid-stream: {e!r}"
+                        )
+                        s.finished.set()
+            with self._wake:
+                self._wake.notify_all()
+
+    def _engine_loop(self) -> None:
+        backoff = AdaptiveBackoff(first=50e-6, cap=5e-3)
+        dev_backoff = AdaptiveBackoff(first=20e-6, cap=1e-3)
+        while True:
+            with self._wake:
+                if self._stop:
+                    break
+            with self._lock:
+                active = [s for s in self._sessions if not s.finished.is_set()]
+                swapping = self._pending_xcf is not None
+            moved = 0
+
+            # 1) admission pump (paused while a swap is draining)
+            if not swapping:
+                for s in active:
+                    moved += s.pipeline.pump(self.telemetry)
+            if moved:
+                with self._wake:  # free space -> unblock submitters
+                    self._wake.notify_all()
+
+            # 2) host actors
+            for s in active:
+                moved += s.pipeline.host_round(self.telemetry)
+
+            # 3) device: retire what finished, then launch what is ready
+            if self._batcher is not None:
+                retired = self._batcher.poll()
+                moved += retired
+                ready = [
+                    s.pipeline.stage for s in active
+                    if s.pipeline.stage is not None
+                    and not s.pipeline.stage.pending
+                    and s.pipeline.stage.ready_tokens() > 0
+                ]
+                if ready and self._batcher.can_launch():
+                    moved += self._batcher.launch(ready)
+                pending_device = self._batcher.pending
+            else:
+                pending_device = False
+
+            # 4) egress
+            for s in active:
+                n = s.pipeline.drain_egress()
+                if n:
+                    self.telemetry.count("tokens_delivered", n)
+                moved += n
+
+            # 5) session completion
+            for s in active:
+                if (
+                    s.closed
+                    and all(s.queued_tokens(n) == 0 for n in s.queues)
+                    and s.pipeline.quiescent()
+                ):
+                    self._record_links(s.pipeline)
+                    s.finished.set()
+                    self.telemetry.count("sessions_closed")
+                    with self._wake:
+                        self._wake.notify_all()
+
+            # 6) swap / repartition bookkeeping
+            if swapping and not pending_device:
+                if all(s.pipeline.quiescent() for s in active):
+                    self._do_swap()
+                    continue
+            if self.repartitioner is not None and not swapping:
+                # flush live sessions' link deltas into the window first, so
+                # the MILP sees channel traffic from still-open streams too
+                self._round += 1
+                if self._round % 32 == 0:
+                    for s in active:
+                        self._record_links(s.pipeline)
+                xcf = self.repartitioner.maybe()
+                if xcf is not None:
+                    with self._lock:
+                        self._pending_xcf = xcf
+
+            # 7) park when idle — adaptive: a short ramp while a device step
+            # is in flight (poll it soon), a CV wait when truly idle (only a
+            # submit/close/stop can create work, and each notifies)
+            if moved == 0:
+                if pending_device:
+                    dev_backoff.pause()
+                elif self._stall_check(active, swapping):
+                    continue
+                else:
+                    with self._wake:
+                        if not self._stop:
+                            self._wake.wait(
+                                max(backoff.next_timeout(), 1e-4)
+                            )
+            else:
+                backoff.reset()
+                dev_backoff.reset()
+
+        # shutdown: flush anything still in flight so state stays consistent
+        if self._batcher is not None:
+            self._batcher.drain()
+
+    def _stall_check(
+        self, active: List[StreamSession], swapping: bool
+    ) -> bool:
+        """Detect closed sessions that can never finish: residual tokens
+        below some consumption quantum (a torn stream tail) — stuck either
+        in the pipeline or still in the admission queue (the pump also only
+        moves whole source firings).  Marks them failed instead of hanging
+        ``join()`` forever.
+
+        Only called when the whole engine round made no progress, so any
+        remaining occupancy is provably stuck: host actors just declined to
+        fire and the device stage (if any) has nothing stageable and
+        nothing in flight.  During a swap the pump is paused, so queued
+        tokens are not evidence of a stall."""
+        hit = False
+        for s in active:
+            if not s.closed:
+                continue
+            queued = {n: s.queued_tokens(n) for n in s.queues}
+            if any(queued.values()):
+                if swapping:
+                    continue  # pump paused; the swap will resume it
+                # a whole pump quantum is still queued: pump will move it
+                # next round (this round may have raced the submit)
+                if any(
+                    q >= s.pipeline.pump_quantum[n]
+                    for n, q in queued.items()
+                    if q
+                ):
+                    continue
+            elif s.pipeline.quiescent():
+                continue  # normal completion (step 5) handles this
+            stage = s.pipeline.stage
+            if stage is not None and (stage.pending or stage._plan()):
+                continue  # device work still possible
+            quanta = dict(stage.quantum) if stage is not None else {}
+            stuck = s.pipeline.occupancy() + sum(queued.values())
+            s.error = (
+                f"session {s.sid}: stream ended with {stuck} tokens stuck "
+                f"below a consumption quantum "
+                f"{quanta or '(host actor rates)'} — submit whole "
+                f"iterations (e.g. multiples of 8 for an 8-point "
+                f"transform)"
+            )
+            self._record_links(s.pipeline)
+            s.finished.set()
+            self.telemetry.count("sessions_closed")
+            with self._wake:
+                self._wake.notify_all()
+            hit = True
+        return hit
+
+    def _record_links(self, pipeline: SessionPipeline) -> None:
+        """Fold a pipeline's per-channel token movement since the last
+        recording into telemetry (authored-graph keys, so profile ingestion
+        feeds the MILP).  Delta-based: safe to call repeatedly — the engine
+        does so periodically for live sessions and once more at
+        completion/stall/swap."""
+        module = pipeline.module
+        for key, delta in pipeline.take_link_deltas().items():
+            self.telemetry.link_moved(_authored_key(module, key), delta)
+
+    # -- the hot swap ----------------------------------------------------------
+    def _do_swap(self) -> None:
+        with self._lock:
+            xcf = self._pending_xcf
+            self._pending_xcf = None
+            if xcf is None:
+                return
+            old = self._program
+            old_assignment = old.xcf.assignment()
+            # record what the old placement moved before its pipelines die
+            for s in self._sessions:
+                if not s.finished.is_set():
+                    self._record_links(s.pipeline)
+            self._program = old.repartition(xcf=xcf)
+            self._batcher = self._make_batcher()
+            for s in self._sessions:
+                if s.finished.is_set():
+                    continue
+                carry = s.pipeline.carry_state()
+                s.pipeline = self._build_pipeline(s, carry=carry)
+        self.telemetry.swapped({
+            "from": old_assignment,
+            "to": self._program.xcf.assignment(),
+            "network": self._program.graph.name,
+        })
+        self.notify_work()

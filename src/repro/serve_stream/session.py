@@ -1,0 +1,523 @@
+"""Client sessions and their per-session pipelines.
+
+A ``StreamSession`` is one client's private stream through the server's
+shared compiled ``Program``: a bounded *admission queue* per ingress port
+(backpressure: ``submit`` blocks or raises when the queue is full), a
+private ``SessionPipeline`` executing the program's host actors over the
+session's tokens, and per-egress result buffers.
+
+The pipeline is the serve-mode reading of the lowered module (Fig. 6):
+
+  * **source actors** (no input ports) are *not* instantiated — in serve
+    mode the client IS the source, so each source's output channel becomes
+    an ingress FIFO pumped from the session's admission queue;
+  * **sink actors** (no output ports) are *not* instantiated — their input
+    channels become egress FIFOs drained into ``session.output(port)``;
+  * **device actors** are replaced by a ``DeviceStage``: the PLink's
+    stage/retire halves with the launch in the middle handed to the shared
+    ``DeviceBatcher``, so B sessions' blocks ride one batched dispatch;
+  * remaining host actors run as ordinary actor machines on the engine
+    thread (single-threaded per session, so every FIFO is non-deferred).
+
+Token values take exactly the PLink path (float32 staging, masked write-
+back), so a session's outputs are bit-identical to a sequential
+``Program.run()`` over the same input stream.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.actor_machine import ActorMachine, BasicController, PortEnv
+from repro.ir.ir import IRModule
+from repro.runtime.fifo import ReaderEndpoint, RingFifo, WriterEndpoint
+from repro.runtime.plink import _np_dtype
+
+
+class ServeError(RuntimeError):
+    """Invalid use of the streaming server."""
+
+
+class AdmissionFull(ServeError):
+    """Non-blocking submit against a full admission queue."""
+
+
+class StreamSession:
+    """One client stream.  ``submit`` / ``close`` are called from the client
+    thread; everything else is driven by the engine thread."""
+
+    def __init__(
+        self,
+        sid: int,
+        server,
+        ingress: Sequence[str],
+        egress: Sequence[str],
+        admission_depth: int,
+    ):
+        self.sid = sid
+        self._server = server
+        self.ingress = list(ingress)
+        self.egress = list(egress)
+        # Cross-thread channel: the client thread owns the writer endpoint
+        # (submit), the engine thread owns the reader (pump) — so this MUST
+        # use the deferred snapshot/publish protocol.  deferred=False's
+        # _sync_now republishes *both* counters and is only safe when one
+        # thread owns both endpoints.
+        self.queues: Dict[str, RingFifo] = {
+            name: RingFifo(
+                admission_depth, name=f"s{sid}:{name}", deferred=True
+            )
+            for name in ingress
+        }
+        self.results: Dict[str, List] = {name: [] for name in egress}
+        self.closed = False
+        self.finished = threading.Event()
+        self.pipeline: Optional[SessionPipeline] = None  # set by the server
+        self.submitted_tokens = 0
+        self.error: Optional[str] = None  # set by the engine on a dead stream
+
+    # -- client side ---------------------------------------------------------
+    def submit(
+        self,
+        values: Sequence,
+        port: Optional[str] = None,
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> None:
+        """Enqueue one input chunk, with admission backpressure.
+
+        ``port`` may be omitted for single-ingress programs.  When the queue
+        lacks space: ``block=True`` waits (engine drains it), ``block=False``
+        raises ``AdmissionFull`` — the client's cue to slow down.
+        """
+        if self.closed:
+            raise ServeError(f"session {self.sid}: submit after close()")
+        if port is None:
+            if len(self.queues) != 1:
+                raise ServeError(
+                    f"session {self.sid}: program has ingress ports "
+                    f"{sorted(self.queues)}; pass port="
+                )
+            port = next(iter(self.queues))
+        try:
+            q = self.queues[port]
+        except KeyError:
+            raise ServeError(
+                f"session {self.sid}: unknown ingress {port!r} "
+                f"(have {sorted(self.queues)})"
+            ) from None
+        values = list(values)
+        if len(values) > q.capacity:
+            raise ServeError(
+                f"session {self.sid}: chunk of {len(values)} exceeds the "
+                f"admission queue ({q.capacity}); split the chunk or raise "
+                f"admission_depth"
+            )
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        q.snapshot_writer()  # see the engine's latest published reads
+        while q.space() < len(values):
+            if not block:
+                raise AdmissionFull(
+                    f"session {self.sid}: admission queue {port!r} full "
+                    f"({q.capacity} tokens)"
+                )
+            if not self._server.wait_for_space(deadline):
+                raise AdmissionFull(
+                    f"session {self.sid}: submit timed out after {timeout}s "
+                    f"waiting for admission space on {port!r}"
+                )
+            q.snapshot_writer()
+        q.write(values)
+        q.publish_writer()  # make the chunk visible to the engine thread
+        self.submitted_tokens += len(values)
+        self._server.notify_work(chunks=1, tokens=len(values))
+
+    def close(self) -> None:
+        """Mark end-of-stream; the session finishes once fully drained."""
+        self.closed = True
+        self._server.notify_work()
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every submitted token has been processed & delivered."""
+        return self.finished.wait(timeout)
+
+    # -- engine side ---------------------------------------------------------
+    def queued_tokens(self, port: str) -> int:
+        """Fresh reader-side count of one admission queue (engine thread
+        only — snapshots the writer's latest publish)."""
+        q = self.queues[port]
+        q.snapshot_reader()
+        return q.count()
+
+    def output(self, port: Optional[str] = None) -> List:
+        """Tokens delivered on one egress port (the only one by default)."""
+        if self.error is not None:
+            raise ServeError(self.error)
+        if port is None:
+            if len(self.results) != 1:
+                # multi-sink programs: prefer the collecting sink if unique
+                raise ServeError(
+                    f"session {self.sid}: program has egress ports "
+                    f"{sorted(self.results)}; pass port="
+                )
+            port = next(iter(self.results))
+        return self.results[port]
+
+
+# ---------------------------------------------------------------------------
+# Device stage — the PLink split open around the shared batcher
+# ---------------------------------------------------------------------------
+
+
+def _region_quantum(module: IRModule, actor_name: str) -> int:
+    """Token granularity one boundary port of ``actor_name`` must be staged
+    in so no member op ever sees a torn block.
+
+    A fused region's boundary port inherits its member's per-firing rate
+    (often 1), but members *inside* the region may fire at coarser rates —
+    the 8-point IDCT consumes 8 tokens per firing behind a rate-1 descale.
+    Staging a block that is not a whole number of region iterations would
+    hand such a member a block mixing valid tokens with padding.  The LCM of
+    every member's action rates is a safe iteration granule.
+    """
+    ir = module.actors[actor_name]
+    members = ir.fused_from or (actor_name,)
+    graph = module.source
+    rates: List[int] = []
+    for m in members:
+        impl = (
+            graph.actors.get(m)
+            if graph is not None and m in getattr(graph, "actors", {})
+            else (ir.impl if m == actor_name else None)
+        )
+        if impl is None:
+            continue
+        for act in impl.actions:
+            rates.extend(act.consumes.values())
+            rates.extend(act.produces.values())
+    return math.lcm(*(max(r, 1) for r in rates)) if rates else 1
+
+
+class DeviceStage:
+    """Per-session stage/retire halves of the device dispatch.
+
+    Owns the session's device-partition state and the host FIFOs crossing
+    the boundary.  ``stage()`` drains boundary FIFOs into one ``(block,)``
+    staged payload — quantized to whole region iterations per destination
+    actor so a multi-rate op (e.g. the 8-point IDCT) never sees a torn
+    block, and lockstep ports of one actor stay lane-aligned; the batcher
+    stacks payloads from many sessions into one launch and routes each
+    lane's outputs back through ``retire()``.
+    """
+
+    def __init__(self, program, module: IRModule):
+        self.program = program
+        self.state = {a: dict(s) for a, s in program.init_state.items()}
+        self.in_eps: Dict[str, ReaderEndpoint] = {}
+        self.out_eps: Dict[str, WriterEndpoint] = {}
+        # boundary ports grouped by destination actor; per-port granule =
+        # lcm(port rate, region iteration quantum)
+        self.groups: Dict[str, List[str]] = {}
+        self.quantum: Dict[str, int] = {}
+        self.dtypes: Dict[str, object] = {}
+        for (a, p, dt) in program.in_ports:
+            key = f"{a}.{p}"
+            self.groups.setdefault(a, []).append(key)
+            self.quantum[key] = math.lcm(
+                max(module.actors[a].rate.consume_rate(p), 1),
+                _region_quantum(module, a),
+            )
+            self.dtypes[key] = _np_dtype(dt)
+        self.pending = False  # riding in an in-flight batch
+        self.tokens_staged = 0
+        self.tokens_retired = 0
+
+    def _plan(self) -> Dict[str, int]:
+        """Tokens stageable per boundary port right now (whole granules,
+        lane-aligned across each actor's ports, capped at one block)."""
+        block = self.program.block
+        plan: Dict[str, int] = {}
+        for _actor, keys in self.groups.items():
+            g = min(
+                min(self.in_eps[k].count(), block) // self.quantum[k]
+                for k in keys
+            )
+            if g > 0:
+                for k in keys:
+                    plan[k] = g * self.quantum[k]
+        return plan
+
+    def ready_tokens(self) -> int:
+        """Tokens a ``stage()`` call would drain right now."""
+        return sum(self._plan().values())
+
+    def stage(self) -> Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]]:
+        """Drain up to one block per port; None when nothing to do."""
+        plan = self._plan()
+        if not plan:
+            return None
+        block = self.program.block
+        staged = {}
+        total = 0
+        for key in self.quantum:  # every in-port must appear in the payload
+            n = plan.get(key, 0)
+            arr = np.zeros((block,), self.dtypes[key])
+            mask = np.zeros((block,), bool)
+            if n:
+                vals = self.in_eps[key].read(n)
+                arr[:n] = np.asarray(vals, dtype=arr.dtype)
+                mask[:n] = True
+            staged[key] = (arr, mask)
+            total += n
+        self.tokens_staged += total
+        self.pending = True
+        return staged
+
+    def retire(self, state, outs) -> int:
+        """Write one lane's outputs back to the host FIFOs (PLink §III-D)."""
+        self.state = state
+        moved = 0
+        for key, (vals, mask) in outs.items():
+            vals = np.asarray(vals)
+            keep = vals[np.asarray(mask)]
+            if keep.size:
+                self.out_eps[key].write(list(keep))
+                moved += int(keep.size)
+        self.pending = False
+        self.tokens_retired += moved
+        return moved
+
+    def idle(self) -> bool:
+        return not self.pending and not self._plan()
+
+
+# ---------------------------------------------------------------------------
+# Session pipeline
+# ---------------------------------------------------------------------------
+
+
+class SessionPipeline:
+    """Executable serve-mode plumbing for one session over a lowered module.
+
+    Built against the *current* program; a hot-swap rebuilds it (at a fully
+    drained boundary) and transplants actor state by name.
+    """
+
+    def __init__(
+        self,
+        module: IRModule,
+        session: StreamSession,
+        device_program,
+        *,
+        controller: str = "am",
+        default_depth: int = 4096,
+        max_execs_per_invoke: int = 10_000,
+        carry_state: Optional[Dict[str, Dict]] = None,
+    ):
+        self.module = module
+        self.session = session
+        self.max_execs_per_invoke = max_execs_per_invoke
+
+        devset = set(module.hw_region.actors) if module.hw_region else set()
+        sources = {
+            n for n, a in module.actors.items()
+            if not a.inputs and n not in devset
+        }
+        sinks = {
+            n for n, a in module.actors.items()
+            if not a.outputs and n not in devset
+        }
+        host = [
+            n for n in module.topo_order()
+            if n not in devset | sources | sinks
+        ]
+
+        self.stage = (
+            DeviceStage(device_program, module) if devset else None
+        )
+        self.fifos: Dict[Tuple, RingFifo] = {}     # channel key -> fifo
+        self.ingress: Dict[str, RingFifo] = {}     # source name -> fifo
+        self.egress: List[Tuple[str, RingFifo]] = []  # (sink name, fifo)
+        readers: Dict[str, Dict[str, ReaderEndpoint]] = {a: {} for a in host}
+        writers: Dict[str, Dict[str, WriterEndpoint]] = {a: {} for a in host}
+
+        for ch in module.channels:
+            if ch.src in devset and ch.dst in devset:
+                continue  # compiled inside the device program
+            f = RingFifo(
+                ch.resolved_depth or default_depth,
+                name=f"s{session.sid}:{ch}",
+                deferred=False,  # one engine thread drives the pipeline
+            )
+            self.fifos[ch.key] = f
+            # writer side
+            if ch.src in sources:
+                if ch.src in self.ingress:
+                    raise ServeError(
+                        f"{module.name}: source {ch.src!r} fans out at the "
+                        f"graph level; serve mode supports one channel per "
+                        f"ingress port"
+                    )
+                self.ingress[ch.src] = f
+            elif ch.src in devset:
+                self.stage.out_eps[f"{ch.src}.{ch.src_port}"] = (
+                    WriterEndpoint(f)
+                )
+            else:
+                writers[ch.src][ch.src_port] = WriterEndpoint(f)
+            # reader side
+            if ch.dst in sinks:
+                self.egress.append((ch.dst, f))
+            elif ch.dst in devset:
+                self.stage.in_eps[f"{ch.dst}.{ch.dst_port}"] = (
+                    ReaderEndpoint(f)
+                )
+            else:
+                readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+
+        # per-channel totals already folded into server telemetry — the
+        # engine records *deltas* periodically, so long-lived sessions feed
+        # the online repartitioner too, not just finished ones
+        self._link_marks: Dict[Tuple, int] = {}
+
+        carry = carry_state or {}
+        self.instances: Dict[str, object] = {}
+        for name in host:
+            impl = module.actors[name].impl
+            env = PortEnv(readers[name], writers[name])
+            inst = (
+                ActorMachine(impl, env)
+                if controller == "am"
+                else BasicController(impl, env)
+            )
+            if name in carry:  # hot-swap: persistent actor state survives
+                inst.state = carry[name]
+            self.instances[name] = inst
+        if self.stage is not None and carry:
+            self.stage.state = _transplant_device_state(
+                device_program, self.stage.state, carry
+            )
+
+        # one admission pump moves at most this many tokens per round — a
+        # whole number of source firings keeps multi-token actions intact
+        self.pump_quantum = {
+            name: math.lcm(
+                *(max(r, 1) for _, r in module.actors[name].rate.produces),
+                1,
+            )
+            for name in self.ingress
+        }
+
+    # -- engine-side round pieces -------------------------------------------
+    def pump(self, telemetry=None) -> int:
+        """Admission queues -> ingress FIFOs (bounded by FIFO space).
+
+        Engine-thread only; it owns the queues' reader endpoints, so each
+        pump snapshots the client's published writes and publishes its own
+        reads back (the deferred cross-thread FIFO protocol)."""
+        moved = 0
+        for name, fifo in self.ingress.items():
+            q = self.session.queues[name]
+            quantum = self.pump_quantum[name]
+            n = min(self.session.queued_tokens(name), fifo.space())
+            n -= n % quantum
+            if n <= 0:
+                continue
+            fifo.write(list(q.read(n)))
+            q.publish_reader()  # free the space for blocked submitters
+            moved += n
+            if telemetry is not None:
+                telemetry.queue_depth(q.count())
+        return moved
+
+    def host_round(self, telemetry=None) -> int:
+        """Fire every host actor machine once (round-robin, like a thread
+        partition's fire step)."""
+        execs = 0
+        for name, inst in self.instances.items():
+            t0 = time.perf_counter_ns()
+            e = inst.invoke(self.max_execs_per_invoke)
+            if telemetry is not None and e:
+                telemetry.actor_fired(
+                    name, e, time.perf_counter_ns() - t0
+                )
+            execs += e
+        return execs
+
+    def drain_egress(self) -> int:
+        """Egress FIFOs -> session result buffers."""
+        moved = 0
+        for sink, fifo in self.egress:
+            n = fifo.count()
+            if n:
+                self.session.results[sink].extend(fifo.read(n))
+                moved += n
+        return moved
+
+    def occupancy(self) -> int:
+        """Tokens anywhere inside the pipeline (excludes admission queues)."""
+        toks = sum(f.occupancy() for f in self.fifos.values())
+        if self.stage is not None and self.stage.pending:
+            toks += 1  # an in-flight device block counts as occupancy
+        return toks
+
+    def quiescent(self) -> bool:
+        return self.occupancy() == 0
+
+    def take_link_deltas(self) -> Dict[Tuple, int]:
+        """Per-channel tokens moved since the last call (marks advance)."""
+        out: Dict[Tuple, int] = {}
+        for key, f in self.fifos.items():
+            d = f.total_written - self._link_marks.get(key, 0)
+            if d:
+                out[key] = d
+                self._link_marks[key] = f.total_written
+        return out
+
+    def carry_state(self) -> Dict[str, Dict]:
+        """Actor state to transplant into a rebuilt pipeline (hot-swap)."""
+        carry = {n: inst.state for n, inst in self.instances.items()}
+        if self.stage is not None:
+            carry.update(_flatten_device_state(self.stage))
+        return carry
+
+
+# -- device-state transplant across placements ------------------------------
+
+
+def _flatten_device_state(stage: DeviceStage) -> Dict[str, Dict]:
+    """Per-member view of the device state, undoing fusion grouping."""
+    flat: Dict[str, Dict] = {}
+    fused = stage.program.fused or {}
+    for actor, st in stage.state.items():
+        members = fused.get(actor)
+        if members and set(st) == set(members):
+            flat.update({m: dict(s) for m, s in st.items()})
+        else:
+            flat[actor] = st
+    return flat
+
+
+def _transplant_device_state(program, init, carry: Dict[str, Dict]):
+    """Rebuild a device-state tree from carried per-member state where the
+    actor names (and state keys) still match; everything else reinitializes."""
+    fused = program.fused or {}
+    state = {}
+    for actor, st in init.items():
+        members = fused.get(actor)
+        if members and set(st) == set(members):
+            state[actor] = {
+                m: carry.get(m, st[m])
+                if set(carry.get(m, st[m])) == set(st[m]) else st[m]
+                for m in st
+            }
+        else:
+            old = carry.get(actor, st)
+            state[actor] = old if set(old) == set(st) else st
+    return state

@@ -13,3 +13,15 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_plink_dtype_warnings():
+    """PLink warns once per dtype per process; reset the warn-once set
+    around every test so assertions on the warning never depend on which
+    test (or import) staged that dtype first."""
+    from repro.runtime.plink import reset_dtype_warnings
+
+    reset_dtype_warnings()
+    yield
+    reset_dtype_warnings()

@@ -1,0 +1,424 @@
+"""StreamServe: batched multi-session serving bitwise-equal to sequential
+``Program.run()``s, admission backpressure, mid-stream XCF hot-swap, online
+repartition plumbing, batched kernels, and the satellite fixes (adaptive
+scheduler backoff, profiler wall-clock budget, PLink warn-once reset)."""
+
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.apps.streams import NETWORKS
+from repro.core.cost_model import NetworkProfile
+from repro.core.profiler import profile_from_telemetry, profile_host
+from repro.frontend.program import synthesize_xcf
+from repro.kernels.stream_fused import StreamOp, StreamProgram, fused_stream
+from repro.runtime.scheduler import AdaptiveBackoff
+from repro.serve_stream import (
+    AdmissionFull,
+    OnlineRepartitioner,
+    ServeError,
+)
+from repro.serve_stream.telemetry import ServerTelemetry
+
+BLOCK = 256
+
+
+def drain_source(graph, name="source"):
+    """The exact token stream the network's source would generate — what a
+    serve-mode client submits in its place."""
+    actor = graph.actors[name]
+    action = actor.actions[0]
+    state = dict(actor.initial_state)
+    out = []
+    while action.guard is None or action.guard(state, {}):
+        state, produced = action.fire(state, {})
+        vals = produced.get(actor.outputs[0].name, [])
+        if not vals:
+            break
+        out.extend(vals)
+    return out
+
+
+def _build(name, size):
+    builder = NETWORKS[name]
+    return builder(size) if name != "FIR32" else builder(n=size)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: N batched sessions == N sequential Program.run()s, bitwise
+# ---------------------------------------------------------------------------
+
+SIZES = {  # three per-session workload sizes each (staggered on purpose)
+    "TopFilter": [900, 1200, 600],
+    "FIR32": [400, 600, 500],
+    "Bitonic8": [32, 48, 40],
+    "IDCT8": [32, 48, 40],
+}
+EGRESS = {"FIR32": "sink"}  # FIR also has the x-forward xsink
+
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_batched_sessions_bitwise_equal_sequential(name):
+    sizes = SIZES[name]
+    refs, streams = [], []
+    for sz in sizes:
+        net, got = _build(name, sz)
+        prog = repro.compile(net, backend="device", block=BLOCK)
+        streams.append(drain_source(prog.graph))
+        prog.run()
+        refs.append(list(got))
+
+    net, _ = _build(name, sizes[0])
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    with prog.serve(batching=True) as server:
+        sessions = [server.open_session() for _ in sizes]
+        # interleaved, uneven chunks — sessions progress at different speeds
+        offsets = [0] * len(sessions)
+        chunks = [96, 160, 64]
+        while any(o < len(st) for o, st in zip(offsets, streams)):
+            for i, s in enumerate(sessions):
+                if offsets[i] < len(streams[i]):
+                    c = streams[i][offsets[i]:offsets[i] + chunks[i % 3]]
+                    s.submit(c)
+                    offsets[i] += len(c)
+        for s in sessions:
+            s.close()
+        assert server.drain(timeout=120)
+        for s, ref in zip(sessions, refs):
+            assert s.output(EGRESS.get(name)) == ref  # bitwise
+        t = server.telemetry.lifetime()
+    # sessions actually shared launches: more lanes than dispatches
+    assert t.device_dispatches >= 1
+    assert t.device_lanes > t.device_dispatches
+    assert t.tokens_delivered > 0
+
+
+def test_sequential_dispatch_mode_matches_batched():
+    """batching=False (the benchmark baseline) produces the same streams."""
+    net, got = _build("IDCT8", 40)
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    stream = drain_source(prog.graph)
+    prog.run()
+    ref = list(got)
+    for batching in (True, False):
+        net2, _ = _build("IDCT8", 40)
+        prog2 = repro.compile(net2, backend="device", block=BLOCK)
+        with prog2.serve(batching=batching) as server:
+            ss = [server.open_session() for _ in range(2)]
+            for s in ss:
+                s.submit(stream)
+                s.close()
+            assert server.drain(timeout=60)
+            for s in ss:
+                assert s.output() == ref
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels / batched device step
+# ---------------------------------------------------------------------------
+
+
+def _demo_program():
+    basis = np.linalg.qr(np.random.default_rng(0).normal(size=(8, 8)))[0]
+    ops = (
+        StreamOp("affine", (0,), 1, (-1.5, 0.25, 3.0)),
+        StreamOp("matmul8", (1,), 2, (basis.astype(np.float32),)),
+        StreamOp("clip", (2,), 3, (-2.0, 2.0)),
+    )
+    return StreamProgram(n_inputs=1, n_regs=4, ops=ops, outputs=(3,))
+
+
+@pytest.mark.parametrize("use", ["ref", "pallas"])
+def test_fused_stream_leading_batch_dim_bitident(use):
+    """(B, N) wires: one launch, every row bit-identical to its solo run."""
+    prog = _demo_program()
+    rng = np.random.default_rng(1)
+    rows = [rng.normal(size=(64,)).astype(np.float32) for _ in range(5)]
+    solo = [
+        np.asarray(fused_stream([jnp.asarray(r)], prog, use=use)[0])
+        for r in rows
+    ]
+    (batched,) = fused_stream([jnp.asarray(np.stack(rows))], prog, use=use)
+    batched = np.asarray(batched)
+    assert batched.shape == (5, 64)
+    for i in range(5):
+        np.testing.assert_array_equal(batched[i], solo[i])
+
+
+def test_device_program_batched_step_bitident():
+    net, _ = _build("FIR32", 64)
+    prog = repro.compile(net, backend="device", block=64)
+    dp = prog.device_program()
+    rng = np.random.default_rng(0)
+    B = 3
+    payloads = [
+        {
+            f"{a}.{p}": (
+                jnp.asarray(rng.random(dp.block).astype(np.float32) * 100),
+                jnp.ones((dp.block,), bool),
+            )
+            for (a, p, _dt) in dp.in_ports
+        }
+        for _ in range(B)
+    ]
+    solo = [
+        dp.step({a: dict(s) for a, s in dp.init_state.items()}, pay)
+        for pay in payloads
+    ]
+    state_b = dp.stack_states([dp.init_state] * B)
+    ins_b = {
+        k: (
+            jnp.stack([p[k][0] for p in payloads]),
+            jnp.stack([p[k][1] for p in payloads]),
+        )
+        for k in payloads[0]
+    }
+    _, outs_b, idle_b = dp.batched_step(B)(state_b, ins_b)
+    for b in range(B):
+        _, outs_s, idle_s = solo[b]
+        for k in outs_s:
+            np.testing.assert_array_equal(
+                np.asarray(outs_s[k][0]), np.asarray(outs_b[k][0][b])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(outs_s[k][1]), np.asarray(outs_b[k][1][b])
+            )
+        assert bool(idle_s) == bool(idle_b[b])
+
+
+# ---------------------------------------------------------------------------
+# Admission backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_admission_backpressure_nonblocking_raises():
+    net, _ = _build("TopFilter", 512)
+    prog = repro.compile(net, backend="device", block=128)
+    server = prog.serve(admission_depth=128)  # engine NOT started
+    s = server.open_session()
+    s.submit([1.0] * 128, block=False)  # exactly fills the queue
+    with pytest.raises(AdmissionFull):
+        s.submit([1.0], block=False)
+    with pytest.raises(ServeError):  # oversized chunk is rejected up front
+        s.submit([1.0] * 129, block=False)
+    with pytest.raises(ServeError):  # blocking on a dead engine must not hang
+        s.submit([1.0] * 64, timeout=0.2)
+
+
+def test_admission_backpressure_blocking_completes():
+    net, got = _build("TopFilter", 2048)
+    prog = repro.compile(net, backend="device", block=128)
+    stream = drain_source(prog.graph)
+    prog.run()
+    ref = list(got)
+    net2, _ = _build("TopFilter", 2048)
+    prog2 = repro.compile(net2, backend="device", block=128)
+    with prog2.serve(admission_depth=256) as server:
+        s = server.open_session()
+        for i in range(0, len(stream), 200):  # >> queue depth in total
+            s.submit(stream[i:i + 200])  # blocks until the engine drains
+        s.close()
+        assert server.drain(timeout=60)
+        assert s.output() == ref
+        assert server.telemetry.lifetime().queue_peak <= 256
+
+
+def test_stalled_stream_fails_loudly():
+    """A closed stream with residue below the staging quantum (torn 8-block)
+    must fail the session, not hang join() or emit wrong values."""
+    net, _ = _build("IDCT8", 8)
+    prog = repro.compile(net, backend="device", block=64)
+    with prog.serve() as server:
+        s = server.open_session()
+        s.submit([1.0] * 12)  # 12 % 8 != 0 — the tail can never stage
+        s.close()
+        assert s.join(timeout=60)
+        with pytest.raises(ServeError, match="quantum"):
+            s.output()
+
+
+def test_stalled_stream_fails_loudly_on_host_placement():
+    """Same torn tail, but with the 8-consuming actor on a *host* thread
+    (no device stage at all): the stall detector must still fire instead of
+    hanging join() forever."""
+    net, _ = _build("Bitonic8", 8)  # Deal consumes 8 per firing, host-only
+    prog = repro.compile(net, backend="host", block=64)
+    with prog.serve() as server:
+        s = server.open_session()
+        s.submit([1.0] * 12)  # 4 tokens can never reach Deal's 8-rate
+        s.close()
+        assert s.join(timeout=60)
+        with pytest.raises(ServeError, match="quantum"):
+            s.output()
+
+
+def test_concurrent_client_threads():
+    """Each session driven by its own client thread, submitting chunks
+    concurrently against a small queue — exercises the cross-thread
+    admission protocol (deferred snapshot/publish) under contention."""
+    import threading
+
+    net, got = _build("TopFilter", 4096)
+    prog = repro.compile(net, backend="device", block=128)
+    stream = drain_source(prog.graph)
+    prog.run()
+    ref = list(got)
+    net2, _ = _build("TopFilter", 4096)
+    prog2 = repro.compile(net2, backend="device", block=128)
+    with prog2.serve(admission_depth=256) as server:
+        sessions = [server.open_session() for _ in range(4)]
+        errs = []
+
+        def client(s):
+            try:
+                for i in range(0, len(stream), 100):
+                    s.submit(stream[i:i + 100])  # blocks on backpressure
+                s.close()
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [
+            threading.Thread(target=client, args=(s,)) for s in sessions
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert server.drain(timeout=120)
+        for s in sessions:
+            assert s.output() == ref
+
+
+# ---------------------------------------------------------------------------
+# Online repartitioning
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_mid_stream_no_loss_no_reorder():
+    net, got = _build("TopFilter", 2000)
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    stream = drain_source(prog.graph)
+    prog.run()
+    ref = list(got)
+    net2, _ = _build("TopFilter", 2000)
+    prog2 = repro.compile(net2, backend="device", block=BLOCK)
+    with prog2.serve() as server:
+        ss = [server.open_session() for _ in range(2)]
+        for s in ss:
+            s.submit(stream[:1000])
+        time.sleep(0.05)  # let some tokens flow through the old placement
+        server.request_repartition(synthesize_xcf(prog2.graph, "host"))
+        for s in ss:
+            s.submit(stream[1000:])
+            s.close()
+        assert server.drain(timeout=120)
+        for s in ss:
+            out = s.output()
+            assert len(out) == len(ref)
+            assert out == ref  # nothing dropped, nothing reordered
+        t = server.telemetry.lifetime()
+        assert t.swaps == 1
+        assert server.program.hw_partition is None  # now host-only
+        assert server.telemetry.swap_log[0]["to"]["filter"] == "t0"
+
+
+def test_online_repartitioner_proposes_accel_under_load():
+    """Fabricated telemetry showing an expensive host actor + a cheap hw
+    profile: the MILP must propose moving it to the accelerator."""
+    net, _ = _build("TopFilter", 1024)
+    prog = repro.compile(net, backend="host", block=BLOCK)
+    base = NetworkProfile()
+    base.exec_hw["filter"] = 1e-4  # calibration: filter is cheap on hw
+    rep = OnlineRepartitioner(
+        interval_s=0.0, min_window_s=0.0, min_gain=0.0, thread_counts=(1,),
+        base_profile=base,
+    )
+
+    class _FakeServer:
+        pass
+
+    fake = _FakeServer()
+    fake.program = prog
+    fake.telemetry = ServerTelemetry()
+    rep.bind(fake)
+    t = fake.telemetry
+    t.actor_fired("source", 1024, int(1e6))
+    t.actor_fired("filter", 1024, int(5e9))  # 5s of host time: the hot spot
+    t.actor_fired("sink", 512, int(1e6))
+    for key in [("source", "OUT", "filter", "IN"),
+                ("filter", "OUT", "sink", "IN")]:
+        t.link_moved(key, 1024)
+    xcf = rep.propose(t.snapshot())
+    assert xcf is not None
+    assert xcf.assignment()["filter"] == "accel"
+    assert rep.decisions[-1][2] is True
+
+
+def test_profile_from_telemetry_merges_base():
+    net, _ = _build("TopFilter", 64)
+    graph = net.graph()
+    base = NetworkProfile()
+    base.exec_sw["filter"] = 123.0      # stale: live sample must win
+    base.exec_sw["sink"] = 7.0          # no live sample: must survive
+    base.exec_hw["filter"] = 0.5
+    base.tokens[("source", "OUT", "filter", "IN")] = 11
+    t = ServerTelemetry()
+    t.actor_fired("filter", 10, int(2e9))
+    t.link_moved(("source", "OUT", "filter", "IN"), 999)
+    prof = profile_from_telemetry(graph, t.snapshot(), base=base)
+    assert prof.exec_sw["filter"] == pytest.approx(2.0)
+    assert prof.exec_sw["sink"] == 7.0
+    assert prof.exec_hw["filter"] == 0.5
+    assert prof.tokens[("source", "OUT", "filter", "IN")] == 999
+
+
+# ---------------------------------------------------------------------------
+# Satellites
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_backoff_ramps_and_resets():
+    b = AdaptiveBackoff(first=1e-4, cap=1e-3, spins=2)
+    seq = [b.next_timeout() for _ in range(8)]
+    assert seq[0] == 0.0 and seq[1] == 0.0          # spin phase
+    assert seq[2] == pytest.approx(1e-4)
+    assert all(x <= 1e-3 for x in seq)              # capped
+    assert seq[-1] == pytest.approx(1e-3)
+    b.reset()
+    assert b.next_timeout() == 0.0                  # progress restarts spin
+
+
+def test_profile_host_wall_clock_budget():
+    """A source that never exhausts must not hang profiling."""
+    from repro.core.graph import ActorGraph
+    from repro.core.actor import sink_actor, source_actor
+
+    g = ActorGraph("endless")
+    g.add(source_actor("src", lambda st: (st, 1.0)))  # no has_next: forever
+    g.add(sink_actor("snk", lambda st, v: st))
+    g.connect("src", "snk", depth=64)
+    t0 = time.perf_counter()
+    prof, _rt = profile_host(g, max_seconds=0.2)
+    assert time.perf_counter() - t0 < 5.0
+    assert prof.exec_sw["src"] > 0.0
+
+
+def test_plink_dtype_warning_resettable():
+    from repro.runtime.plink import _np_dtype, reset_dtype_warnings
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        _np_dtype("no-such-dtype")
+        assert len(w) == 1          # first sighting warns
+        _np_dtype("no-such-dtype")
+        assert len(w) == 1          # warn-once holds
+    reset_dtype_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        _np_dtype("no-such-dtype")
+        assert len(w) == 1          # reset: next offender warns again
