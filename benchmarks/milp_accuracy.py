@@ -16,7 +16,8 @@ from repro.apps.streams import NETWORKS
 from repro.core.cost_model import evaluate
 from repro.core.xcf import make_xcf
 
-SIZES = {"TopFilter": 16000, "FIR32": 3000, "Bitonic8": 600, "IDCT8": 600}
+SIZES = {"TopFilter": 16000, "FIR32": 3000, "Bitonic8": 600, "IDCT8": 600,
+         "ZigZag": 80}
 
 
 def sample_assignments(g, n_threads=2, max_points=6):

@@ -1,0 +1,84 @@
+"""Multi-partition device runtime: k-way accelerator splits vs one partition.
+
+Runs FIR32 and ZigZag to quiescence under 1-partition and 2-partition
+device placements of the same network (the 2-way split cuts the
+device-eligible actors in topological halves, so the systolic (x, acc)
+pair crosses the partitions as a staged ``ArrayFifo`` lane pair) and emits:
+
+  * ``multi_partition/{net}/{k}part``      — µs/token end to end,
+  * ``multi_partition/{net}/lane/{pid}``   — per-PLink-lane rows: launches,
+    tokens in/out, and staged-transfer µs/launch, straight from each lane's
+    ``PLinkStats`` — the lane-level numbers ``BENCH_streams.json`` tracks
+    across PRs.
+
+Smoke mode (``BENCH_SMOKE=1``) shrinks workloads ~10x.
+"""
+
+from __future__ import annotations
+
+import time
+
+from _util import emit, smoke_scale
+
+import repro
+from repro.apps.streams import NETWORKS
+from repro.core.xcf import make_xcf
+
+SIZES = smoke_scale({"FIR32": 8000, "ZigZag": 200})
+TOKENS_PER_UNIT = {"FIR32": 1, "ZigZag": 64}
+BLOCK = 1024
+REPEATS = 2
+
+
+def _split_xcf(graph, k: int):
+    elig = [a for a in graph.topo_order() if graph.actors[a].device_ok]
+    cut = max(1, len(elig) // k)
+    accels = [f"d{i}" for i in range(k)]
+    asg = {}
+    for a in graph.actors:
+        if a in elig:
+            asg[a] = accels[min(elig.index(a) // cut, k - 1)]
+        else:
+            asg[a] = "t0"
+    return make_xcf(graph.name, asg, accel=tuple(accels))
+
+
+def main() -> None:
+    for name in ("FIR32", "ZigZag"):
+        size = SIZES[name]
+        net, got = (
+            NETWORKS[name](n=size) if name == "FIR32"
+            else NETWORKS[name](size)
+        )
+        tokens = size * TOKENS_PER_UNIT[name]
+        for k in (1, 2):
+            prog = repro.compile(net, _split_xcf(net.graph(), k), block=BLOCK)
+            best, rt = float("inf"), None
+            for _ in range(REPEATS):
+                got.clear()
+                rt = prog._build_runtime()
+                t0 = time.perf_counter()
+                rt.run_threads()
+                best = min(best, time.perf_counter() - t0)
+            emit(
+                f"multi_partition/{name}/{k}part",
+                1e6 * best / tokens,
+                f"tput={tokens / best:.0f}tok/s produced={len(got)}",
+            )
+            for pid, plink in sorted(rt.plinks.items()):
+                s = plink.stats
+                staged_us = (s.h2d_ns + s.d2h_ns) / 1e3
+                emit(
+                    f"multi_partition/{name}/lane/{pid}",
+                    staged_us / max(s.launches, 1),
+                    f"launches={s.launches} tokens_in={s.tokens_in} "
+                    f"tokens_out={s.tokens_out} idle={s.idle_signals}",
+                )
+
+
+if __name__ == "__main__":
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    main()

@@ -32,6 +32,8 @@ SUITES = [
     ("roofline", "roofline"),               # §Roofline from dry-run artifacts
     ("server_throughput", "server_throughput"),  # StreamServe: batched vs
     #                                              sequential device dispatch
+    ("multi_partition", "multi_partition"),  # k-way accelerator splits:
+    #                                          end-to-end + per-PLink-lane rows
 ]
 
 JSON_PATH = Path(os.environ.get("BENCH_JSON", "BENCH_streams.json"))
@@ -52,6 +54,22 @@ def _device_step_summary(rows):
             d["speedup"] = d["unfused_us"] / d["fused_us"]
         if "fused_opt2_us" in d and "unfused_us" in d and d["fused_opt2_us"] > 0:
             d["speedup_opt2"] = d["unfused_us"] / d["fused_opt2_us"]
+    return per_net
+
+
+def _multi_partition_summary(rows):
+    """Per-network 1-part vs 2-part µs/token (+ lane rows pass through)."""
+    per_net = {}
+    for r in rows:
+        parts = r["name"].split("/")
+        if len(parts) == 3 and parts[2].endswith("part"):
+            per_net.setdefault(parts[1], {})[
+                f"{parts[2]}_us_per_tok"
+            ] = r["us_per_call"]
+    for d in per_net.values():
+        one, two = d.get("1part_us_per_tok"), d.get("2part_us_per_tok")
+        if one and two:
+            d["speedup_2part"] = one / two
     return per_net
 
 
@@ -107,6 +125,9 @@ def main() -> None:
         ),
         "server_throughput": _server_summary(
             suites.get("server_throughput", {}).get("rows", [])
+        ),
+        "multi_partition": _multi_partition_summary(
+            suites.get("multi_partition", {}).get("rows", [])
         ),
         "failures": failures,
     }

@@ -27,7 +27,8 @@ from repro.apps.streams import NETWORKS
 from repro.frontend import FrontendError
 
 SIZES = smoke_scale(
-    {"TopFilter": 40000, "FIR32": 8000, "Bitonic8": 1500, "IDCT8": 1500}
+    {"TopFilter": 40000, "FIR32": 8000, "Bitonic8": 1500, "IDCT8": 1500,
+     "ZigZag": 200}
 )
 CORNERS = {"hardware": "device", "single": "host", "many": "threads"}
 BLOCK = 4096

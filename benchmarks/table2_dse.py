@@ -18,7 +18,8 @@ from _util import emit
 import repro
 from repro.apps.streams import NETWORKS
 
-SIZES = {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
+SIZES = {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800,
+         "ZigZag": 100}
 
 
 def main() -> None:

@@ -10,7 +10,8 @@ import repro
 from repro.apps.streams import NETWORKS
 
 SIZES = smoke_scale(
-    {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800}
+    {"TopFilter": 20000, "FIR32": 4000, "Bitonic8": 800, "IDCT8": 800,
+     "ZigZag": 100}
 )
 
 

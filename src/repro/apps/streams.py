@@ -10,6 +10,8 @@ Actors that can run on the device carry a ``vector_fire``.
   * bitonic8  — 8-lane bitonic sorting network of compare-exchange actors
                 (paper: 28 actors / hardware sorting)
   * idct8     — 8-point IDCT actor network (paper: 7 actors)
+  * zigzag    — JPEG zigzag descan, a 64-token SDF reorder (paper: the
+                RVC-CAL JPEG decoder's zigzag stage)
 
 Each ``<name>()`` builder returns ``(Network, collected_outputs)`` for use with
 ``repro.compile``.  The ``make_<name>()`` constructors are thin shims over the
@@ -302,6 +304,61 @@ def idct8(n_blocks: int = 512) -> Tuple[Network, List]:
 
 
 # ---------------------------------------------------------------------------
+# ZigZag — JPEG zigzag descan: 64-token SDF reorder (paper: RVC-CAL JPEG)
+# ---------------------------------------------------------------------------
+
+
+def _zigzag_order() -> np.ndarray:
+    """Raster index of each position in JPEG zigzag scan order (8x8)."""
+    order = sorted(
+        ((r, c) for r in range(8) for c in range(8)),
+        key=lambda rc: (
+            rc[0] + rc[1],
+            # even anti-diagonals run bottom-left -> top-right (ascending
+            # column), odd ones top-right -> bottom-left (ascending row)
+            rc[0] if (rc[0] + rc[1]) % 2 else rc[1],
+        ),
+    )
+    return np.asarray([r * 8 + c for r, c in order], np.int32)
+
+
+_ZIGZAG = _zigzag_order()
+# inverse permutation: output position j takes input token _ZIGZAG_INV[j]
+_ZIGZAG_INV = np.argsort(_ZIGZAG).astype(np.int32)
+
+
+@actor(inputs={"IN": "float32"}, outputs={"OUT": "float32"})
+class ZigZagScan:
+    """De-zigzag: one SDF firing reorders a 64-token scan block to raster."""
+
+    @action(name="z", consumes={"IN": 64}, produces={"OUT": 64})
+    def z(st, t):
+        vals = t["IN"]
+        return st, {"OUT": [vals[int(i)] for i in _ZIGZAG_INV]}
+
+    def vector_fire(state, ins):
+        import jax.numpy as jnp
+
+        vals, mask = ins["IN"]
+        blocks = vals.reshape(-1, 64)
+        y = blocks[:, jnp.asarray(_ZIGZAG_INV)].reshape(-1)
+        return state, {"OUT": (y, mask)}
+
+
+def zigzag(n_blocks: int = 512) -> Tuple[Network, List]:
+    net = network("ZigZag")
+    src = _lcg_source(net, n_blocks * 64, mod=256)
+    zz = net.add(ZigZagScan, "zigzag")
+    clip = net.map("clip", lambda st, v: (st, max(-256.0, min(255.0, v))),
+                   vector_fire=_clip_vf,
+                   stream_op=("clip", -256.0, 255.0))
+    got: List = []
+    snk = net.sink("sink", collect=got)
+    src >> zz >> clip >> snk
+    return net, got
+
+
+# ---------------------------------------------------------------------------
 # Seed-API shims + registries
 # ---------------------------------------------------------------------------
 
@@ -326,12 +383,18 @@ def make_idct8(n_blocks: int = 512) -> Tuple[ActorGraph, List]:
     return net.graph(), got
 
 
+def make_zigzag(n_blocks: int = 512) -> Tuple[ActorGraph, List]:
+    net, got = zigzag(n_blocks)
+    return net.graph(), got
+
+
 # DSL builders: name -> callable returning (Network, outputs)
 NETWORKS = {
     "TopFilter": topfilter,
     "FIR32": fir,
     "Bitonic8": bitonic8,
     "IDCT8": idct8,
+    "ZigZag": zigzag,
 }
 
 # Seed-compatible: name -> callable returning (ActorGraph, outputs)
@@ -340,4 +403,5 @@ BENCHMARKS = {
     "FIR32": make_fir,
     "Bitonic8": make_bitonic8,
     "IDCT8": make_idct8,
+    "ZigZag": make_zigzag,
 }

@@ -97,8 +97,9 @@ class NetworkProfile:
     # threads to dedicated cores and never exceeds them; the DSE must know).
     n_cores: Optional[int] = None
 
-    def exec_time(self, actor: str, partition: str, accel: str) -> float:
-        if partition == accel:
+    def exec_time(self, actor: str, partition: str, accel) -> float:
+        accels = {accel} if isinstance(accel, str) else set(accel)
+        if partition in accels:
             return self.exec_hw.get(actor, math.inf)
         return self.exec_sw.get(actor, 0.0)
 
@@ -113,43 +114,54 @@ def evaluate(
     assignment: Assignment,
     prof: NetworkProfile,
     *,
-    accel: str = "accel",
+    accel="accel",  # str | Iterable[str]: accelerator partition id(s)
     plink_thread: Optional[str] = None,
 ) -> Dict[str, float]:
-    """Predicted execution time for one partitioning (the MILP objective)."""
-    parts = sorted({p for p in assignment.values() if p != accel})
+    """Predicted execution time for one partitioning (the MILP objective).
+
+    ``accel`` may name several accelerator partitions: each gets its own
+    PLink-lane term (equations (2) + (5) per partition).  Lanes run
+    independently pipelined async dispatches, so the model takes the *max*
+    over lanes, not the sum — the per-accelerator capacity story that lets
+    the DSE trade one big device partition against k smaller ones.  A
+    device→device channel is charged as a staged read on the producing lane
+    and a staged write on the consuming lane.
+    """
+    accels = {accel} if isinstance(accel, str) else set(accel)
+    parts = sorted({p for p in assignment.values() if p not in accels})
     threads = parts
     p1 = plink_thread or (threads[0] if threads else None)
-    uses_accel = any(p == accel for p in assignment.values())
+    used_accels = sorted({p for p in assignment.values() if p in accels})
 
     # (1) thread times
     T_p: Dict[str, float] = {p: 0.0 for p in threads}
     for a, p in assignment.items():
-        if p != accel:
-            T_p[p] += prof.exec_time(a, p, accel)
+        if p not in accels:
+            T_p[p] += prof.exec_time(a, p, accels)
 
-    # (2) + (5): PLink
-    T_plink = 0.0
-    if uses_accel:
+    # (2) + (5): one PLink lane per accelerator partition
+    T_lane: Dict[str, float] = {}
+    link = prof.links["plink"]
+    for apid in used_accels:
         hw_times = [
-            prof.exec_time(a, accel, accel)
+            prof.exec_time(a, apid, accels)
             for a, p in assignment.items()
-            if p == accel
+            if p == apid
         ]
         t_hw = max(hw_times) if hw_times else 0.0
-        link = prof.links["plink"]
         t_w = t_r = 0.0
         for ch in graph.channels:
             key = ch.key
             n = prof.tokens.get(key, 0)
             b = prof.buffers.get(key, prof.default_buffer)
-            s_hw = assignment[ch.src] == accel
-            t_hw_side = assignment[ch.dst] == accel
+            s_hw = assignment[ch.src] == apid
+            t_hw_side = assignment[ch.dst] == apid
             if t_hw_side and not s_hw:
                 t_w += link.tau(n, b)
             elif s_hw and not t_hw_side:
                 t_r += link.tau(n, b)
-        T_plink = t_hw + t_w + t_r
+        T_lane[apid] = t_hw + t_w + t_r
+    T_plink = max(T_lane.values()) if T_lane else 0.0
 
     # (6)-(9): intra-thread communication.  With in-situ profiles the same-
     # thread FIFO time is already inside exec(a, p), so the term is zero.
@@ -161,11 +173,11 @@ def evaluate(
             n = prof.tokens.get(key, 0)
             b = prof.buffers.get(key, prof.default_buffer)
             ps, pt = assignment[ch.src], assignment[ch.dst]
-            if ps == pt and ps != accel:
+            if ps == pt and ps not in accels:
                 t_intra[ps] += intra.tau(n, b)
             # (7): host<->accel staging also costs the PLink's thread
             if p1 is not None and (
-                (ps == p1 and pt == accel) or (ps == accel and pt == p1)
+                (ps == p1 and pt in accels) or (ps in accels and pt == p1)
             ):
                 t_intra[p1] += intra.tau(n, b)
     T_intra = max(t_intra.values()) if t_intra else 0.0
@@ -181,12 +193,13 @@ def evaluate(
         ps, pt = assignment[ch.src], assignment[ch.dst]
         if ps == pt:
             continue
+        s_acc, t_acc = ps in accels, pt in accels
         crosses_thread = (
-            ps != accel and pt != accel
+            not s_acc and not t_acc
         ) or (
             p1 is not None and (
-                (pt == accel and ps not in (p1, accel))
-                or (ps == accel and pt not in (p1, accel))
+                (t_acc and not s_acc and ps != p1)
+                or (s_acc and not t_acc and pt != p1)
             )
         )
         if crosses_thread:
@@ -216,6 +229,7 @@ def evaluate(
         "T_plink": T_plink,
         "T_intra": T_intra,
         "T_inter": T_inter,
+        **{f"T_plink_{p}": v for p, v in T_lane.items() if len(T_lane) > 1},
         **{f"T_{p}": v for p, v in T_p.items()},
     }
 

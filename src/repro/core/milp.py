@@ -35,33 +35,49 @@ class Solution:
     solver: str
 
 
+def _accel_set(accel) -> frozenset:
+    return frozenset((accel,)) if isinstance(accel, str) else frozenset(accel)
+
+
 def _objective(
-    graph, assignment, prof, accel: str, alpha: float,
+    graph, assignment, prof, accel, alpha: float,
     resource: Optional[Callable[[str], float]],
+    capacity: Optional[int] = None,
 ) -> Tuple[float, Dict[str, float]]:
-    detail = evaluate(graph, assignment, prof, accel=accel)
+    accels = _accel_set(accel)
+    if capacity is not None:
+        # per-accelerator capacity: a partition (sub-mesh) only fits so many
+        # actors' worth of synthesized logic — overfull placements are
+        # infeasible, which is what pushes the DSE toward k-way splits
+        load: Dict[str, int] = {}
+        for a, p in assignment.items():
+            if p in accels:
+                load[p] = load.get(p, 0) + 1
+        if any(n > capacity for n in load.values()):
+            return math.inf, {"T_exec": math.inf, "infeasible": 1.0}
+    detail = evaluate(graph, assignment, prof, accel=accels)
     obj = detail["T_exec"]
     if alpha:
         r = sum(
             (resource(a) if resource else 1.0)
             for a, p in assignment.items()
-            if p == accel
+            if p in accels
         )
         obj = obj + alpha * r
         detail["resource"] = r
     return obj, detail
 
 
-def _placeable(graph, actor: str, partition: str, accel: str) -> bool:
-    if partition == accel and not graph.actors[actor].device_ok:
+def _placeable(graph, actor: str, partition: str, accel) -> bool:
+    if partition in _accel_set(accel) and not graph.actors[actor].device_ok:
         return False
     return True
 
 
 def solve_exact(
     graph, prof: NetworkProfile, partitions: Sequence[str],
-    *, accel: str = "accel", alpha: float = 0.0, resource=None,
-    limit: int = 400_000,
+    *, accel="accel", alpha: float = 0.0, resource=None,
+    capacity: Optional[int] = None, limit: int = 400_000,
 ) -> Solution:
     actors = sorted(graph.actors)
     n_combo = len(partitions) ** len(actors)
@@ -71,7 +87,9 @@ def solve_exact(
         asg = dict(zip(actors, combo))
         if any(not _placeable(graph, a, p, accel) for a, p in asg.items()):
             continue
-        obj, detail = _objective(graph, asg, prof, accel, alpha, resource)
+        obj, detail = _objective(
+            graph, asg, prof, accel, alpha, resource, capacity
+        )
         if obj < best_obj:
             best, best_obj, best_detail = asg, obj, detail
     return Solution(best, best_obj, best_detail, "exact")
@@ -79,24 +97,33 @@ def solve_exact(
 
 def solve_bb(
     graph, prof: NetworkProfile, partitions: Sequence[str],
-    *, accel: str = "accel", alpha: float = 0.0, resource=None,
+    *, accel="accel", alpha: float = 0.0, resource=None,
+    capacity: Optional[int] = None,
 ) -> Solution:
-    """DFS branch & bound.  Bound: max current partition load (admissible)."""
+    """DFS branch & bound.  Bound: max current partition load (admissible —
+    each accelerator partition's lane load is its max member hw time)."""
+    accels = _accel_set(accel)
     actors = sorted(
         graph.actors,
         key=lambda a: -max(prof.exec_sw.get(a, 0), prof.exec_hw.get(a, 0)),
     )
     best: List = [None, math.inf, {}]
-    loads = {p: 0.0 for p in partitions}
-    hw_max = [0.0]
+    loads = {p: 0.0 for p in partitions if p not in accels}
+    hw_max = {p: 0.0 for p in partitions if p in accels}
+    hw_count = {p: 0 for p in hw_max}
     asg: Dict[str, str] = {}
 
     def bound() -> float:
-        return max(max(loads.values(), default=0.0), hw_max[0])
+        return max(
+            max(loads.values(), default=0.0),
+            max(hw_max.values(), default=0.0),
+        )
 
     def dfs(i: int):
         if i == len(actors):
-            obj, detail = _objective(graph, asg, prof, accel, alpha, resource)
+            obj, detail = _objective(
+                graph, asg, prof, accel, alpha, resource, capacity
+            )
             if obj < best[1]:
                 best[0], best[1], best[2] = dict(asg), obj, detail
             return
@@ -104,17 +131,21 @@ def solve_bb(
         for p in partitions:
             if not _placeable(graph, a, p, accel):
                 continue
-            prev_hw = hw_max[0]
-            if p == accel:
-                hw_max[0] = max(hw_max[0], prof.exec_hw.get(a, math.inf))
+            if p in accels:
+                if capacity is not None and hw_count[p] >= capacity:
+                    continue
+                prev_hw = hw_max[p]
+                hw_max[p] = max(hw_max[p], prof.exec_hw.get(a, math.inf))
+                hw_count[p] += 1
             else:
                 loads[p] += prof.exec_sw.get(a, 0.0)
             if bound() < best[1]:
                 asg[a] = p
                 dfs(i + 1)
                 del asg[a]
-            if p == accel:
-                hw_max[0] = prev_hw
+            if p in accels:
+                hw_max[p] = prev_hw
+                hw_count[p] -= 1
             else:
                 loads[p] -= prof.exec_sw.get(a, 0.0)
 
@@ -124,7 +155,8 @@ def solve_bb(
 
 def solve_anneal(
     graph, prof: NetworkProfile, partitions: Sequence[str],
-    *, accel: str = "accel", alpha: float = 0.0, resource=None,
+    *, accel="accel", alpha: float = 0.0, resource=None,
+    capacity: Optional[int] = None,
     iters: int = 20_000, seed: int = 0, restarts: int = 3,
 ) -> Solution:
     rng = random.Random(seed)
@@ -141,7 +173,9 @@ def solve_anneal(
     best, best_obj, best_detail = None, math.inf, {}
     for r in range(restarts):
         asg = rand_assignment()
-        obj, detail = _objective(graph, asg, prof, accel, alpha, resource)
+        obj, detail = _objective(
+            graph, asg, prof, accel, alpha, resource, capacity
+        )
         cur_obj = obj
         t0 = max(cur_obj, 1e-12)
         for it in range(iters):
@@ -155,7 +189,9 @@ def solve_anneal(
             p_new = rng.choice(opts)
             old = asg[a]
             asg[a] = p_new
-            obj2, detail2 = _objective(graph, asg, prof, accel, alpha, resource)
+            obj2, detail2 = _objective(
+                graph, asg, prof, accel, alpha, resource, capacity
+            )
             temp = t0 * (1.0 - it / iters) * 0.1 + 1e-15
             if obj2 <= cur_obj or rng.random() < math.exp(
                 (cur_obj - obj2) / temp
@@ -222,19 +258,16 @@ def solve_chain_dp(
 
 def solve(
     graph, prof: NetworkProfile, partitions: Sequence[str],
-    *, accel: str = "accel", alpha: float = 0.0, resource=None,
-    time_budget: str = "auto",
+    *, accel="accel", alpha: float = 0.0, resource=None,
+    capacity: Optional[int] = None, time_budget: str = "auto",
 ) -> Solution:
     n = len(graph.actors)
     combos = len(partitions) ** n
-    if combos <= 200_000:
-        return solve_exact(
-            graph, prof, partitions, accel=accel, alpha=alpha, resource=resource
-        )
-    if n <= 14:
-        return solve_bb(
-            graph, prof, partitions, accel=accel, alpha=alpha, resource=resource
-        )
-    return solve_anneal(
-        graph, prof, partitions, accel=accel, alpha=alpha, resource=resource
+    kw = dict(
+        accel=accel, alpha=alpha, resource=resource, capacity=capacity
     )
+    if combos <= 200_000:
+        return solve_exact(graph, prof, partitions, **kw)
+    if n <= 14:
+        return solve_bb(graph, prof, partitions, **kw)
+    return solve_anneal(graph, prof, partitions, **kw)

@@ -33,14 +33,20 @@ class DesignPoint:
     use_accel: bool
     solution: Solution
     xcf: XCF
+    accel_ids: Tuple[str, ...] = ("accel",)
 
     @property
     def predicted(self) -> float:
         return self.solution.objective
 
+    @property
+    def n_accels(self) -> int:
+        return len(self.accel_ids) if self.use_accel else 0
+
     def hw_actors(self) -> List[str]:
         return sorted(
-            a for a, p in self.solution.assignment.items() if p == "accel"
+            a for a, p in self.solution.assignment.items()
+            if p in self.accel_ids
         )
 
 
@@ -49,25 +55,47 @@ def explore(
     prof: NetworkProfile,
     *,
     thread_counts: Sequence[int] = (1, 2, 3, 4),
-    accel_options: Sequence[bool] = (False, True),
+    accel_options: Sequence = (False, True),  # bool | int accel counts
     alpha: float = 0.0,
     accel: str = "accel",
+    accel_capacity: Optional[int] = None,
 ) -> List[DesignPoint]:
+    """Sweep thread counts × accelerator-partition counts, solve the MILP at
+    each point, emit legalized XCFs.
+
+    ``accel_options`` entries are accelerator-partition counts (``False`` →
+    0, ``True`` → 1, any int k → k device partitions named ``accel0..``).
+    ``accel_capacity`` bounds the actors per device partition (the
+    per-accelerator resource term) — what makes a k-way split win over one
+    overfull partition.
+    """
     points: List[DesignPoint] = []
     any_device = any(a.device_ok for a in graph)
     for n in thread_counts:
-        for use_accel in accel_options:
-            if use_accel and not any_device:
+        for opt in accel_options:
+            k = int(opt)
+            if k and not any_device:
                 continue
-            partitions = [f"t{i}" for i in range(n)] + (
-                [accel] if use_accel else []
+            accel_ids = (
+                [accel] if k == 1 else [f"{accel}{i}" for i in range(k)]
             )
-            sol = solve(graph, prof, partitions, accel=accel, alpha=alpha)
+            partitions = [f"t{i}" for i in range(n)] + (
+                accel_ids if k else []
+            )
+            sol = solve(
+                graph, prof, partitions,
+                accel=accel_ids if k else accel, alpha=alpha,
+                capacity=accel_capacity if k else None,
+            )
             if sol.assignment is None:
                 continue
             xcf = make_xcf(
-                graph.name, sol.assignment, accel=accel,
-                meta={"predicted_T": sol.objective, "n_threads": n},
+                graph.name, sol.assignment, accel=accel_ids,
+                meta={
+                    "predicted_T": sol.objective,
+                    "n_threads": n,
+                    "n_accels": k,
+                },
             )
             # Every emitted XCF must pass the middle-end's placement
             # legalization — the same pass ``repro.compile`` runs — so a
@@ -77,9 +105,11 @@ def explore(
             except GraphError as e:  # pragma: no cover - solver invariant
                 raise GraphError(
                     f"partitioner produced an illegal placement for "
-                    f"{graph.name!r} (threads={n}, accel={use_accel}): {e}"
+                    f"{graph.name!r} (threads={n}, accels={k}): {e}"
                 ) from e
-            points.append(DesignPoint(n, use_accel, sol, xcf))
+            points.append(
+                DesignPoint(n, bool(k), sol, xcf, tuple(accel_ids))
+            )
     return points
 
 
@@ -89,13 +119,14 @@ def best_point(points: Sequence[DesignPoint]) -> DesignPoint:
 
 def pareto(points: Sequence[DesignPoint]) -> List[DesignPoint]:
     """Pareto frontier over (n_threads + accel_cost, predicted time)."""
+
+    def res(p: DesignPoint) -> int:
+        return p.n_threads + 8 * p.n_accels
+
     out = []
     for p in points:
-        res = p.n_threads + (8 if p.use_accel else 0)
         if not any(
-            (q.n_threads + (8 if q.use_accel else 0)) <= res
-            and q.predicted < p.predicted
-            for q in points
+            res(q) <= res(p) and q.predicted < p.predicted for q in points
         ):
             out.append(p)
     return sorted(out, key=lambda p: p.predicted)

@@ -139,16 +139,17 @@ def make_xcf(
     network: str,
     assignment: Dict[str, str],
     *,
-    accel: str = "accel",
+    accel="accel",  # str | Iterable[str]: partition id(s) that are hw
     accel_pe: str = "tpu-v5e-16x16",
     host_pe: str = "x86_64",
     depths: Optional[Dict[tuple, int]] = None,
     meta: Optional[Dict[str, float]] = None,
 ) -> XCF:
+    accels = {accel} if isinstance(accel, str) else set(accel)
     xcf = XCF(network=network, meta=dict(meta or {}))
     for a, pid in sorted(assignment.items()):
         if pid not in xcf.partitions:
-            hw = pid == accel
+            hw = pid in accels
             xcf.partitions[pid] = PartitionSpec(
                 id=pid,
                 pe=accel_pe if hw else host_pe,

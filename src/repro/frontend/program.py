@@ -174,9 +174,10 @@ class Program:
             fuse=fuse,
             opt_level=opt_level,
         )
-        # jitted device partition, built lazily and reused across run() calls
-        # (the (graph, xcf, opts) triple is fixed for this Program's lifetime)
-        self._device_program = None
+        # jitted device partitions, built lazily and reused across run()
+        # calls (the (graph, xcf, opts) triple is fixed for this Program's
+        # lifetime): {partition id: DeviceProgram}
+        self._device_programs: Optional[Dict[str, object]] = None
 
     # -- introspection ---------------------------------------------------------
     @property
@@ -203,8 +204,14 @@ class Program:
 
     @property
     def hw_partition(self) -> Optional[str]:
-        hw = self._module.hw_region
-        return hw.id if hw is not None else None
+        """The single device partition's id (first lane when several)."""
+        hw = self.hw_partitions
+        return hw[0] if hw else None
+
+    @property
+    def hw_partitions(self) -> list:
+        """Every device partition id, in stable (id-sorted) order."""
+        return [r.id for r in self._module.hw_regions() if r.actors]
 
     def ir_dump(self, pass_name: Optional[str] = None) -> str:
         """The module after every pass (or after ``pass_name`` only) — the
@@ -222,30 +229,41 @@ class Program:
         return "\n".join(lines)
 
     # -- execution -------------------------------------------------------------
-    def device_program(self):
-        """The compiled (jitted) device partition, or None for host-only
-        placements.  Compiled on first use and cached for this Program."""
-        if self.hw_partition is None:
-            return None
-        if self._device_program is None:
-            from repro.runtime.device_runtime import compile_partition
+    def device_programs(self) -> Dict[str, object]:
+        """The compiled (jitted) device partitions, ``{partition id:
+        DeviceProgram}`` — empty for host-only placements.  Compiled on
+        first use and cached for this Program."""
+        if self._device_programs is None:
+            from repro.runtime.device_runtime import compile_hw_partitions
 
-            self._device_program = compile_partition(
-                self._module,
-                block=self._opts["block"],
-                name=self.hw_partition,
+            self._device_programs = compile_hw_partitions(
+                self._module, block=self._opts["block"]
             )
-        return self._device_program
+        return self._device_programs
+
+    def device_program(self):
+        """The compiled device partition for single-partition placements
+        (None when host-only).  Multi-partition programs must use
+        ``device_programs()`` — there is no single 'the' partition."""
+        programs = self.device_programs()
+        if not programs:
+            return None
+        if len(programs) > 1:
+            raise FrontendError(
+                f"{self._graph.name}: {len(programs)} device partitions "
+                f"({sorted(programs)}); use device_programs()"
+            )
+        return next(iter(programs.values()))
 
     def _build_runtime(self):
-        if self.hw_partition is not None:
+        if self.hw_partitions:
             rt = HeteroRuntime(
                 self._module,
                 block=self._opts["block"],
                 controller=self._opts["controller"],
                 default_depth=self._opts["default_depth"],
                 max_execs_per_invoke=self._opts["max_execs_per_invoke"],
-                program=self.device_program(),
+                programs=self.device_programs(),
             )
         else:
             rt = HostRuntime(
@@ -284,7 +302,7 @@ class Program:
         seconds = time.perf_counter() - t0
         n_sw = len(rt.partitions)
         backend = (
-            f"hetero({self.hw_partition}+{n_sw}thr)" if hetero
+            f"hetero({'+'.join(self.hw_partitions)}+{n_sw}thr)" if hetero
             else f"host({n_sw}thr)"
         )
         return RunReport(
@@ -295,8 +313,14 @@ class Program:
             actor_fires={a: p.fires for a, p in rt.profiles.items()},
             actor_tests={a: p.tests for a, p in rt.profiles.items()},
             channel_tokens=rt.channel_tokens(),
-            plink_launches=rt.plink.stats.launches if hetero else 0,
-            plink_tokens_out=rt.plink.stats.tokens_out if hetero else 0,
+            plink_launches=(
+                sum(p.stats.launches for p in rt.plinks.values())
+                if hetero else 0
+            ),
+            plink_tokens_out=(
+                sum(p.stats.tokens_out for p in rt.plinks.values())
+                if hetero else 0
+            ),
         )
 
     # -- serving ---------------------------------------------------------------

@@ -26,7 +26,34 @@ __all__ = [
     "IRChannel",
     "Region",
     "IRModule",
+    "connected_components",
 ]
+
+
+def connected_components(
+    nodes: Iterable[str], channels: Iterable["IRChannel"]
+) -> Dict[str, str]:
+    """Map each node to its component root under the channel edges whose
+    endpoints both lie in ``nodes`` (path-compressed union-find).
+
+    Shared by SDF-region detection (components of static actors inside one
+    hw region) and the device staging plan (components of a partition, for
+    lane-aligned staging) so the two can never drift on what "connected"
+    means.
+    """
+    nodes = set(nodes)
+    parent = {a: a for a in nodes}
+
+    def find(x: str) -> str:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for ch in channels:
+        if ch.src in nodes and ch.dst in nodes:
+            parent[find(ch.src)] = find(ch.dst)
+    return {a: find(a) for a in nodes}
 
 
 @dataclass(frozen=True)
@@ -154,8 +181,10 @@ class IRChannel:
 class Region:
     """A partition region: the unit a backend code-generates.
 
-    ``kind`` is "sw" (a host scheduler thread) or "hw" (the compiled device
-    partition).  At most one hw region exists per module (paper §III-D).
+    ``kind`` is "sw" (a host scheduler thread) or "hw" (a compiled device
+    partition).  A module may carry any number of hw regions — each is
+    compiled into its own ``DeviceProgram`` and driven by its own PLink
+    lane, so accelerator partitions pipeline against each other.
     """
 
     id: str
@@ -182,13 +211,35 @@ class IRModule:
 
     @property
     def hw_region(self) -> Optional[Region]:
-        hw = [r for r in self.regions.values() if r.kind == "hw"]
-        if len(hw) > 1:  # legalization rejects this; defensive for hand-builds
+        """The module's *single* hw region (legacy accessor).
+
+        Multi-partition modules must use ``hw_regions()``; this property
+        keeps the one-partition callers honest by refusing to pick one
+        arbitrarily.
+        """
+        hw = self.hw_regions()
+        if len(hw) > 1:
             raise GraphError(
-                f"{self.name}: {len(hw)} hw regions; the runtime supports one "
-                f"device partition"
+                f"{self.name}: {len(hw)} hw regions "
+                f"({[r.id for r in hw]}); use hw_regions() — there is no "
+                f"single 'the device partition' in a multi-partition module"
             )
         return hw[0] if hw else None
+
+    def hw_regions(self) -> List[Region]:
+        """Every device partition region, in stable (id-sorted) order."""
+        return sorted(
+            (r for r in self.regions.values() if r.kind == "hw"),
+            key=lambda r: r.id,
+        )
+
+    def hw_actors(self) -> Set[str]:
+        """Union of all device-partition actors."""
+        return {a for r in self.hw_regions() for a in r.actors}
+
+    def hw_assignment(self) -> Dict[str, str]:
+        """Device actor -> owning hw region id."""
+        return {a: r.id for r in self.hw_regions() for a in r.actors}
 
     def sw_regions(self) -> List[Region]:
         return [r for r in self.regions.values() if r.kind == "sw"]

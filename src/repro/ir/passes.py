@@ -16,8 +16,8 @@ Default pipeline (in order):
   infer-fifo-depths    resolves every channel depth: XCF-pinned > authored >
                        inferred (rate- and boundary-aware); replaces the old
                        mutate-the-graph-per-XCF depth rebuild
-  detect-sdf-regions   finds maximal static-rate regions inside the device
-                       partition
+  detect-sdf-regions   finds maximal static-rate regions inside each device
+                       partition (never across a partition boundary)
   fuse-sdf-regions     collapses each SDF region into one fused actor
                        (Pallas stream kernel when specs allow, composed-jnp
                        otherwise)
@@ -144,11 +144,16 @@ class LegalizePlacement(Pass):
 
     Subsumes the checks previously scattered across ``XCF.validate``, the
     partitioner, and the runtimes: unknown/duplicate/unassigned instances,
-    host-only actors on hw, more than one hw partition, and device-partition
-    channels whose token dtype cannot cross the host/device boundary.
+    host-only actors on hw, partitions requesting a code generator the
+    toolchain does not have, and device-partition channels whose token dtype
+    cannot cross a host/device (or device/device) boundary.  Any number of
+    hw partitions is legal — each becomes its own region, compiled into its
+    own device program behind its own PLink lane.
     """
 
     name = "legalize-placement"
+
+    KNOWN_GENERATORS = ("hw", "sw")
 
     def run(self, module: IRModule, ctx: PassContext) -> IRModule:
         if ctx.xcf is None:
@@ -158,17 +163,15 @@ class LegalizePlacement(Pass):
             return module
         xcf = ctx.xcf
         seen: Set[str] = set()
-        hw_ids = [
-            pid for pid, p in xcf.partitions.items()
-            if p.code_generator == "hw"
-        ]
-        if len(hw_ids) > 1:
-            raise GraphError(
-                f"{module.name}: XCF declares {len(hw_ids)} hw partitions "
-                f"({sorted(hw_ids)}); the runtime supports one device "
-                f"partition (paper §III-D)"
-            )
         for pid, p in xcf.partitions.items():
+            if p.code_generator not in self.KNOWN_GENERATORS:
+                raise GraphError(
+                    f"{module.name}: XCF partition {pid!r} requests code "
+                    f"generator {p.code_generator!r}, which this toolchain "
+                    f"does not provide (known: "
+                    f"{sorted(self.KNOWN_GENERATORS)}; the XCF declares "
+                    f"{sorted(xcf.code_generators)})"
+                )
             for a in p.instances:
                 if a not in module.actors:
                     raise GraphError(
@@ -197,12 +200,12 @@ class LegalizePlacement(Pass):
                 f"{module.name}: XCF leaves actors unassigned: "
                 f"{sorted(missing)}"
             )
-        hw = set(module.regions[hw_ids[0]].actors) if hw_ids else set()
+        hw = module.hw_actors()
         for ch in module.channels:
             if (ch.src in hw or ch.dst in hw) and not device_dtype_ok(ch.dtype):
                 raise GraphError(
                     f"{module.name}: channel {ch} has dtype {ch.dtype!r}, "
-                    f"which cannot be staged across the device partition "
+                    f"which cannot be staged across a device partition "
                     f"boundary — give the ports a concrete numeric dtype or "
                     f"keep both endpoints on sw partitions"
                 )
@@ -270,8 +273,7 @@ class InferFifoDepths(Pass):
 
     def run(self, module: IRModule, ctx: PassContext) -> IRModule:
         pinned = ctx.xcf.fifo_depths() if ctx.xcf is not None else {}
-        hw = module.hw_region
-        hw_actors = set(hw.actors) if hw else set()
+        hw_of = module.hw_assignment()
         for ch in module.channels:
             ch.xcf_depth = pinned.get(ch.key)
             rate = max(
@@ -279,7 +281,13 @@ class InferFifoDepths(Pass):
                 module.actors[ch.dst].rate.consume_rate(ch.dst_port),
                 1,
             )
-            crossing = (ch.src in hw_actors) != (ch.dst in hw_actors)
+            # a channel crossing *any* device boundary — host<->hw or
+            # hw<->hw between two different partitions — stages whole PLink
+            # blocks and needs room for two of them (double buffering)
+            crossing = (
+                (ch.src in hw_of or ch.dst in hw_of)
+                and hw_of.get(ch.src) != hw_of.get(ch.dst)
+            )
             if crossing:
                 ch.inferred_depth = max(ctx.default_depth, 2 * ctx.block)
             else:
@@ -288,16 +296,18 @@ class InferFifoDepths(Pass):
 
 
 class DetectSDFRegions(Pass):
-    """Find maximal static-rate (SDF) regions inside the device partition.
+    """Find maximal static-rate (SDF) regions inside each device partition.
 
     Members must be guard-free single-action actors (``RateSig.static``);
-    regions are the connected components of such actors over the partition's
-    internal channels.  A region must additionally be *convex*: no path
-    between two members may pass through an outside actor — fusing a
-    non-convex group would put the outsider both upstream and downstream of
-    the fused actor, i.e. introduce a cycle.  Non-convex groups are skipped
-    (recorded in ``meta["sdf_groups_skipped"]``).  Only multi-actor regions
-    are worth fusing.
+    regions are the connected components of such actors over one partition's
+    internal channels — a channel between two *different* hw partitions is a
+    staged PLink-lane boundary and never fuses across.  A region must
+    additionally be *convex*: no path between two members may pass through
+    an outside actor — fusing a non-convex group would put the outsider both
+    upstream and downstream of the fused actor, i.e. introduce a cycle.
+    Non-convex groups are skipped (recorded in
+    ``meta["sdf_groups_skipped"]``).  Only multi-actor regions are worth
+    fusing.
     """
 
     name = "detect-sdf-regions"
@@ -326,33 +336,23 @@ class DetectSDFRegions(Pass):
         return not (downstream & upstream)
 
     def run(self, module: IRModule, ctx: PassContext) -> IRModule:
-        hw = module.hw_region
-        if hw is None:
-            return module
-        static = {
-            a for a in hw.actors if module.actors[a].rate.static
-        }
-        parent = {a: a for a in static}
+        from repro.ir.ir import connected_components
 
-        def find(x):
-            while parent[x] != x:
-                parent[x] = parent[parent[x]]
-                x = parent[x]
-            return x
-
-        for ch in module.channels:
-            if ch.src in static and ch.dst in static:
-                parent[find(ch.src)] = find(ch.dst)
-        groups: Dict[str, List[str]] = {}
-        for a in static:
-            groups.setdefault(find(a), []).append(a)
         sdf, skipped = [], []
-        for g in groups.values():
-            if len(g) < 2:
-                continue
-            (sdf if self._is_convex(module, set(g)) else skipped).append(
-                sorted(g)
-            )
+        for hw in module.hw_regions():
+            static = {
+                a for a in hw.actors if module.actors[a].rate.static
+            }
+            comp = connected_components(static, module.channels)
+            groups: Dict[str, List[str]] = {}
+            for a in static:
+                groups.setdefault(comp[a], []).append(a)
+            for g in groups.values():
+                if len(g) < 2:
+                    continue
+                (sdf if self._is_convex(module, set(g)) else skipped).append(
+                    sorted(g)
+                )
         if sdf:
             module.meta["sdf_groups"] = sorted(sdf)
         if skipped:
@@ -377,9 +377,10 @@ class FuseSDFRegions(Pass):
         groups = module.meta.get("sdf_groups", [])
         if not ctx.fuse or not groups:
             return module
-        hw = module.hw_region
+        hw_of = module.hw_assignment()
         fused_meta: Dict[str, Dict] = {}
         for i, members in enumerate(groups):
+            hw = module.regions[hw_of[members[0]]]
             name = f"fused{i}"
             while name in module.actors:
                 name += "_"

@@ -48,6 +48,20 @@ class DeviceProgram:
     # the untraced step — what batched_step vmaps over (``step`` is jitted
     # with donation, which a vmap must not close over)
     raw_step: Callable = None
+    # staging plan: boundary in-ports grouped by destination actor, and the
+    # token granule each port must be staged in (lcm of the port's rate and
+    # the destination's whole-region iteration quantum).  Stagers (PLink and
+    # the serve-mode DeviceStage) drain whole granules, lane-aligned across
+    # each actor's ports — a lockstep port pair (e.g. a MAC's XIN/AIN) can
+    # never skew, and a multi-rate member never sees a torn block.
+    in_groups: Dict[str, List[str]] = field(default_factory=dict)
+    in_quanta: Dict[str, int] = field(default_factory=dict)
+    # which XCF partition this program implements, its declared processing
+    # element, and the concrete JAX device it is bound to (None = default
+    # placement — single-device hosts and legacy callers)
+    partition: str = ""
+    pe: str = ""
+    device: Any = None
     _batched: Dict[str, Callable] = field(default_factory=dict, repr=False)
 
     def batched_step(self, batch: int) -> Callable:
@@ -91,6 +105,104 @@ class DeviceProgram:
     def unstack_state(batched: Dict[str, Any], lane: int) -> Dict[str, Any]:
         """Extract one session's state tree from a batched tree."""
         return jax.tree.map(lambda x: x[lane], batched)
+
+
+def region_quantum(module: IRModule, actor_name: str) -> int:
+    """Token granularity one boundary port of ``actor_name`` must be staged
+    in so no member op ever sees a torn block.
+
+    A fused region's boundary port inherits its member's per-firing rate
+    (often 1), but members *inside* the region may fire at coarser rates —
+    the 8-point IDCT consumes 8 tokens per firing behind a rate-1 descale.
+    Staging a block that is not a whole number of region iterations would
+    hand such a member a block mixing valid tokens with padding.  The LCM of
+    every member's action rates is a safe iteration granule.
+    """
+    import math
+
+    ir = module.actors[actor_name]
+    members = ir.fused_from or (actor_name,)
+    graph = module.source
+    rates: List[int] = []
+    for m in members:
+        impl = (
+            graph.actors.get(m)
+            if graph is not None and m in getattr(graph, "actors", {})
+            else (ir.impl if m == actor_name else None)
+        )
+        if impl is None:
+            continue
+        for act in impl.actions:
+            rates.extend(act.consumes.values())
+            rates.extend(act.produces.values())
+    return math.lcm(*(max(r, 1) for r in rates)) if rates else 1
+
+
+def staging_plan(
+    module: IRModule,
+    in_ports: Sequence[Tuple[str, str, str]],
+    members: Optional[Sequence[str]] = None,
+) -> Tuple[Dict[str, List[str]], Dict[str, int]]:
+    """Group boundary in-ports and compute each port's staging granule —
+    the shared plan behind PLink and the serve-mode DeviceStage.
+
+    Ports are grouped by the *internal connected component* of the
+    partition their destination belongs to, and a stager drains whole
+    granules lane-aligned across a group.  Destination-actor grouping alone
+    is not enough: two boundary streams that converge downstream *inside*
+    the partition (e.g. a bitonic stage fed partly by a host deal lane and
+    partly by another device partition's lane) must advance the same number
+    of iterations per launch, or the internal wires pair tokens from
+    different stream positions — internal wires are not buffered across
+    launches.  Disjoint internal components keep independent progress, so a
+    placement like {descale, clip} with the idct on the host between them
+    still pipelines instead of deadlocking on the empty downstream group.
+    """
+    import math
+
+    from repro.ir.ir import connected_components
+
+    sub = set(members) if members is not None else {a for (a, _p, _d) in in_ports}
+    comp = connected_components(sub, module.channels)
+
+    groups: Dict[str, List[str]] = {}
+    quanta: Dict[str, int] = {}
+    for (a, p, _dt) in in_ports:
+        key = f"{a}.{p}"
+        groups.setdefault(comp[a], []).append(key)
+        quanta[key] = math.lcm(
+            max(module.actors[a].rate.consume_rate(p), 1),
+            region_quantum(module, a),
+        )
+    return groups, quanta
+
+
+def resolve_pe_device(pe: str):
+    """Map an XCF ``PartitionSpec.pe`` string to a concrete JAX device.
+
+    ``"cpu"``/``"gpu"``/``"tpu"`` (optionally ``":<index>"``) select the
+    i-th device of that platform — with ``xla_force_host_platform_device_count``
+    (or a real multi-chip host) different partitions land on different
+    devices and genuinely overlap.  Accelerator-model strings like
+    ``"tpu-v5e-16x16"`` bind to the default accelerator; host PEs
+    (``"x86_64"``) and anything unrecognized return None (default
+    placement), so a placement never fails just because this host lacks the
+    named hardware.
+    """
+    if not pe:
+        return None
+    import re
+
+    m = re.fullmatch(r"(cpu|gpu|tpu)(?::(\d+))?", pe.lower())
+    devices = jax.devices()
+    if m is not None:
+        same = [d for d in devices if d.platform == m.group(1)]
+        if same:
+            return same[int(m.group(2) or 0) % len(same)]
+        return devices[0] if devices else None
+    if pe.lower().startswith(("tpu", "gpu", "accel")):
+        return devices[0] if devices else None
+    return None
 
 
 def default_vector_fire(actor: Actor):
@@ -145,19 +257,45 @@ def compile_partition(
     name: str = "accel",
     mesh=None,
     donate: bool = True,
+    partition: Optional[str] = None,
+    device: Any = None,
 ) -> DeviceProgram:
-    """Compile the hw region of ``src`` into one jitted step.
+    """Compile one hw region of ``src`` into one jitted step.
 
     ``src`` is a lowered ``IRModule`` (the supported path — fusion and depth
     inference already applied) or a raw ``ActorGraph`` plus ``actor_names``
     (legacy path: lowered on the spot, unfused, per-actor boundary ports).
+    ``partition`` selects a region by id when the module has several hw
+    regions (``compile_hw_partitions`` builds them all); ``device``
+    overrides the JAX device binding otherwise resolved from the region's
+    ``pe`` string.
     """
+    pe = ""
     if isinstance(src, IRModule):
         module = src
-        if actor_names is None:
-            hw = module.hw_region
-            assert hw is not None, f"{module.name}: module has no hw region"
-            actor_names = hw.actors
+        if partition is not None:
+            region = module.regions.get(partition)
+            if region is None or region.kind != "hw":
+                from repro.core.graph import GraphError
+
+                raise GraphError(
+                    f"{module.name}: no hw partition {partition!r} (hw "
+                    f"partitions: {[r.id for r in module.hw_regions()]})"
+                )
+            actor_names = region.actors
+            name = region.id
+            pe = region.pe
+        elif actor_names is None:
+            hws = module.hw_regions()
+            assert hws, f"{module.name}: module has no hw region"
+            assert len(hws) == 1, (
+                f"{module.name}: {len(hws)} hw regions "
+                f"({[r.id for r in hws]}); pass partition= (or use "
+                f"compile_hw_partitions) to pick one"
+            )
+            actor_names = hws[0].actors
+            name = hws[0].id
+            pe = hws[0].pe
         names = sorted(actor_names)
     else:
         assert actor_names is not None, "compile_partition(graph, names)"
@@ -219,12 +357,33 @@ def compile_partition(
         idle = (produced + consumed) == 0
         return new_state, outs, idle
 
+    if device is None:
+        device = resolve_pe_device(pe)
+    if device is not None:
+        # Commit the state to the partition's device: jit then compiles (and
+        # keeps, via donation) the whole step there, and staged inputs follow
+        # through PLink's device_put.  This is the sub-mesh binding from
+        # ``PartitionSpec.pe`` — on a single-device host every partition
+        # resolves to that device and the binding is a no-op.
+        init_state = jax.device_put(init_state, device)
     jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
+    in_groups, in_quanta = staging_plan(module, in_ports, names)
+    too_small = {k: q for k, q in in_quanta.items() if q > block}
+    if too_small:
+        from repro.core.graph import GraphError
+
+        raise GraphError(
+            f"{name}: block={block} is smaller than the staging quantum of "
+            f"{too_small} — a whole region iteration must fit in one staged "
+            f"block; raise block= to at least the largest quantum"
+        )
     return DeviceProgram(
         name=name,
         actors=names,
         in_ports=in_ports,
         out_ports=out_ports,
+        in_groups=in_groups,
+        in_quanta=in_quanta,
         step=jitted,
         raw_step=step,
         init_state=init_state,
@@ -234,4 +393,26 @@ def compile_partition(
             for a in names
             if module.actors[a].is_fused
         },
+        partition=partition or name,
+        pe=pe,
+        device=device,
     )
+
+
+def compile_hw_partitions(
+    module: IRModule,
+    *,
+    block: int = 1024,
+    donate: bool = True,
+) -> Dict[str, "DeviceProgram"]:
+    """Compile every hw region of a lowered module — one independently
+    jitted ``DeviceProgram`` per device partition, each bound to the JAX
+    device its ``PartitionSpec.pe`` resolves to.  Returns ``{partition id:
+    program}`` in stable order."""
+    return {
+        r.id: compile_partition(
+            module, block=block, donate=donate, partition=r.id
+        )
+        for r in module.hw_regions()
+        if r.actors  # an empty hw partition has nothing to compile
+    }

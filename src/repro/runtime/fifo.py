@@ -115,6 +115,122 @@ class RingFifo:
         )
 
 
+class ArrayFifo:
+    """Numpy-block FIFO for device→device PLink lanes.
+
+    A channel between two accelerator partitions never carries host tokens:
+    the producing PLink retires whole masked blocks and the consuming PLink
+    stages whole blocks.  Boxing every token into a Python object through a
+    ``RingFifo`` would put a host round-trip of per-token work on a path
+    whose endpoints are both device programs — this FIFO instead queues the
+    retired numpy arrays themselves and serves reads as (at most one
+    concatenate of) array slices.
+
+    Concurrency contract: exactly one writer thread (the upstream PLink's)
+    and one reader thread (the downstream PLink's).  The writer only appends
+    and advances ``_w``; the reader only consumes from the head and advances
+    ``_r``; both counters are monotone ints (atomic under the GIL), so the
+    reader can never observe a partially appended block.  The RingFifo
+    snapshot/publish calls are accepted as no-ops — progress is immediately
+    visible, which is strictly more conservative for quiescence.
+    """
+
+    def __init__(self, capacity: int, name: str = "", deferred: bool = True):
+        assert capacity > 0
+        self.capacity = capacity
+        self.name = name
+        self.deferred = deferred
+        self._blocks: List[Any] = []  # writer appends, reader pops head
+        self._head = 0  # tokens consumed from _blocks[0]
+        self._w = 0  # total written (writer-owned)
+        self._r = 0  # total read (reader-owned)
+        self.total_written = 0
+
+    # -- RingFifo protocol no-ops (always-published semantics) --------------
+    def snapshot_reader(self) -> None:
+        pass
+
+    def snapshot_writer(self) -> None:
+        pass
+
+    def publish_reader(self) -> None:
+        pass
+
+    def publish_writer(self) -> None:
+        pass
+
+    @property
+    def unpublished(self) -> bool:
+        return False
+
+    # -- reader API ----------------------------------------------------------
+    def count(self) -> int:
+        return self._w - self._r
+
+    def read(self, n: int):
+        import numpy as np
+
+        assert self.count() >= n, f"{self.name}: read({n}) with {self.count()}"
+        if n == 0:
+            return np.empty((0,))
+        parts = []
+        got = 0
+        while got < n:
+            blk = self._blocks[0]
+            take = min(len(blk) - self._head, n - got)
+            parts.append(blk[self._head:self._head + take])
+            got += take
+            if self._head + take == len(blk):
+                self._blocks.pop(0)
+                self._head = 0
+            else:
+                self._head += take
+        self._r += n
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def peek(self, n: int):
+        import numpy as np
+
+        assert self.count() >= n, f"{self.name}: peek({n}) with {self.count()}"
+        parts = []
+        got = 0
+        head = self._head
+        for blk in self._blocks:
+            take = min(len(blk) - head, n - got)
+            parts.append(blk[head:head + take])
+            got += take
+            head = 0
+            if got == n:
+                break
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    # -- writer API ----------------------------------------------------------
+    def space(self) -> int:
+        return self.capacity - (self._w - self._r)
+
+    def write(self, vals) -> None:
+        import numpy as np
+
+        arr = np.asarray(vals)
+        n = len(arr)
+        assert self.space() >= n, f"{self.name}: overflow"
+        if n == 0:
+            return
+        self._blocks.append(arr)
+        self._w += n
+        self.total_written += n
+
+    # -- introspection -------------------------------------------------------
+    def occupancy(self) -> int:
+        return self._w - self._r
+
+    def __repr__(self):
+        return (
+            f"ArrayFifo({self.name!r}, cap={self.capacity}, "
+            f"w={self._w}, r={self._r})"
+        )
+
+
 class ReaderEndpoint:
     """Reader-side view bound into a PortEnv."""
 

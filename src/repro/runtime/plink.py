@@ -125,21 +125,47 @@ class PLink:
         self.stats_tests = 0
 
     # -- helpers ---------------------------------------------------------------
-    def _stage_inputs(self):
-        """Drain host FIFOs into one device block; None if no input available."""
+    def _plan(self) -> Dict[str, int]:
+        """Tokens stageable per boundary port right now: whole staging
+        granules, lane-aligned across each destination actor's ports (a
+        lockstep pair like a MAC's XIN/AIN must never skew — with
+        device→device lanes the producing PLink runs on another thread, so
+        per-port counts are not snapshot-atomic), capped at one block."""
         block = self.program.block
+        quanta = self.program.in_quanta
+        plan: Dict[str, int] = {}
+        for keys in self.program.in_groups.values():
+            g = min(
+                min(self.env.inputs[k].count(), block) // quanta[k]
+                for k in keys
+            )
+            if g > 0:
+                for k in keys:
+                    plan[k] = g * quanta[k]
+        return plan
+
+    def _stage_inputs(self):
+        """Drain host FIFOs into one device block per port."""
+        block = self.program.block
+        device = self.program.device
+        put = (
+            jnp.asarray if device is None
+            else (lambda a: jax.device_put(a, device))
+        )
+        plan = self._plan()
         staged = {}
         total = 0
         for (a, p, dt) in self.program.in_ports:
-            ep = self.env.inputs[f"{a}.{p}"]
-            n = min(ep.count(), block)
-            vals = ep.read(n) if n else ()
+            key = f"{a}.{p}"
+            n = plan.get(key, 0)
             arr = np.zeros((block,), _np_dtype(dt))
             mask = np.zeros((block,), bool)
             if n:
-                arr[:n] = np.asarray(vals, dtype=arr.dtype)
+                arr[:n] = np.asarray(
+                    self.env.inputs[key].read(n), dtype=arr.dtype
+                )
                 mask[:n] = True
-            staged[f"{a}.{p}"] = (jnp.asarray(arr), jnp.asarray(mask))
+            staged[key] = (put(arr), put(mask))
             total += n
         return staged, total
 
@@ -153,7 +179,9 @@ class PLink:
             mask = np.asarray(mask)
             keep = vals[mask]
             if keep.size:
-                self.env.outputs[key].write(list(keep))
+                # the endpoint decides the storage: a RingFifo boxes host
+                # tokens, a device->device ArrayFifo queues the array itself
+                self.env.outputs[key].write(keep)
                 moved += int(keep.size)
         self.device_idle = bool(idle)
         if self.device_idle:

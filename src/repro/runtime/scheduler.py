@@ -374,8 +374,14 @@ def runtime_from_xcf(graph, xcf, *, fuse: bool = True, **kw):
     """Build the right runtime (host-only or heterogeneous) from an XCF
     configuration — the paper's flow: partitioning is a config artifact.
 
+    Legalization validates every partition up front: an XCF partition whose
+    ``code_generator`` this toolchain does not recognize raises a
+    ``GraphError`` naming the partition and the known generator set (it used
+    to fall through as an unscheduled pseudo-thread).
+
     Legacy entry point; ``repro.compile(graph, xcf)`` is the supported
-    surface (it additionally caches the jitted device partition across runs).
+    surface (it additionally caches the jitted device partitions across
+    runs).
     """
     from repro.ir.passes import lower
 
@@ -386,19 +392,30 @@ def runtime_from_xcf(graph, xcf, *, fuse: bool = True, **kw):
         block=kw.get("block", 1024),
         fuse=fuse,
     )
-    if module.hw_region is not None:
+    if module.hw_regions():
         return HeteroRuntime(module, **kw)
     return HostRuntime(module, **kw)
 
 
 class HeteroRuntime(HostRuntime):
-    """Host threads + one compiled device partition bridged by a PLink actor
-    (paper Fig. 6: input/output stages + PLink + dynamic region).
+    """Host threads + N compiled device partitions, each bridged by its own
+    PLink lane (paper Fig. 6: input/output stages + PLink + dynamic region,
+    generalized to a *set* of dynamic regions).
 
-    The module's hw region is compiled into a single jitted DeviceProgram
-    (SDF sub-regions arrive already fused by the pipeline); channels crossing
-    the boundary become host FIFOs read/written by the PLink, which is
-    scheduled like a normal actor on ``plink_thread`` (the paper puts it on p1).
+    Every hw region of the module is compiled into its own jitted
+    DeviceProgram (SDF sub-regions arrive already fused, per partition, by
+    the pipeline).  Channels crossing a host/device boundary become host
+    FIFOs read/written by that partition's PLink; channels between two
+    *different* device partitions become staged ``ArrayFifo`` lanes — the
+    producing PLink queues retired numpy blocks that the consuming PLink
+    stages directly, with no per-token Python boxing in between.
+
+    With a single device partition the PLink is scheduled on
+    ``plink_thread`` (default: the first host thread — the paper puts it on
+    p1).  With several, each PLink gets its own dedicated scheduler thread
+    so the lanes keep independent async steps in flight and the partitions
+    pipeline against each other; pass ``plink_thread`` to force them all
+    onto one thread.
     """
 
     def __init__(
@@ -412,18 +429,20 @@ class HeteroRuntime(HostRuntime):
         controller: str = "am",
         default_depth: int = DEFAULT_DEPTH,
         max_execs_per_invoke: int = 10_000,
-        program=None,  # prebuilt DeviceProgram for this partition (else compiled)
+        program=None,  # prebuilt DeviceProgram (single-partition modules)
+        programs: Optional[Dict[str, object]] = None,  # pid -> DeviceProgram
         fuse: bool = True,
     ):
         from repro.ir.passes import lower
         from repro.runtime.device_runtime import compile_partition
+        from repro.runtime.fifo import ArrayFifo
         from repro.runtime.plink import PLink
 
         if isinstance(src, IRModule):
             if mapping is not None:
                 raise ValueError(
                     "HeteroRuntime(module): the lowered module already fixes "
-                    "the placement (and its hw region id overrides accel=); "
+                    "the placement (and its hw region ids override accel=); "
                     "pass a graph to use mapping="
                 )
             module = src
@@ -436,18 +455,23 @@ class HeteroRuntime(HostRuntime):
                 block=block,
                 fuse=fuse,
             )
-        hw = module.hw_region
-        assert hw is not None and hw.actors, (
-            "HeteroRuntime needs at least one device actor"
-        )
-        accel = hw.id
-        device_actors = sorted(hw.actors)
-        devset = set(device_actors)
+        hw_regions = [r for r in module.hw_regions() if r.actors]
+        assert hw_regions, "HeteroRuntime needs at least one device actor"
+        hw_of = {a: r.id for r in hw_regions for a in r.actors}
+        devset = set(hw_of)
         host_map = {
-            a: r for a, r in module.assignment().items() if r != accel
+            a: r for a, r in module.assignment().items() if a not in devset
         }
         threads = sorted(set(host_map.values()))
-        plink_thread = plink_thread or (threads[0] if threads else "t0")
+        single = len(hw_regions) == 1
+        if plink_thread is not None:
+            plink_threads = {r.id: plink_thread for r in hw_regions}
+        elif single:
+            plink_threads = {
+                hw_regions[0].id: threads[0] if threads else "t0"
+            }
+        else:  # one dedicated lane thread per device partition
+            plink_threads = {r.id: f"plink:{r.id}" for r in hw_regions}
 
         self.module = module
         self.graph = module.source
@@ -458,19 +482,20 @@ class HeteroRuntime(HostRuntime):
         self.partitions = {}
         for part in host_map.values():
             self.partitions.setdefault(part, ThreadPartition(part, self))
-        self.partitions.setdefault(plink_thread, ThreadPartition(plink_thread, self))
+        for part in plink_threads.values():
+            self.partitions.setdefault(part, ThreadPartition(part, self))
 
         self.fifos = {}
         readers = {a: {} for a in module.actors if a not in devset}
         writers = {a: {} for a in module.actors if a not in devset}
-        plink_in = {}
-        plink_out = {}
+        plink_in = {r.id: {} for r in hw_regions}
+        plink_out = {r.id: {} for r in hw_regions}
         for ch in module.channels:
-            s_dev, d_dev = ch.src in devset, ch.dst in devset
-            if s_dev and d_dev:
-                continue  # internal to the device program
+            s_pid, d_pid = hw_of.get(ch.src), hw_of.get(ch.dst)
+            if s_pid is not None and s_pid == d_pid:
+                continue  # internal to one device program
             depth = ch.resolved_depth or default_depth
-            if not s_dev and not d_dev:  # host <-> host
+            if s_pid is None and d_pid is None:  # host <-> host
                 cross = host_map[ch.src] != host_map[ch.dst]
                 f = RingFifo(depth, name=str(ch), deferred=cross)
                 self.fifos[str(ch)] = f
@@ -478,21 +503,29 @@ class HeteroRuntime(HostRuntime):
                 readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
                 self.partitions[host_map[ch.src]].writer_fifos.append(f)
                 self.partitions[host_map[ch.dst]].reader_fifos.append(f)
-            elif d_dev:  # host writer -> plink reader
-                cross = host_map[ch.src] != plink_thread
+            elif s_pid is not None and d_pid is not None:
+                # device -> device across partitions: a staged lane pair.
+                # ArrayFifo is self-publishing, so neither lane thread needs
+                # it in its snapshot/publish lists.
+                f = ArrayFifo(depth, name=str(ch))
+                self.fifos[str(ch)] = f
+                plink_out[s_pid][f"{ch.src}.{ch.src_port}"] = WriterEndpoint(f)
+                plink_in[d_pid][f"{ch.dst}.{ch.dst_port}"] = ReaderEndpoint(f)
+            elif d_pid is not None:  # host writer -> plink reader
+                cross = host_map[ch.src] != plink_threads[d_pid]
                 f = RingFifo(depth, name=str(ch), deferred=cross)
                 self.fifos[str(ch)] = f
                 writers[ch.src][ch.src_port] = WriterEndpoint(f)
-                plink_in[f"{ch.dst}.{ch.dst_port}"] = ReaderEndpoint(f)
+                plink_in[d_pid][f"{ch.dst}.{ch.dst_port}"] = ReaderEndpoint(f)
                 self.partitions[host_map[ch.src]].writer_fifos.append(f)
-                self.partitions[plink_thread].reader_fifos.append(f)
+                self.partitions[plink_threads[d_pid]].reader_fifos.append(f)
             else:  # plink writer -> host reader
-                cross = host_map[ch.dst] != plink_thread
+                cross = host_map[ch.dst] != plink_threads[s_pid]
                 f = RingFifo(depth, name=str(ch), deferred=cross)
                 self.fifos[str(ch)] = f
-                plink_out[f"{ch.src}.{ch.src_port}"] = WriterEndpoint(f)
+                plink_out[s_pid][f"{ch.src}.{ch.src_port}"] = WriterEndpoint(f)
                 readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
-                self.partitions[plink_thread].writer_fifos.append(f)
+                self.partitions[plink_threads[s_pid]].writer_fifos.append(f)
                 self.partitions[host_map[ch.dst]].reader_fifos.append(f)
 
         self.profiles = {}
@@ -510,21 +543,52 @@ class HeteroRuntime(HostRuntime):
             self.partitions[host_map[name]].instances.append(inst)
             self.profiles[name] = ActorProfile()
 
-        if program is not None and (
-            program.actors != device_actors or program.block != block
-        ):
-            raise ValueError(
-                f"prebuilt device program covers {program.actors} @block="
-                f"{program.block}, mapping needs {device_actors} @block={block}"
+        if programs is not None and program is not None:
+            raise ValueError("pass program= or programs=, not both")
+        if program is not None:
+            if not single:
+                raise ValueError(
+                    f"program= carries one device partition but the module "
+                    f"has {len(hw_regions)}; pass programs= keyed by "
+                    f"partition id"
+                )
+            programs = {hw_regions[0].id: program}
+        self.programs = {}
+        self.plinks = {}
+        for r in hw_regions:
+            device_actors = sorted(r.actors)
+            prog = (programs or {}).get(r.id)
+            if prog is not None and (
+                prog.actors != device_actors or prog.block != block
+            ):
+                raise ValueError(
+                    f"prebuilt device program for {r.id!r} covers "
+                    f"{prog.actors} @block={prog.block}, mapping needs "
+                    f"{device_actors} @block={block}"
+                )
+            if prog is None:
+                prog = compile_partition(module, block=block, partition=r.id)
+            self.programs[r.id] = prog
+            lane = "plink" if single else f"plink:{r.id}"
+            pl = PLink(
+                prog, PortEnv(plink_in[r.id], plink_out[r.id]), name=lane
             )
-        self.program = program or compile_partition(
-            module, device_actors, block=block, name=accel
-        )
-        self.plink = PLink(self.program, PortEnv(plink_in, plink_out))
-        self.instances["plink"] = self.plink
-        self.partitions[plink_thread].instances.append(self.plink)
-        self.profiles["plink"] = ActorProfile()
+            self.plinks[r.id] = pl
+            self.instances[lane] = pl
+            self.partitions[plink_threads[r.id]].instances.append(pl)
+            self.profiles[lane] = ActorProfile()
 
         self._cv = threading.Condition()
         self._progress = 0
         self._terminate = False
+
+    # -- single-partition compatibility surface ------------------------------
+    @property
+    def plink(self):
+        """The single PLink (legacy accessor); first lane when several."""
+        return next(iter(self.plinks.values()))
+
+    @property
+    def program(self):
+        """The single DeviceProgram (legacy accessor); first when several."""
+        return next(iter(self.programs.values()))

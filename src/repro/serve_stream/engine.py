@@ -98,7 +98,7 @@ class StreamServer:
             repartitioner.bind(self)
 
         module = program.module
-        devset = set(module.hw_region.actors) if module.hw_region else set()
+        devset = module.hw_actors()
         self.ingress_ports = sorted(
             n for n, a in module.actors.items()
             if not a.inputs and n not in devset
@@ -113,7 +113,7 @@ class StreamServer:
                 f"served program needs at least one ingress"
             )
 
-        self._batcher = self._make_batcher()
+        self._batchers = self._make_batchers()
         self._sessions: List[StreamSession] = []
         self._next_sid = 0
         self._lock = threading.RLock()        # session list + swap requests
@@ -229,14 +229,17 @@ class StreamServer:
             ) from self._engine_error
 
     # -- engine internals ------------------------------------------------------
-    def _make_batcher(self) -> DeviceBatcher:
-        dp = self._program.device_program()
-        if dp is None:
-            return None
-        return DeviceBatcher(
-            dp, mode=self.mode, max_batch=self.max_batch,
-            telemetry=self.telemetry,
-        )
+    def _make_batchers(self) -> Dict[str, DeviceBatcher]:
+        """One independent ``DeviceBatcher`` per device partition — each
+        lane keeps its own in-flight dispatches, so two accelerator
+        partitions pipeline against each other across all sessions."""
+        return {
+            pid: DeviceBatcher(
+                dp, mode=self.mode, max_batch=self.max_batch,
+                telemetry=self.telemetry,
+            )
+            for pid, dp in self._program.device_programs().items()
+        }
 
     def _build_pipeline(
         self, session: StreamSession, carry: Optional[Dict] = None
@@ -244,7 +247,7 @@ class StreamServer:
         return SessionPipeline(
             self._program.module,
             session,
-            self._program.device_program(),
+            self._program.device_programs(),
             controller=self._opts["controller"],
             default_depth=self._opts["default_depth"],
             max_execs_per_invoke=self._opts["max_execs_per_invoke"],
@@ -292,21 +295,24 @@ class StreamServer:
             for s in active:
                 moved += s.pipeline.host_round(self.telemetry)
 
-            # 3) device: retire what finished, then launch what is ready
-            if self._batcher is not None:
-                retired = self._batcher.poll()
-                moved += retired
-                ready = [
-                    s.pipeline.stage for s in active
-                    if s.pipeline.stage is not None
-                    and not s.pipeline.stage.pending
-                    and s.pipeline.stage.ready_tokens() > 0
-                ]
-                if ready and self._batcher.can_launch():
-                    moved += self._batcher.launch(ready)
-                pending_device = self._batcher.pending
-            else:
-                pending_device = False
+            # 3) device lanes: per partition, retire what finished, then
+            # launch what is ready — lanes are independent, so partition A's
+            # next batch goes out while partition B's is still in flight
+            pending_device = False
+            for pid, batcher in self._batchers.items():
+                moved += batcher.poll()
+                ready = []
+                for s in active:
+                    stage = s.pipeline.stages.get(pid)
+                    if (
+                        stage is not None
+                        and not stage.pending
+                        and stage.ready_tokens() > 0
+                    ):
+                        ready.append(stage)
+                if ready and batcher.can_launch():
+                    moved += batcher.launch(ready)
+                pending_device = pending_device or batcher.pending
 
             # 4) egress
             for s in active:
@@ -364,8 +370,8 @@ class StreamServer:
                 dev_backoff.reset()
 
         # shutdown: flush anything still in flight so state stays consistent
-        if self._batcher is not None:
-            self._batcher.drain()
+        for batcher in self._batchers.values():
+            batcher.drain()
 
     def _stall_check(
         self, active: List[StreamSession], swapping: bool
@@ -399,10 +405,12 @@ class StreamServer:
                     continue
             elif s.pipeline.quiescent():
                 continue  # normal completion (step 5) handles this
-            stage = s.pipeline.stage
-            if stage is not None and (stage.pending or stage._plan()):
+            stages = list(s.pipeline.stages.values())
+            if any(st.pending or st._plan() for st in stages):
                 continue  # device work still possible
-            quanta = dict(stage.quantum) if stage is not None else {}
+            quanta = {}
+            for st in stages:
+                quanta.update(st.quantum)
             stuck = s.pipeline.occupancy() + sum(queued.values())
             s.error = (
                 f"session {s.sid}: stream ended with {stuck} tokens stuck "
@@ -443,7 +451,7 @@ class StreamServer:
                 if not s.finished.is_set():
                     self._record_links(s.pipeline)
             self._program = old.repartition(xcf=xcf)
-            self._batcher = self._make_batcher()
+            self._batchers = self._make_batchers()
             for s in self._sessions:
                 if s.finished.is_set():
                     continue

@@ -89,7 +89,7 @@ class OnlineRepartitioner:
         best = best_point(points)
         current = evaluate(
             graph, program.xcf.assignment(), prof,
-            accel=program.hw_partition or "accel",
+            accel=program.hw_partitions or "accel",
         )["T_exec"]
         swapped = (
             best.predicted < current * (1.0 - self.min_gain)

@@ -13,9 +13,11 @@ The pipeline is the serve-mode reading of the lowered module (Fig. 6):
     an ingress FIFO pumped from the session's admission queue;
   * **sink actors** (no output ports) are *not* instantiated — their input
     channels become egress FIFOs drained into ``session.output(port)``;
-  * **device actors** are replaced by a ``DeviceStage``: the PLink's
-    stage/retire halves with the launch in the middle handed to the shared
-    ``DeviceBatcher``, so B sessions' blocks ride one batched dispatch;
+  * **device actors** are replaced by one ``DeviceStage`` per device
+    partition: the PLink lane's stage/retire halves with the launch in the
+    middle handed to that partition's shared ``DeviceBatcher``, so B
+    sessions' blocks ride one batched dispatch per lane (device→device
+    channels between partitions stay numpy blocks in an ``ArrayFifo``);
   * remaining host actors run as ordinary actor machines on the engine
     thread (single-threaded per session, so every FIFO is non-deferred).
 
@@ -175,65 +177,33 @@ class StreamSession:
 # ---------------------------------------------------------------------------
 
 
-def _region_quantum(module: IRModule, actor_name: str) -> int:
-    """Token granularity one boundary port of ``actor_name`` must be staged
-    in so no member op ever sees a torn block.
-
-    A fused region's boundary port inherits its member's per-firing rate
-    (often 1), but members *inside* the region may fire at coarser rates —
-    the 8-point IDCT consumes 8 tokens per firing behind a rate-1 descale.
-    Staging a block that is not a whole number of region iterations would
-    hand such a member a block mixing valid tokens with padding.  The LCM of
-    every member's action rates is a safe iteration granule.
-    """
-    ir = module.actors[actor_name]
-    members = ir.fused_from or (actor_name,)
-    graph = module.source
-    rates: List[int] = []
-    for m in members:
-        impl = (
-            graph.actors.get(m)
-            if graph is not None and m in getattr(graph, "actors", {})
-            else (ir.impl if m == actor_name else None)
-        )
-        if impl is None:
-            continue
-        for act in impl.actions:
-            rates.extend(act.consumes.values())
-            rates.extend(act.produces.values())
-    return math.lcm(*(max(r, 1) for r in rates)) if rates else 1
-
-
 class DeviceStage:
-    """Per-session stage/retire halves of the device dispatch.
+    """Per-session stage/retire halves of one device partition's dispatch.
 
-    Owns the session's device-partition state and the host FIFOs crossing
-    the boundary.  ``stage()`` drains boundary FIFOs into one ``(block,)``
-    staged payload — quantized to whole region iterations per destination
-    actor so a multi-rate op (e.g. the 8-point IDCT) never sees a torn
-    block, and lockstep ports of one actor stay lane-aligned; the batcher
-    stacks payloads from many sessions into one launch and routes each
-    lane's outputs back through ``retire()``.
+    Owns the session's state for one device partition and the FIFOs
+    crossing that partition's boundary.  ``stage()`` drains boundary FIFOs
+    into one ``(block,)`` staged payload — quantized to whole region
+    iterations per destination actor (the plan precomputed on the
+    ``DeviceProgram``) so a multi-rate op (e.g. the 8-point IDCT) never
+    sees a torn block, and lockstep ports of one actor stay lane-aligned;
+    the partition's batcher stacks payloads from many sessions into one
+    launch and routes each lane's outputs back through ``retire()``.
     """
 
     def __init__(self, program, module: IRModule):
         self.program = program
+        self.partition = getattr(program, "partition", "") or program.name
         self.state = {a: dict(s) for a, s in program.init_state.items()}
         self.in_eps: Dict[str, ReaderEndpoint] = {}
         self.out_eps: Dict[str, WriterEndpoint] = {}
         # boundary ports grouped by destination actor; per-port granule =
-        # lcm(port rate, region iteration quantum)
-        self.groups: Dict[str, List[str]] = {}
-        self.quantum: Dict[str, int] = {}
-        self.dtypes: Dict[str, object] = {}
-        for (a, p, dt) in program.in_ports:
-            key = f"{a}.{p}"
-            self.groups.setdefault(a, []).append(key)
-            self.quantum[key] = math.lcm(
-                max(module.actors[a].rate.consume_rate(p), 1),
-                _region_quantum(module, a),
-            )
-            self.dtypes[key] = _np_dtype(dt)
+        # lcm(port rate, region iteration quantum) — shared with PLink via
+        # the program's staging plan
+        self.groups: Dict[str, List[str]] = dict(program.in_groups)
+        self.quantum: Dict[str, int] = dict(program.in_quanta)
+        self.dtypes: Dict[str, object] = {
+            f"{a}.{p}": _np_dtype(dt) for (a, p, dt) in program.in_ports
+        }
         self.pending = False  # riding in an in-flight batch
         self.tokens_staged = 0
         self.tokens_retired = 0
@@ -287,7 +257,9 @@ class DeviceStage:
             vals = np.asarray(vals)
             keep = vals[np.asarray(mask)]
             if keep.size:
-                self.out_eps[key].write(list(keep))
+                # a RingFifo boxes host tokens; a device->device ArrayFifo
+                # queues the array itself
+                self.out_eps[key].write(keep)
                 moved += int(keep.size)
         self.pending = False
         self.tokens_retired += moved
@@ -313,18 +285,28 @@ class SessionPipeline:
         self,
         module: IRModule,
         session: StreamSession,
-        device_program,
+        device_programs,  # {partition id: DeviceProgram} (or one, or None)
         *,
         controller: str = "am",
         default_depth: int = 4096,
         max_execs_per_invoke: int = 10_000,
         carry_state: Optional[Dict[str, Dict]] = None,
     ):
+        from repro.runtime.fifo import ArrayFifo
+
         self.module = module
         self.session = session
         self.max_execs_per_invoke = max_execs_per_invoke
 
-        devset = set(module.hw_region.actors) if module.hw_region else set()
+        hw_of = module.hw_assignment()
+        devset = set(hw_of)
+        if device_programs is None:
+            device_programs = {}
+        elif not isinstance(device_programs, dict):  # legacy single program
+            device_programs = {
+                getattr(device_programs, "partition", "")
+                or device_programs.name: device_programs
+            }
         sources = {
             n for n, a in module.actors.items()
             if not a.inputs and n not in devset
@@ -338,9 +320,12 @@ class SessionPipeline:
             if n not in devset | sources | sinks
         ]
 
-        self.stage = (
-            DeviceStage(device_program, module) if devset else None
-        )
+        # one DeviceStage per device partition — each rides its own
+        # batcher lane, so two partitions pipeline inside one session too
+        self.stages: Dict[str, DeviceStage] = {
+            pid: DeviceStage(device_programs[pid], module)
+            for pid in sorted({hw_of[a] for a in devset})
+        }
         self.fifos: Dict[Tuple, RingFifo] = {}     # channel key -> fifo
         self.ingress: Dict[str, RingFifo] = {}     # source name -> fifo
         self.egress: List[Tuple[str, RingFifo]] = []  # (sink name, fifo)
@@ -348,13 +333,22 @@ class SessionPipeline:
         writers: Dict[str, Dict[str, WriterEndpoint]] = {a: {} for a in host}
 
         for ch in module.channels:
-            if ch.src in devset and ch.dst in devset:
-                continue  # compiled inside the device program
-            f = RingFifo(
-                ch.resolved_depth or default_depth,
-                name=f"s{session.sid}:{ch}",
-                deferred=False,  # one engine thread drives the pipeline
-            )
+            s_pid, d_pid = hw_of.get(ch.src), hw_of.get(ch.dst)
+            if s_pid is not None and s_pid == d_pid:
+                continue  # compiled inside one device program
+            if s_pid is not None and d_pid is not None:
+                # device -> device across partitions: numpy blocks, never
+                # per-token Python objects
+                f = ArrayFifo(
+                    ch.resolved_depth or default_depth,
+                    name=f"s{session.sid}:{ch}",
+                )
+            else:
+                f = RingFifo(
+                    ch.resolved_depth or default_depth,
+                    name=f"s{session.sid}:{ch}",
+                    deferred=False,  # one engine thread drives the pipeline
+                )
             self.fifos[ch.key] = f
             # writer side
             if ch.src in sources:
@@ -365,8 +359,8 @@ class SessionPipeline:
                         f"ingress port"
                     )
                 self.ingress[ch.src] = f
-            elif ch.src in devset:
-                self.stage.out_eps[f"{ch.src}.{ch.src_port}"] = (
+            elif s_pid is not None:
+                self.stages[s_pid].out_eps[f"{ch.src}.{ch.src_port}"] = (
                     WriterEndpoint(f)
                 )
             else:
@@ -374,8 +368,8 @@ class SessionPipeline:
             # reader side
             if ch.dst in sinks:
                 self.egress.append((ch.dst, f))
-            elif ch.dst in devset:
-                self.stage.in_eps[f"{ch.dst}.{ch.dst_port}"] = (
+            elif d_pid is not None:
+                self.stages[d_pid].in_eps[f"{ch.dst}.{ch.dst_port}"] = (
                     ReaderEndpoint(f)
                 )
             else:
@@ -399,10 +393,11 @@ class SessionPipeline:
             if name in carry:  # hot-swap: persistent actor state survives
                 inst.state = carry[name]
             self.instances[name] = inst
-        if self.stage is not None and carry:
-            self.stage.state = _transplant_device_state(
-                device_program, self.stage.state, carry
-            )
+        if carry:
+            for stage in self.stages.values():
+                stage.state = _transplant_device_state(
+                    stage.program, stage.state, carry
+                )
 
         # one admission pump moves at most this many tokens per round — a
         # whole number of source firings keeps multi-token actions intact
@@ -460,11 +455,20 @@ class SessionPipeline:
                 moved += n
         return moved
 
+    @property
+    def stage(self) -> Optional[DeviceStage]:
+        """The single device stage (legacy accessor); None when host-only,
+        first lane when several."""
+        if not self.stages:
+            return None
+        return next(iter(self.stages.values()))
+
     def occupancy(self) -> int:
         """Tokens anywhere inside the pipeline (excludes admission queues)."""
         toks = sum(f.occupancy() for f in self.fifos.values())
-        if self.stage is not None and self.stage.pending:
-            toks += 1  # an in-flight device block counts as occupancy
+        for stage in self.stages.values():
+            if stage.pending:
+                toks += 1  # an in-flight device block counts as occupancy
         return toks
 
     def quiescent(self) -> bool:
@@ -483,8 +487,8 @@ class SessionPipeline:
     def carry_state(self) -> Dict[str, Dict]:
         """Actor state to transplant into a rebuilt pipeline (hot-swap)."""
         carry = {n: inst.state for n, inst in self.instances.items()}
-        if self.stage is not None:
-            carry.update(_flatten_device_state(self.stage))
+        for stage in self.stages.values():
+            carry.update(_flatten_device_state(stage))
         return carry
 
 

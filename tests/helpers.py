@@ -103,6 +103,22 @@ def topfilter_expected(param: int = 50, n: int = 1024) -> List[float]:
     return [float(v) for v in lcg_values(n) if v < param]
 
 
+def drain_source(graph, name="source"):
+    """The exact token stream the network's source would generate — what a
+    serve-mode client submits in its place."""
+    actor = graph.actors[name]
+    action = actor.actions[0]
+    state = dict(actor.initial_state)
+    out = []
+    while action.guard is None or action.guard(state, {}):
+        state, produced = action.fire(state, {})
+        vals = produced.get(actor.outputs[0].name, [])
+        if not vals:
+            break
+        out.extend(vals)
+    return out
+
+
 def make_chain(n_stages: int = 4, n_tok: int = 256) -> Tuple[ActorGraph, List]:
     g = ActorGraph("chain")
 

@@ -1,0 +1,184 @@
+"""Property-based differential conformance fuzzer.
+
+Generates random well-typed actor chains over an integer-exact op palette
+(affine / clip / negate — closed under float32, so float64 host math and
+float32 device math agree *bitwise*) plus random legal XCF placements with
+1..3 device partitions, and asserts
+
+    host-only == hetero (unfused) == hetero (fused)
+
+token-for-token.  Every future placement-machinery change (staging plans,
+PLink lanes, fusion rewrites, hot-swap plumbing) has to get past this.
+
+Degrades to skips without ``hypothesis`` (tests/helpers.py convention);
+CI sets ``CONFORMANCE_EXAMPLES=200`` for the smoke gate.
+"""
+
+import os
+
+import pytest
+
+import repro
+from repro.core.actor import simple_actor, sink_actor, source_actor
+from repro.core.graph import ActorGraph
+from repro.core.xcf import make_xcf
+
+from helpers import HAVE_HYPOTHESIS, given, settings, st
+
+MAX_EXAMPLES = int(os.environ.get("CONFORMANCE_EXAMPLES", "25"))
+BLOCK = 16
+
+# ---------------------------------------------------------------------------
+# op palette — integer-exact in both float64 (host) and float32 (device)
+# ---------------------------------------------------------------------------
+
+
+def _affine(shift, scale, bias):
+    def fn(stt, v):
+        return stt, (v + shift) * scale + bias
+
+    def vf(state, ins):
+        vals, mask = ins["IN"]
+        return state, {"OUT": ((vals + shift) * scale + bias, mask)}
+
+    return fn, vf, ("affine", float(shift), float(scale), float(bias))
+
+
+def _clip(lo, hi):
+    def fn(stt, v):
+        return stt, max(lo, min(hi, v))
+
+    def vf(state, ins):
+        import jax.numpy as jnp
+
+        vals, mask = ins["IN"]
+        return state, {"OUT": (jnp.clip(vals, lo, hi), mask)}
+
+    return fn, vf, ("clip", float(lo), float(hi))
+
+
+def _negate():
+    # deliberately spec-less: exercises the composed-jnp fused path
+    def fn(stt, v):
+        return stt, -v
+
+    def vf(state, ins):
+        vals, mask = ins["IN"]
+        return state, {"OUT": (-vals, mask)}
+
+    return fn, vf, None
+
+
+if HAVE_HYPOTHESIS:
+    small_int = st.integers(-3, 3)
+    op_strategy = st.one_of(
+        st.tuples(st.just("affine"), small_int,
+                  st.integers(-3, 3).filter(lambda x: x != 0), small_int),
+        st.tuples(st.just("clip"), st.integers(-40, -1), st.integers(0, 40)),
+        st.tuples(st.just("negate")),
+    )
+    case_strategy = st.fixed_dictionaries({
+        "ops": st.lists(op_strategy, min_size=1, max_size=4),
+        "tokens": st.lists(st.integers(-8, 8), min_size=1, max_size=48),
+        "n_dev": st.integers(1, 3),
+        "n_threads": st.integers(1, 2),
+        "place": st.lists(st.integers(0, 4), min_size=4, max_size=4),
+    })
+else:  # pragma: no cover - shim keeps the decorator importable
+    case_strategy = st
+
+
+def _build(case):
+    """(graph, outputs, xcf) for one generated case."""
+    ops = case["ops"]
+    tokens = [float(v) for v in case["tokens"]]
+    g = ActorGraph("fuzz")
+
+    def gen(stt):
+        i = stt.get("i", 0)
+        if i >= len(tokens):
+            return stt, None
+        return {"i": i + 1}, tokens[i]
+
+    g.add(source_actor("source", gen,
+                       has_next=lambda stt: stt.get("i", 0) < len(tokens)))
+    prev = "source"
+    for i, spec in enumerate(ops):
+        kind = spec[0]
+        if kind == "affine":
+            fn, vf, sop = _affine(*spec[1:])
+        elif kind == "clip":
+            fn, vf, sop = _clip(*spec[1:])
+        else:
+            fn, vf, sop = _negate()
+        name = f"op{i}"
+        g.add(simple_actor(name, fn, vector_fire=vf, stream_op=sop))
+        g.connect(prev, name)
+        prev = name
+    got = []
+    g.add(sink_actor("sink", lambda stt, v: (got.append(float(v)), stt)[1]))
+    g.connect(prev, "sink")
+
+    # placement: each op drawn onto a host thread or a device partition
+    pool = (
+        [f"t{i}" for i in range(case["n_threads"])]
+        + [f"dev{i}" for i in range(case["n_dev"])]
+    )
+    accels = tuple(p for p in pool if p.startswith("dev"))
+    asg = {"source": "t0", "sink": "t0"}
+    for i in range(len(ops)):
+        asg[f"op{i}"] = pool[case["place"][i % 4] % len(pool)]
+    xcf = make_xcf(g.name, asg, accel=accels)
+    return g, got, xcf
+
+
+def test_harness_smoke():
+    """Hand-rolled cases through the differential harness — runs even
+    without hypothesis, so the harness itself is always exercised."""
+    cases = [
+        {
+            "ops": [("affine", 1, 2, -1), ("negate",), ("clip", -10, 10)],
+            "tokens": list(range(-8, 8)),
+            "n_dev": 2, "n_threads": 2, "place": [2, 3, 2, 0],
+        },
+        {   # three device partitions, chain spread across all of them
+            "ops": [("affine", 0, 3, 1), ("affine", -2, 1, 0),
+                    ("clip", -20, 20), ("negate",)],
+            "tokens": [5, -3, 0, 8, -8, 1],
+            "n_dev": 3, "n_threads": 1, "place": [1, 2, 3, 1],
+        },
+        {   # device sandwich: dev / host / dev
+            "ops": [("negate",), ("affine", 2, 2, 2), ("negate",)],
+            "tokens": [1, 2, 3, 4],
+            "n_dev": 1, "n_threads": 2, "place": [2, 0, 2, 0],
+        },
+    ]
+    for case in cases:
+        _check(case)
+
+
+def _check(case):
+    g, got, xcf = _build(case)
+
+    repro.compile(g, backend="host").run()
+    host = list(got)
+    got.clear()
+
+    repro.compile(g, xcf, block=BLOCK, fuse=False).run()
+    unfused = list(got)
+    got.clear()
+
+    repro.compile(g, xcf, block=BLOCK, fuse=True).run()
+    fused = list(got)
+    got.clear()
+
+    assert unfused == host, (case, unfused[:8], host[:8])
+    assert fused == host, (case, fused[:8], host[:8])
+
+
+@given(case=case_strategy)
+@settings(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+def test_differential_conformance(case):
+    """host-only == hetero(unfused) == hetero(fused), bitwise, for random
+    networks under random 1..3-device-partition placements."""
+    _check(case)

@@ -57,3 +57,78 @@ def test_fifo_order_property(ops):
     assert f.count() == len(model)
     if model:
         assert list(f.peek(len(model))) == model
+
+
+# ---------------------------------------------------------------------------
+# ArrayFifo — the device→device staged lane
+# ---------------------------------------------------------------------------
+
+
+def test_array_fifo_blocks_in_slices_out():
+    import numpy as np
+
+    from repro.runtime.fifo import ArrayFifo
+
+    f = ArrayFifo(64, name="lane")
+    f.write(np.arange(5, dtype=np.float32))
+    f.write(np.arange(5, 12, dtype=np.float32))
+    assert f.count() == 12
+    assert f.total_written == 12
+    # peek does not consume
+    np.testing.assert_array_equal(f.peek(7), np.arange(7, dtype=np.float32))
+    assert f.count() == 12
+    # read spanning two written blocks concatenates exactly once
+    got = f.read(7)
+    np.testing.assert_array_equal(got, np.arange(7, dtype=np.float32))
+    assert f.count() == 5
+    np.testing.assert_array_equal(f.read(5), np.arange(7, 12, dtype=np.float32))
+    assert f.occupancy() == 0
+    # the RingFifo publish protocol is accepted as a no-op
+    f.snapshot_reader(); f.publish_writer()
+    assert not f.unpublished
+
+
+def test_array_fifo_space_and_overflow():
+    import numpy as np
+    import pytest
+
+    from repro.runtime.fifo import ArrayFifo
+
+    f = ArrayFifo(8)
+    assert f.space() == 8
+    f.write(np.zeros(6))
+    assert f.space() == 2
+    with pytest.raises(AssertionError, match="overflow"):
+        f.write(np.zeros(3))
+    f.read(4)
+    assert f.space() == 6
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.integers(-4, 4), min_size=1, max_size=60))
+def test_array_fifo_order_property(ops):
+    """ArrayFifo preserves stream order across arbitrary block boundaries —
+    the same model test the RingFifo passes."""
+    import numpy as np
+
+    from repro.runtime.fifo import ArrayFifo
+
+    f = ArrayFifo(8)
+    model = []
+    nxt = 0
+    for op in ops:
+        if op > 0:
+            n = min(op, f.space())
+            vals = np.arange(nxt, nxt + n, dtype=np.float32)
+            f.write(vals)
+            model.extend(vals.tolist())
+            nxt += n
+        elif op < 0:
+            n = min(-op, f.count())
+            got = np.asarray(f.read(n)).tolist()
+            want = model[:n]
+            del model[:n]
+            assert got == want
+    assert f.count() == len(model)
+    if model:
+        assert np.asarray(f.peek(len(model))).tolist() == model

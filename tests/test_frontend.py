@@ -139,10 +139,10 @@ def test_device_program_reused_across_runs():
     prog = repro.compile(net, block=64).repartition(backend="device")
     prog.run()
     first = list(got)
-    jitted = prog._device_program
-    assert jitted is not None
+    jitted = prog._device_programs
+    assert jitted
     prog.run()
-    assert prog._device_program is jitted  # no re-jit
+    assert prog._device_programs is jitted  # no re-jit
     assert list(got) == first
 
 

@@ -19,7 +19,8 @@ from repro.runtime.device_runtime import compile_partition
 
 from helpers import make_topfilter, topfilter_expected
 
-SIZES = {"TopFilter": 1200, "FIR32": 600, "Bitonic8": 48, "IDCT8": 48}
+SIZES = {"TopFilter": 1200, "FIR32": 600, "Bitonic8": 48, "IDCT8": 48,
+         "ZigZag": 12}
 
 
 def _run(net, got, **compile_kw):

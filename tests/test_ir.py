@@ -84,14 +84,34 @@ def test_legalize_rejects_host_only_on_hw():
         legalize_xcf(g, xcf)
 
 
-def test_legalize_rejects_two_hw_partitions():
+def test_legalize_accepts_two_hw_partitions():
+    """Multi-accelerator placements are configuration, not an error: each hw
+    partition becomes its own region (compiled into its own device program
+    behind its own PLink lane)."""
     g, _ = make_chain(n_stages=2, n_tok=8)
     xcf = make_xcf(g.name, {"src": "t0", "s0": "acc_a", "s1": "acc_b",
+                            "snk": "t0"}, accel=("acc_a", "acc_b"))
+    mod = legalize_xcf(g, xcf)
+    assert [r.id for r in mod.hw_regions()] == ["acc_a", "acc_b"]
+    assert mod.hw_assignment() == {"s0": "acc_a", "s1": "acc_b"}
+    # the single-partition accessor refuses to pick one arbitrarily
+    with pytest.raises(GraphError, match="hw_regions"):
+        mod.hw_region
+
+
+def test_legalize_rejects_unknown_code_generator():
+    """An XCF partition whose code generator the toolchain does not provide
+    must fail loudly, naming the partition and the known set — it used to
+    fall through as an unscheduled pseudo-thread."""
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    xcf = make_xcf(g.name, {"src": "t0", "s0": "fpga0", "s1": "t0",
                             "snk": "t0"})
-    for pid in ("acc_a", "acc_b"):
-        xcf.partitions[pid].code_generator = "hw"
-    with pytest.raises(GraphError, match="hw partitions"):
+    xcf.partitions["fpga0"].code_generator = "vivado-hls"
+    with pytest.raises(GraphError) as e:
         legalize_xcf(g, xcf)
+    assert "'fpga0'" in str(e.value)
+    assert "vivado-hls" in str(e.value)
+    assert "sw" in str(e.value) and "hw" in str(e.value)
 
 
 def test_legalize_rejects_object_dtype_on_device():

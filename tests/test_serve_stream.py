@@ -57,6 +57,7 @@ SIZES = {  # three per-session workload sizes each (staggered on purpose)
     "FIR32": [400, 600, 500],
     "Bitonic8": [32, 48, 40],
     "IDCT8": [32, 48, 40],
+    "ZigZag": [6, 9, 7],
 }
 EGRESS = {"FIR32": "sink"}  # FIR also has the x-forward xsink
 
