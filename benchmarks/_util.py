@@ -17,15 +17,26 @@ from typing import Dict, List
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-# every emit() of the current process, in order: {"name", "us_per_call", "derived"}
+# every emit() of the current process, in order:
+#   {"name", "us_per_call", "derived"[, "ratio"]}
+# us_per_call is None for rows that carry no time (pure ratio/speedup rows —
+# they set "ratio" instead; the old convention of smuggling them through as
+# us_per_call=0.0 is gone).  "derived" stays human-readable prose.
 RECORDS: List[Dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    RECORDS.append(
-        {"name": name, "us_per_call": us_per_call, "derived": derived}
-    )
-    print(f"{name},{us_per_call:.3f},{derived}")
+def emit(
+    name: str,
+    us_per_call: float = None,
+    derived: str = "",
+    ratio: float = None,
+) -> None:
+    row = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    if ratio is not None:
+        row["ratio"] = round(float(ratio), 4)
+    RECORDS.append(row)
+    us = "" if us_per_call is None else f"{us_per_call:.3f}"
+    print(f"{name},{us},{derived}")
 
 
 def wall(fn, *args, **kw):

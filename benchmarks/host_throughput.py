@@ -1,0 +1,70 @@
+"""Host fusion throughput: fused block execution vs per-token interpretation.
+
+Runs FIR32 and ZigZag to quiescence under a *host-only* placement twice —
+``fuse=False`` (every actor a per-token actor machine, the pre-PR cost of
+every "host" design point) and ``fuse=True`` (static-rate regions fired as
+one vectorized numpy block executor, ``repro.runtime.host_fused``) — and
+emits:
+
+  * ``host/{net}/interpreted``  — µs/token, per-token actor machines,
+  * ``host/{net}/fused``        — µs/token, fused block executor,
+  * ``host/{net}/speedup``      — ratio row (fused over interpreted).
+
+The two paths are bitwise identical (asserted here on the collected
+outputs); the speedup is what the MILP's host-fused coefficients price into
+``explore()``.  Smoke mode (``BENCH_SMOKE=1``) shrinks workloads ~10x.
+"""
+
+from __future__ import annotations
+
+import time
+
+from _util import emit, smoke_scale
+
+import repro
+from repro.apps.streams import NETWORKS
+
+SIZES = smoke_scale({"FIR32": 60000, "ZigZag": 800})
+TOKENS_PER_UNIT = {"FIR32": 1, "ZigZag": 64}
+REPEATS = 3
+
+
+def main() -> None:
+    for name in ("FIR32", "ZigZag"):
+        size = SIZES[name]
+        net, got = (
+            NETWORKS[name](n=size) if name == "FIR32"
+            else NETWORKS[name](size)
+        )
+        tokens = size * TOKENS_PER_UNIT[name]
+        secs, outs = {}, {}
+        for mode, fuse in (("interpreted", False), ("fused", True)):
+            prog = repro.compile(net, backend="host", fuse=fuse)
+            best = float("inf")
+            for _ in range(REPEATS):
+                got.clear()
+                best = min(best, prog.run().seconds)
+            secs[mode] = best
+            outs[mode] = list(got)
+            emit(
+                f"host/{name}/{mode}",
+                1e6 * best / tokens,
+                f"tput={tokens / best:.0f}tok/s produced={len(got)}",
+            )
+        assert outs["fused"] == outs["interpreted"], (
+            f"{name}: fused host output diverged from interpreted"
+        )
+        emit(
+            f"host/{name}/speedup",
+            derived=f"{secs['interpreted'] / secs['fused']:.2f}x fused over "
+                    f"per-token interpretation",
+            ratio=secs["interpreted"] / secs["fused"],
+        )
+
+
+if __name__ == "__main__":
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    main()

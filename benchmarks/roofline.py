@@ -196,8 +196,16 @@ def main() -> None:
     single = [r for r in rows if r["mesh"] == "16x16"]
     worst = min(single, key=lambda r: r["roofline_frac"])
     collb = max(single, key=lambda r: r["collective_s"])
-    emit("roofline/worst_fraction", 0, f"{worst['arch']}/{worst['shape']} frac={worst['roofline_frac']:.3f}")
-    emit("roofline/most_collective_bound", 0, f"{collb['arch']}/{collb['shape']}")
+    emit(
+        "roofline/worst_fraction",
+        derived=f"{worst['arch']}/{worst['shape']} "
+                f"frac={worst['roofline_frac']:.3f}",
+        ratio=worst["roofline_frac"],
+    )
+    emit(
+        "roofline/most_collective_bound",
+        derived=f"{collb['arch']}/{collb['shape']}",
+    )
 
 
 if __name__ == "__main__":

@@ -3,9 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows and, at the end, writes
 ``BENCH_streams.json`` — the machine-readable per-suite numbers (plus the
 fused-vs-unfused device-step comparison) used to track the perf trajectory
-across PRs.  Run as ``PYTHONPATH=src python -m benchmarks.run`` (all) or with
-a subset: ``... -m benchmarks.run roofline am_vs_basic``.  Set
-``BENCH_SMOKE=1`` to shrink workloads ~10x (CI smoke mode).
+across PRs.  Rows that carry no time (speedups, error fractions) set the
+``ratio`` field instead of ``us_per_call`` (which is then null); ``derived``
+stays human-readable prose.  Run as ``PYTHONPATH=src python -m
+benchmarks.run`` (all) or with a subset: ``... -m benchmarks.run roofline
+am_vs_basic``.  Set ``BENCH_SMOKE=1`` to shrink workloads ~10x (CI smoke
+mode).
 """
 
 from __future__ import annotations
@@ -34,6 +37,8 @@ SUITES = [
     #                                              sequential device dispatch
     ("multi_partition", "multi_partition"),  # k-way accelerator splits:
     #                                          end-to-end + per-PLink-lane rows
+    ("host_throughput", "host_throughput"),  # host fusion: fused block
+    #                                          executor vs per-token interp
 ]
 
 JSON_PATH = Path(os.environ.get("BENCH_JSON", "BENCH_streams.json"))
@@ -70,6 +75,23 @@ def _multi_partition_summary(rows):
         one, two = d.get("1part_us_per_tok"), d.get("2part_us_per_tok")
         if one and two:
             d["speedup_2part"] = one / two
+    return per_net
+
+
+def _host_summary(rows):
+    """Per-network interpreted vs fused host µs/token (+ the speedup ratio)."""
+    per_net = {}
+    for r in rows:
+        parts = r["name"].split("/")
+        if len(parts) != 3:
+            continue
+        net, metric = parts[1], parts[2]
+        if metric in ("interpreted", "fused"):
+            per_net.setdefault(net, {})[f"{metric}_us_per_tok"] = (
+                r["us_per_call"]
+            )
+        elif metric == "speedup" and "ratio" in r:
+            per_net.setdefault(net, {})["speedup"] = r["ratio"]
     return per_net
 
 
@@ -128,6 +150,9 @@ def main() -> None:
         ),
         "multi_partition": _multi_partition_summary(
             suites.get("multi_partition", {}).get("rows", [])
+        ),
+        "host_throughput": _host_summary(
+            suites.get("host_throughput", {}).get("rows", [])
         ),
         "failures": failures,
     }

@@ -124,9 +124,9 @@ def main() -> None:
             )
         emit(
             f"server/{NET}/speedup_B{n}",
-            0.0,
-            f"{secs['sequential'] / secs['batched']:.2f}x batched over "
-            f"sequential dispatch",
+            derived=f"{secs['sequential'] / secs['batched']:.2f}x batched "
+                    f"over sequential dispatch",
+            ratio=secs["sequential"] / secs["batched"],
         )
 
 

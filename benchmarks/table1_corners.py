@@ -104,8 +104,8 @@ def main() -> None:
         if "hardware" in row and "single" in row:
             emit(
                 f"table1/{name}/speedup_hw_vs_single",
-                0.0,
-                f"{row['single'] / row['hardware']:.2f}x",
+                derived=f"{row['single'] / row['hardware']:.2f}x",
+                ratio=row["single"] / row["hardware"],
             )
 
         # fused vs unfused device partition step (the middle-end's win).
@@ -135,13 +135,14 @@ def main() -> None:
             variants["unfused"].device_program().actors
         )
         emit(
-            f"table1/{name}/device_step_speedup", 0.0,
-            (
+            f"table1/{name}/device_step_speedup",
+            derived=(
                 f"{us['unfused'] / us['fused']:.2f}x "
                 f"(opt2 {us['unfused'] / us['fused_opt2']:.2f}x)"
                 if fused_something
                 else "no fusable SDF region (identical programs)"
             ),
+            ratio=us["unfused"] / us["fused"] if fused_something else None,
         )
 
 

@@ -331,6 +331,8 @@ _ZIGZAG_INV = np.argsort(_ZIGZAG).astype(np.int32)
 class ZigZagScan:
     """De-zigzag: one SDF firing reorders a 64-token scan block to raster."""
 
+    stream_op = ("perm", _ZIGZAG_INV)
+
     @action(name="z", consumes={"IN": 64}, produces={"OUT": 64})
     def z(st, t):
         vals = t["IN"]

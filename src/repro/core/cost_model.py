@@ -83,6 +83,12 @@ class NetworkProfile:
     #   kind "sw" = one host thread; "hw" = the device partition.
     exec_sw: Dict[str, float] = field(default_factory=dict)
     exec_hw: Dict[str, float] = field(default_factory=dict)
+    # exec_sw_fused: seconds per total workload when the actor runs inside a
+    # fused host region (the fuse-sdf-host-regions block executor) instead of
+    # its per-token interpreter.  Measured by profiler.profile_host_fused /
+    # live server telemetry; empty means "no fused host rate known" and the
+    # evaluator falls back to exec_sw everywhere.
+    exec_sw_fused: Dict[str, float] = field(default_factory=dict)
     # tokens moved per connection over the workload: key (src, src_port, dst, dst_port)
     tokens: Dict[Tuple[str, str, str, str], int] = field(default_factory=dict)
     # buffer sizes per connection (for τ); default used when missing
@@ -102,6 +108,42 @@ class NetworkProfile:
         if partition in accels:
             return self.exec_hw.get(actor, math.inf)
         return self.exec_sw.get(actor, 0.0)
+
+    def sw_bound(self, actor: str) -> float:
+        """Admissible (never over-estimating) software time: the fused host
+        rate when one is known, else the interpreted rate — what branch &
+        bound may use as a partition-load lower bound."""
+        t = self.exec_sw.get(actor, 0.0)
+        f = self.exec_sw_fused.get(actor)
+        return t if f is None else min(t, f)
+
+
+def host_fused_actors(graph, assignment: Assignment, prof, accels) -> set:
+    """Actors the evaluator charges at the *fused* host rate under this
+    assignment: actors with a measured fused rate that share a software
+    partition with at least one fused-rate neighbor.
+
+    This is the cost-model approximation of the fuse-sdf-host-regions rule
+    (connected static-rate stream-op groups of >= 2 fuse; singletons stay
+    interpreted) — the evaluator cannot re-run the detection pass per
+    candidate, but adjacency-of-fusable-neighbors matches it exactly on the
+    graphs the pass accepts, since fused rates are only ever measured for
+    actors the pass found fusable in the first place.
+    """
+    fusable = {
+        a for a in prof.exec_sw_fused
+        if a in assignment and assignment[a] not in accels
+    }
+    out = set()
+    for ch in graph.channels:
+        if (
+            ch.src in fusable
+            and ch.dst in fusable
+            and assignment[ch.src] == assignment[ch.dst]
+        ):
+            out.add(ch.src)
+            out.add(ch.dst)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -133,11 +175,21 @@ def evaluate(
     p1 = plink_thread or (threads[0] if threads else None)
     used_accels = sorted({p for p in assignment.values() if p in accels})
 
-    # (1) thread times
+    # (1) thread times — actors co-located with a fused-rate neighbor are
+    # charged their host-fused coefficient (the block executor's measured
+    # rate) instead of the per-token interpreter's, so `explore()` prices
+    # host design points at what the runtime will actually deliver
+    fused_on = (
+        host_fused_actors(graph, assignment, prof, accels)
+        if prof.exec_sw_fused else set()
+    )
     T_p: Dict[str, float] = {p: 0.0 for p in threads}
     for a, p in assignment.items():
         if p not in accels:
-            T_p[p] += prof.exec_time(a, p, accels)
+            T_p[p] += (
+                prof.exec_sw_fused[a] if a in fused_on
+                else prof.exec_time(a, p, accels)
+            )
 
     # (2) + (5): one PLink lane per accelerator partition
     T_lane: Dict[str, float] = {}

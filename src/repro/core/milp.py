@@ -101,7 +101,11 @@ def solve_bb(
     capacity: Optional[int] = None,
 ) -> Solution:
     """DFS branch & bound.  Bound: max current partition load (admissible —
-    each accelerator partition's lane load is its max member hw time)."""
+    each accelerator partition's lane load is its max member hw time, and
+    software loads use ``prof.sw_bound`` — the fused host rate when known —
+    since the evaluator may charge co-located fusable actors the cheaper
+    fused coefficient; bounding with the interpreted rate could prune the
+    optimum)."""
     accels = _accel_set(accel)
     actors = sorted(
         graph.actors,
@@ -138,7 +142,7 @@ def solve_bb(
                 hw_max[p] = max(hw_max[p], prof.exec_hw.get(a, math.inf))
                 hw_count[p] += 1
             else:
-                loads[p] += prof.exec_sw.get(a, 0.0)
+                loads[p] += prof.sw_bound(a)
             if bound() < best[1]:
                 asg[a] = p
                 dfs(i + 1)
@@ -147,7 +151,7 @@ def solve_bb(
                 hw_max[p] = prev_hw
                 hw_count[p] -= 1
             else:
-                loads[p] -= prof.exec_sw.get(a, 0.0)
+                loads[p] -= prof.sw_bound(a)
 
     dfs(0)
     return Solution(best[0], best[1], best[2], "bb")

@@ -47,6 +47,50 @@ def profile_host(
     return prof, rt
 
 
+def profile_host_fused(
+    graph: ActorGraph,
+    prof: NetworkProfile,
+    *,
+    controller: str = "am",
+    block: int = 1024,
+    max_rounds: int = 1_000_000,
+    max_seconds: Optional[float] = None,
+) -> NetworkProfile:
+    """Measure ``exec_sw_fused``: per-actor host time under fused block
+    execution (the ``fuse-sdf-host-regions`` executor).
+
+    Runs the host-only placement once with host fusion enabled and splits
+    each fused region's wall time over its members in proportion to their
+    interpreted times (one block invocation cannot be attributed per
+    member — the same convention ``profile_from_telemetry`` uses for batched
+    device launches).  Actors outside any fused region keep no fused
+    coefficient: the evaluator then correctly charges them the interpreted
+    rate.  These coefficients are what lets ``explore()`` price host design
+    points at the fused runtime's actual speed instead of the interpreter's.
+    """
+    from repro.ir.passes import lower
+
+    module = lower(graph, None, block=block)
+    specs = module.meta.get("host_fused") or {}
+    if not specs:
+        return prof
+    rt = HostRuntime(module, controller=controller)
+    rt.run_single(max_rounds, max_seconds=max_seconds)
+    for gid, spec in specs.items():
+        p = rt.profiles.get(gid)
+        if p is None or not p.time_ns:
+            continue
+        weights = {m: max(prof.exec_sw.get(m, 0.0), 0.0) for m in spec.members}
+        total_w = sum(weights.values())
+        for m in spec.members:
+            share = (
+                weights[m] / total_w if total_w > 0
+                else 1.0 / len(spec.members)
+            )
+            prof.exec_sw_fused[m] = p.time_ns / 1e9 * share
+    return prof
+
+
 def profile_device(
     graph: ActorGraph,
     prof: NetworkProfile,
@@ -192,6 +236,10 @@ def profile_from_telemetry(
       * ``exec_sw``   — live per-actor firing time for actors that ran on
         host threads this window; actors currently on the device keep the
         ``base`` profile's software time (they produced no host sample);
+      * ``exec_sw_fused`` — live: a fused host region reports under one
+        ``hostfused:a+b+c`` key (one block invocation cannot be attributed
+        per member), split over the members in proportion to their ``base``
+        software times — the MILP's distinct host-fused coefficients;
       * ``exec_hw``   — live: the window's device wall time shared across
         the device actors in proportion to their ``base`` hw times (one
         batched launch cannot be attributed per actor), falling back to an
@@ -206,22 +254,47 @@ def profile_from_telemetry(
     prof = NetworkProfile()
     if base is not None:
         prof.exec_sw.update(base.exec_sw)
+        prof.exec_sw_fused.update(base.exec_sw_fused)
         prof.exec_hw.update(base.exec_hw)
         prof.tokens.update(base.tokens)
         prof.buffers.update(base.buffers)
         prof.links.update(base.links)
         prof.in_situ = base.in_situ
         prof.n_cores = base.n_cores
+    fused_members: set = set()
     for actor, t_ns in snap.actor_time_ns.items():
         if actor in graph.actors:
             prof.exec_sw[actor] = t_ns / 1e9
+        elif actor.startswith("hostfused:"):
+            members = [
+                m for m in actor.split(":", 1)[1].split("+")
+                if m in graph.actors
+            ]
+            if not members:
+                continue
+            fused_members.update(members)
+            weights = {
+                m: (base.exec_sw.get(m, 0.0) if base is not None else 0.0)
+                for m in members
+            }
+            total_w = sum(weights.values())
+            for m in members:
+                share = (
+                    weights[m] / total_w if total_w > 0
+                    else 1.0 / len(members)
+                )
+                prof.exec_sw_fused[m] = t_ns / 1e9 * share
     for key, n in snap.channel_tokens.items():
         prof.tokens[key] = max(prof.tokens.get(key, 0), n)
     device_s = snap.device_time_ns / 1e9
     if device_s > 0:
+        # host-fused members produced no per-actor host sample either, but
+        # they ran on a host thread this window — never device-attribute them
         hw_actors = [
             a for a, act in graph.actors.items()
-            if act.device_ok and a not in snap.actor_time_ns
+            if act.device_ok
+            and a not in snap.actor_time_ns
+            and a not in fused_members
         ]
         if hw_actors:
             weights = {

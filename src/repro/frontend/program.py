@@ -382,22 +382,34 @@ class Program:
         block: int = 2048,
         include_device: bool = True,
         include_links: bool = True,
+        include_host_fused: bool = True,
         bandwidth_sizes=(256, 2048),
     ):
-        """Measure the MILP's inputs (§III-E): per-actor sw/hw times, channel
-        token counts, and link models.  Returns a ``NetworkProfile``."""
+        """Measure the MILP's inputs (§III-E): per-actor sw/hw times
+        (interpreted AND host-fused — distinct coefficients, so ``explore``
+        prices host design points at the block executor's real speed),
+        channel token counts, and link models.  Returns a
+        ``NetworkProfile``."""
         import os
 
         from repro.core.profiler import (
             measure_fifo_bandwidth,
             profile_device,
             profile_host,
+            profile_host_fused,
         )
 
         self._reset_collectors()
         prof, _rt = profile_host(
             self._graph, controller=self._opts["controller"]
         )
+        if include_host_fused:
+            self._reset_collectors()
+            prof = profile_host_fused(
+                self._graph, prof,
+                controller=self._opts["controller"],
+                block=self._opts["block"],
+            )
         if include_device:
             prof = profile_device(self._graph, prof, block=block)
         if include_links:

@@ -121,6 +121,12 @@ def _translate_spec(spec, in_reg, new_reg, emit):
         x, m = in_reg("IN")
         n = int(spec[1])
         return {f"O{i}": (x, m) for i in range(n)}
+    if kind == "perm":
+        idx = np.asarray(spec[1], np.int32)
+        x, m = in_reg("IN")
+        o = new_reg()
+        emit(StreamOp("perm", (x,), o, (idx,)))
+        return {"OUT": (o, m)}
     return None
 
 
@@ -180,6 +186,89 @@ def _try_stream_program(
     if opt_level >= 2:
         prog = fold(prog)
     return prog, out_masks
+
+
+# ---------------------------------------------------------------------------
+# Host-region codegen (fused block execution of static-rate *software* regions)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HostFusedSpec:
+    """Codegen product of ``fuse-sdf-host-regions`` (see ``passes.py``).
+
+    Unlike device fusion, host fusion rewrites *nothing*: the members stay in
+    the module, their channels keep their keys, and this spec just tells the
+    runtimes how to drive the region as one block executor
+    (``repro.runtime.host_fused.HostFusedRegion``) — bulk-reading the
+    boundary channels listed here, evaluating ``program`` with the numpy
+    float64 evaluator (``kernels.stream_fused.fused_stream_np``), and
+    bulk-writing the outputs.  Keeping the members intact is what makes the
+    per-token interpreted fallback (dynamic tails, blocked outputs) free.
+    """
+
+    members: Tuple[str, ...]                      # topological order
+    program: StreamProgram
+    in_keys: Tuple[Tuple[str, str, str, str], ...]   # program input order
+    out_keys: Tuple[Tuple[str, str, str, str], ...]  # program output order
+    internal_keys: Tuple[Tuple[str, str, str, str], ...]
+    quantum: int            # tokens per whole region iteration (lcm of rates)
+    fires_each: Tuple[int, ...]  # per-member firings per iteration (repetition
+    #                              vector entries, aligned with ``members``)
+    fires_per_quantum: int  # interpreted member firings one quantum replaces
+    block: int              # max tokens per fused invocation
+
+    def __repr__(self) -> str:  # keep ir_dump meta lines readable
+        return (
+            f"HostFusedSpec({'+'.join(self.members)}, q={self.quantum}, "
+            f"{len(self.program.ops)} ops)"
+        )
+
+
+def build_host_fused(
+    module, members: Sequence[str], *, opt_level: int = 1, block: int = 1024
+) -> Optional[HostFusedSpec]:
+    """Lower one static-rate software region to a ``HostFusedSpec``, or None
+    when any member falls outside the stream-op palette (the region then
+    stays fully interpreted)."""
+    import math
+
+    order = [a for a in module.topo_order() if a in set(members)]
+    b_ins, b_outs, internal = _region_io(module, order)
+    try:
+        built = _try_stream_program(
+            module, order, b_ins, b_outs, internal, opt_level=opt_level
+        )
+    except GraphError:  # e.g. a feedback edge inside the group
+        return None
+    if built is None:
+        return None
+    program, _masks = built
+    rates: List[int] = []
+    fires = 0
+    for m in order:
+        impl = module.actors[m].impl
+        for act in impl.actions:
+            rates.extend(act.consumes.values())
+            rates.extend(act.produces.values())
+    quantum = math.lcm(*(max(r, 1) for r in rates)) if rates else 1
+    fires_each = []
+    for m in order:
+        a0 = module.actors[m].impl.actions[0]
+        rate = max(next(iter(a0.consumes.values()), 1), 1)
+        fires_each.append(quantum // rate)
+    fires = sum(fires_each)
+    return HostFusedSpec(
+        members=tuple(order),
+        program=program,
+        in_keys=tuple(ch.key for ch in b_ins),
+        out_keys=tuple(ch.key for ch in b_outs),
+        internal_keys=tuple(ch.key for ch in internal),
+        quantum=quantum,
+        fires_each=tuple(fires_each),
+        fires_per_quantum=fires,
+        block=max(block, quantum),
+    )
 
 
 # ---------------------------------------------------------------------------

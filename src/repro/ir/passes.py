@@ -17,10 +17,21 @@ Default pipeline (in order):
                        inferred (rate- and boundary-aware); replaces the old
                        mutate-the-graph-per-XCF depth rebuild
   detect-sdf-regions   finds maximal static-rate regions inside each device
-                       partition (never across a partition boundary)
-  fuse-sdf-regions     collapses each SDF region into one fused actor
+                       partition (never across a partition boundary) AND
+                       inside each software partition (stream-op members
+                       only — candidates for fused block execution on host)
+  fuse-sdf-regions     collapses each device SDF region into one fused actor
                        (Pallas stream kernel when specs allow, composed-jnp
                        otherwise)
+  fuse-sdf-host-regions lowers each software SDF region to a
+                       ``HostFusedSpec`` in ``meta["host_fused"]``: the
+                       runtimes drive the region as ONE vectorized numpy
+                       block executor instead of N per-token interpreters,
+                       bit-identical by construction (see
+                       ``repro.runtime.host_fused`` + docs/runtime.md).
+                       Unlike device fusion nothing is rewritten — members
+                       and channels survive, so the per-token interpreted
+                       fallback stays available for dynamic-rate tails
 
 Every pass appends a full module dump to ``module.trace`` —
 ``Program.ir_dump()`` renders it.
@@ -296,7 +307,7 @@ class InferFifoDepths(Pass):
 
 
 class DetectSDFRegions(Pass):
-    """Find maximal static-rate (SDF) regions inside each device partition.
+    """Find maximal static-rate (SDF) regions inside each partition.
 
     Members must be guard-free single-action actors (``RateSig.static``);
     regions are the connected components of such actors over one partition's
@@ -308,6 +319,13 @@ class DetectSDFRegions(Pass):
     Non-convex groups are skipped (recorded in
     ``meta["sdf_groups_skipped"]``).  Only multi-actor regions are worth
     fusing.
+
+    Software partitions are scanned too (``meta["sdf_host_groups"]``): host
+    candidates are additionally required to carry a declarative
+    ``stream_op`` spec, be stateless, and have both input and output ports —
+    sources/sinks run arbitrary Python (collectors, generators) that a block
+    executor cannot vectorize, and spec-less members would force the whole
+    group back to interpretation anyway.
     """
 
     name = "detect-sdf-regions"
@@ -357,7 +375,37 @@ class DetectSDFRegions(Pass):
             module.meta["sdf_groups"] = sorted(sdf)
         if skipped:
             module.meta["sdf_groups_skipped"] = sorted(skipped)
+
+        host, host_skipped = [], []
+        for sw in module.sw_regions():
+            cand = {
+                a for a in sw.actors if self._host_fusable(module.actors[a])
+            }
+            comp = connected_components(cand, module.channels)
+            groups: Dict[str, List[str]] = {}
+            for a in cand:
+                groups.setdefault(comp[a], []).append(a)
+            for g in groups.values():
+                if len(g) < 2:
+                    continue
+                (host if self._is_convex(module, set(g))
+                 else host_skipped).append(sorted(g))
+        if host:
+            module.meta["sdf_host_groups"] = sorted(host)
+        if host_skipped:
+            module.meta["sdf_host_groups_skipped"] = sorted(host_skipped)
         return module
+
+    @staticmethod
+    def _host_fusable(ir) -> bool:
+        return (
+            ir.rate.static
+            and bool(ir.inputs)
+            and bool(ir.outputs)
+            and ir.impl is not None
+            and getattr(ir.impl, "stream_op", None) is not None
+            and not getattr(ir.impl, "initial_state", None)
+        )
 
 
 class FuseSDFRegions(Pass):
@@ -427,6 +475,45 @@ class FuseSDFRegions(Pass):
         return module
 
 
+class FuseSDFHostRegions(Pass):
+    """Lower each detected software SDF region to a ``HostFusedSpec``.
+
+    Runs *after* device fusion so the recorded channel keys are the final
+    (post-rewrite) ones — a host region bordering a device partition sees the
+    fused device actor's renamed ports.  The module itself is untouched: the
+    spec lands in ``meta["host_fused"]`` and the runtimes decide per
+    invocation whether to fire the region as one vectorized block
+    (``runtime.host_fused.HostFusedRegion``) or fall back to the members'
+    per-token interpreters.  Groups whose members fall outside the stream-op
+    palette are recorded in ``meta["host_fused_skipped"]`` and stay
+    interpreted.  Disabled with ``fuse=False``, like device fusion.
+    """
+
+    name = "fuse-sdf-host-regions"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        groups = module.meta.get("sdf_host_groups", [])
+        if not ctx.fuse or not groups:
+            return module
+        specs, skipped = {}, []
+        for i, members in enumerate(groups):
+            gid = f"hostfused{i}"
+            while gid in module.actors:
+                gid += "_"
+            spec = fusion.build_host_fused(
+                module, members, opt_level=ctx.opt_level, block=ctx.block
+            )
+            if spec is None:
+                skipped.append(list(members))
+                continue
+            specs[gid] = spec
+        if specs:
+            module.meta["host_fused"] = specs
+        if skipped:
+            module.meta["host_fused_skipped"] = sorted(skipped)
+        return module
+
+
 # ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
@@ -440,6 +527,7 @@ def default_pipeline() -> PassPipeline:
         InferFifoDepths(),
         DetectSDFRegions(),
         FuseSDFRegions(),
+        FuseSDFHostRegions(),
     ])
 
 

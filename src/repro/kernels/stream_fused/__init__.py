@@ -4,4 +4,7 @@ from repro.kernels.stream_fused.ops import (  # noqa: F401
     fold,
     fused_stream,
 )
-from repro.kernels.stream_fused.ref import fused_stream_ref  # noqa: F401
+from repro.kernels.stream_fused.ref import (  # noqa: F401
+    fused_stream_np,
+    fused_stream_ref,
+)

@@ -23,20 +23,35 @@ from jax.experimental import pallas as pl
 from repro.kernels.stream_fused.ref import apply_op
 
 
+def _perm_matrix(idx) -> jnp.ndarray:
+    """A block reorder as a (P, P) one-hot matmul: y = x_blocks @ M with
+    M[idx[j], j] = 1.  Exactly one nonzero term per output lane, so the
+    matmul is bit-identical to the gather (x*1 plus exact-zero adds) while
+    staying MXU-shaped — Pallas TPU kernels cannot gather with an index
+    array, but they can matmul."""
+    import numpy as np
+
+    idx = np.asarray(idx)
+    m = np.zeros((len(idx), len(idx)), np.float32)
+    m[idx, np.arange(len(idx))] = 1.0
+    return jnp.asarray(m)
+
+
 def _stream_kernel(x_ref, *rest, program):
-    # rest = (*basis_refs, o_ref): matmul8 bases ride in as operands because
-    # Pallas kernels may not capture array constants.
-    basis_refs, o_ref = rest[:-1], rest[-1]
+    # rest = (*matrix_refs, o_ref): matmul8 bases and perm one-hot matrices
+    # ride in as operands because Pallas kernels may not capture array
+    # constants.
+    matrix_refs, o_ref = rest[:-1], rest[-1]
     regs = [None] * program.n_regs
     for i in range(program.n_inputs):
         regs[i] = x_ref[i, :]
     bi = 0
     for op in program.ops:
-        if op.kind == "matmul8":
-            b = basis_refs[bi][...]
+        if op.kind in ("matmul8", "perm"):
+            b = matrix_refs[bi][...]
             bi += 1
             x = regs[op.ins[0]]
-            regs[op.out] = (x.reshape(-1, 8) @ b).reshape(x.shape)
+            regs[op.out] = (x.reshape(-1, b.shape[0]) @ b).reshape(x.shape)
         else:
             regs[op.out] = apply_op(
                 op.kind, op.params, [regs[j] for j in op.ins]
@@ -45,13 +60,25 @@ def _stream_kernel(x_ref, *rest, program):
         o_ref[j, :] = regs[r]
 
 
-def _tile(n: int, want: int = 512) -> int:
-    """Largest tile <= want that divides n and keeps matmul8 blocks whole."""
-    t = min(want, n)
-    while n % t or t % 8:
-        t -= 8 if t > 8 else 1
-        if t <= 8:
-            return n if n % 8 else 8
+def _block_unit(program) -> int:
+    """Token granule a tile must be a multiple of so no block op (matmul8's
+    8-blocks, perm's P-blocks) ever straddles a tile edge."""
+    import math
+
+    units = [8]
+    for op in program.ops:
+        if op.kind == "perm":
+            units.append(len(op.params[0]))
+    return math.lcm(*units)
+
+
+def _tile(n: int, unit: int = 8, want: int = 512) -> int:
+    """Largest tile <= want that divides n and keeps block transforms whole."""
+    t = min(max(want, unit), n)
+    while n % t or t % unit:
+        t -= unit if t > unit else 1
+        if t <= unit:
+            return n if n % unit else unit
     return t
 
 
@@ -76,17 +103,20 @@ def fused_stream_fwd(
         )
         return out.reshape(len(program.outputs), b, n_b)
     n_in, n = stack.shape
-    t = _tile(n)
-    bases = [
-        jnp.asarray(op.params[0], jnp.float32)
-        for op in program.ops
-        if op.kind == "matmul8"
-    ]
+    t = _tile(n, _block_unit(program))
+    bases = []
+    for op in program.ops:
+        if op.kind == "matmul8":
+            bases.append(jnp.asarray(op.params[0], jnp.float32))
+        elif op.kind == "perm":
+            bases.append(_perm_matrix(op.params[0]))
     return pl.pallas_call(
         functools.partial(_stream_kernel, program=program),
         grid=(n // t,),
         in_specs=[pl.BlockSpec((n_in, t), lambda i: (0, i))]
-        + [pl.BlockSpec((8, 8), lambda i: (0, 0)) for _ in bases],
+        + [
+            pl.BlockSpec(tuple(b.shape), lambda i: (0, 0)) for b in bases
+        ],
         out_specs=pl.BlockSpec((len(program.outputs), t), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct(
             (len(program.outputs), n), jnp.float32

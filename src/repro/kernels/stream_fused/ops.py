@@ -16,9 +16,11 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.stream_fused.ref import fused_stream_ref
+from repro.kernels.stream_fused.ref import fused_stream_np, fused_stream_ref  # noqa: F401 — fused_stream_np re-exported for host-region callers
 
-OP_KINDS = ("affine", "clip", "matmul8", "axpy", "const", "min2", "max2")
+OP_KINDS = (
+    "affine", "clip", "matmul8", "axpy", "const", "min2", "max2", "perm"
+)
 
 
 @dataclass(frozen=True)
@@ -26,11 +28,12 @@ class StreamOp:
     kind: str                 # one of OP_KINDS
     ins: Tuple[int, ...]      # value registers read
     out: int                  # value register written
-    params: Tuple = ()        # static floats / (8, 8) basis for matmul8
+    params: Tuple = ()        # static floats / arrays (matmul8 basis, perm idx)
 
     def __str__(self) -> str:
         ps = ", ".join(
-            "B[8x8]" if hasattr(p, "shape") else f"{p:g}" for p in self.params
+            f"A{list(p.shape)}" if hasattr(p, "shape") else f"{p:g}"
+            for p in self.params
         )
         return f"r{self.out} = {self.kind}({ps})({', '.join(f'r{i}' for i in self.ins)})"
 

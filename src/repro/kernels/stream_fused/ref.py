@@ -11,10 +11,18 @@ the fused region is verifiably equivalent to the per-actor device path:
   axpy     a + c * x                   one MAC tap
   const    jnp.full_like               rate seed (e.g. FIR acc = 0)
   min2/max2  jnp.minimum / jnp.maximum compare-exchange lanes
+  perm     x.reshape(-1, P)[:, idx]    block reorder (e.g. JPEG zigzag descan)
 
 This module is also the device fallback: on CPU the fused region runs this
 reference inside the device-step ``jax.jit`` (XLA fuses the op chain), while
 on TPU ``ops.fused_stream`` dispatches to the Pallas kernel.
+
+``fused_stream_np`` is the *host* twin: the same op list evaluated with pure
+numpy in float64 — the arithmetic the per-token Python interpreter performs
+(Python floats are IEEE doubles) — so a fused host region is bit-identical to
+its interpreted members by construction.  ``matmul8`` is the one op whose
+interpreted analogue computes in float32 (the actor casts its 8-block before
+the matmul); the numpy evaluator performs the identical float32 round trip.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def apply_op(kind: str, params, ins: Sequence[jax.Array]) -> jax.Array:
@@ -57,6 +66,13 @@ def apply_op(kind: str, params, ins: Sequence[jax.Array]) -> jax.Array:
         return jnp.minimum(ins[0], ins[1])
     if kind == "max2":
         return jnp.maximum(ins[0], ins[1])
+    if kind == "perm":
+        (idx,) = params
+        x = ins[0]
+        # like matmul8: P-blocks never straddle a row when N % P == 0, so
+        # the op is polymorphic over a leading batch axis
+        blocks = x.reshape(-1, len(idx))
+        return blocks[:, jnp.asarray(idx)].reshape(x.shape)
     raise ValueError(f"unknown stream op {kind!r}")
 
 
@@ -74,4 +90,75 @@ def fused_stream_ref(inputs: Sequence[jax.Array], program) -> List[jax.Array]:
         regs[i] = x
     for op in program.ops:
         regs[op.out] = apply_op(op.kind, op.params, [regs[i] for i in op.ins])
+    return [regs[i] for i in program.outputs]
+
+
+# ---------------------------------------------------------------------------
+# Host (numpy / float64) evaluator — the fused-host-region backend
+# ---------------------------------------------------------------------------
+
+
+def apply_op_np(kind: str, params, ins: Sequence[np.ndarray]) -> np.ndarray:
+    """One stream op over numpy wires, mirroring — bit-for-bit — the
+    arithmetic the member's *scalar* fire function performs on the same
+    tokens.  Wires keep the stream's own dtype: Python-float tokens
+    evaluate in float64 (Python floats are IEEE doubles), device-fed
+    ``np.float32`` tokens in float32 — exactly the NEP-50 promotion the
+    scalar path's ``np.float32 scalar ⊕ python float`` expressions follow.
+
+    Unlike ``apply_op``, the affine identity components are NOT skipped: the
+    interpreted path always evaluates the full ``(v + pre) * mul + post``
+    expression, and skipping ``+ 0.0`` would preserve a ``-0.0`` the scalar
+    path normalizes.
+    """
+    if kind == "affine":
+        pre, mul, post = params
+        return (ins[0] + pre) * mul + post
+    if kind == "clip":
+        lo, hi = params
+        return np.clip(ins[0], lo, hi)
+    if kind == "matmul8":
+        (basis,) = params
+        x = ins[0]
+        # the interpreted actor casts each 8-block to float32, matmuls, and
+        # re-boxes as Python floats — the identical float32 round trip
+        y = x.astype(np.float32).reshape(-1, 8) @ np.asarray(basis, np.float32)
+        return y.astype(np.float64).reshape(x.shape)
+    if kind == "axpy":
+        (c,) = params
+        x, a = ins
+        return a + c * x
+    if kind == "const":
+        (v,) = params
+        return np.full_like(ins[0], v)
+    if kind == "min2":
+        return np.minimum(ins[0], ins[1])
+    if kind == "max2":
+        return np.maximum(ins[0], ins[1])
+    if kind == "perm":
+        (idx,) = params
+        x = ins[0]
+        return x.reshape(-1, len(idx))[:, np.asarray(idx)].reshape(x.shape)
+    raise ValueError(f"unknown stream op {kind!r}")
+
+
+def fused_stream_np(
+    inputs: Sequence[np.ndarray], program
+) -> List[np.ndarray]:
+    """Evaluate ``program`` over numpy wires on the host — the block
+    executor behind fused static-rate *software* regions (see
+    ``repro.runtime.host_fused``).  Wires keep each input stream's inferred
+    dtype (Python floats -> float64, device-retired tokens -> float32), so
+    promotion mirrors the scalar interpreter's.  No masks: host regions are
+    static-rate by construction, so every staged token is valid."""
+    regs: List[np.ndarray] = [None] * program.n_regs
+    for i, x in enumerate(inputs):
+        arr = np.asarray(x)
+        if arr.dtype.kind not in "fiu":  # mixed/object tokens: box as double
+            arr = arr.astype(np.float64)
+        regs[i] = arr
+    for op in program.ops:
+        regs[op.out] = apply_op_np(
+            op.kind, op.params, [regs[i] for i in op.ins]
+        )
     return [regs[i] for i in program.outputs]

@@ -16,7 +16,7 @@ immediate visibility lets a chain of same-thread actors pipeline within a round.
 
 from __future__ import annotations
 
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 
 class RingFifo:
@@ -74,9 +74,28 @@ class RingFifo:
 
     def read(self, n: int) -> Tuple[Any, ...]:
         vals = self.peek(n)
+        self.commit(n)
+        return vals
+
+    def peek_view(self, n: int) -> Optional[List[Any]]:
+        """The next ``n`` tokens as ONE direct slice of the ring storage —
+        no per-token tuple boxing — or None when the window wraps (callers
+        fall back to ``read``).  Pair with ``commit(n)`` after consuming;
+        the view must not be used past the commit (a later ``write`` may
+        reuse those slots)."""
+        assert self.count() >= n, (
+            f"{self.name}: peek_view({n}) with {self.count()}"
+        )
+        i0 = self._r_loc % self.capacity
+        if i0 + n > self.capacity:
+            return None
+        return self._buf[i0:i0 + n]
+
+    def commit(self, n: int) -> None:
+        """Consume ``n`` tokens previously obtained via ``peek_view``."""
+        assert self.count() >= n, f"{self.name}: commit({n}) with {self.count()}"
         self._r_loc += n
         self._sync_now()
-        return vals
 
     # ---- writer API ----------------------------------------------------------------
     def space(self) -> int:
@@ -173,20 +192,9 @@ class ArrayFifo:
         assert self.count() >= n, f"{self.name}: read({n}) with {self.count()}"
         if n == 0:
             return np.empty((0,))
-        parts = []
-        got = 0
-        while got < n:
-            blk = self._blocks[0]
-            take = min(len(blk) - self._head, n - got)
-            parts.append(blk[self._head:self._head + take])
-            got += take
-            if self._head + take == len(blk):
-                self._blocks.pop(0)
-                self._head = 0
-            else:
-                self._head += take
-        self._r += n
-        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+        vals = self.peek(n)
+        self.commit(n)
+        return vals
 
     def peek(self, n: int):
         import numpy as np
@@ -203,6 +211,34 @@ class ArrayFifo:
             if got == n:
                 break
         return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def peek_view(self, n: int):
+        """The next ``n`` tokens as a genuinely zero-copy numpy view into
+        the head block, or None when they span a block boundary (callers
+        fall back to ``read``).  Pair with ``commit(n)``."""
+        assert self.count() >= n, (
+            f"{self.name}: peek_view({n}) with {self.count()}"
+        )
+        if not self._blocks or len(self._blocks[0]) - self._head < n:
+            return None
+        return self._blocks[0][self._head:self._head + n]
+
+    def commit(self, n: int) -> None:
+        """Consume ``n`` tokens previously obtained via ``peek_view``."""
+        assert self.count() >= n, (
+            f"{self.name}: commit({n}) with {self.count()}"
+        )
+        got = 0
+        while got < n:
+            blk = self._blocks[0]
+            take = min(len(blk) - self._head, n - got)
+            got += take
+            if self._head + take == len(blk):
+                self._blocks.pop(0)
+                self._head = 0
+            else:
+                self._head += take
+        self._r += n
 
     # -- writer API ----------------------------------------------------------
     def space(self) -> int:
@@ -245,6 +281,15 @@ class ReaderEndpoint:
 
     def read(self, n: int):
         return self.fifo.read(n)
+
+    def peek_view(self, n: int):
+        """Zero-copy contiguous window (None when it wraps) — see
+        ``RingFifo.peek_view``/``ArrayFifo.peek_view``; consume with
+        ``commit``."""
+        return self.fifo.peek_view(n)
+
+    def commit(self, n: int) -> None:
+        return self.fifo.commit(n)
 
 
 class WriterEndpoint:

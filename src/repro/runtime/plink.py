@@ -211,7 +211,19 @@ class PLink:
                 return 0  # never block the thread (paper §III-D)
             progress += self._retire(self.inflight)
             self.inflight = None
-        # 2) stage + launch the next step if there is any input (double buffer)
+        # 2) stage + launch the next step if there is any input (double buffer).
+        # Never launch a step whose retirement could overflow an output FIFO:
+        # a launch may retire up to one block of valid tokens per port, and a
+        # device->device lane (or a slow host consumer) has no other
+        # backpressure point — the lane would assert mid-retire.  Space can
+        # only grow between launch and retire (this PLink is the single
+        # writer), so checking before staging is sufficient; the check also
+        # runs before _stage_inputs so no host tokens are drained into a
+        # block we then refuse to launch.
+        for ep in self.env.outputs.values():
+            cap = getattr(getattr(ep, "fifo", None), "capacity", None)
+            if cap is not None and ep.space() < min(self.program.block, cap):
+                return progress
         staged, n_in = self._stage_inputs()
         has_inputs = bool(self.program.in_ports)
         if n_in == 0 and has_inputs:

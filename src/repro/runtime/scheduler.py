@@ -215,11 +215,47 @@ class HostRuntime:
             self.instances[name] = inst
             self.partitions[mapping[name]].instances.append(inst)
             self.profiles[name] = ActorProfile()
+        self.host_fused = self._attach_host_fused(module, readers, writers)
 
         # quiescence machinery
         self._cv = threading.Condition()
         self._progress = 0  # total execs, all threads
         self._terminate = False
+
+    def _attach_host_fused(self, module, readers, writers):
+        """Replace each fused host group's member machines with one
+        ``HostFusedRegion`` block executor on the owning thread (see
+        ``repro.runtime.host_fused``; groups come from the
+        ``fuse-sdf-host-regions`` pass)."""
+        if not module.meta.get("host_fused"):
+            return {}
+        from repro.runtime.host_fused import attach_host_fused
+
+        fifo_of = {
+            ch.key: self.fifos[str(ch)]
+            for ch in module.channels
+            if str(ch) in self.fifos
+        }
+        regions = attach_host_fused(
+            module, self.instances, readers, writers, fifo_of
+        )
+        for gid, region in regions.items():
+            drop = {id(m) for m in region.machines.values()}
+            part = self.partitions[self.mapping[region.spec.members[0]]]
+            replaced = []
+            inserted = False
+            for inst in part.instances:
+                if id(inst) in drop:
+                    if not inserted:  # region takes the first member's slot
+                        replaced.append(region)
+                        inserted = True
+                    continue
+                replaced.append(inst)
+            if not inserted:
+                replaced.append(region)
+            part.instances = replaced
+            self.profiles[gid] = ActorProfile()
+        return regions
 
     # ------------------------------------------------------------------ single --
     def run_single(
@@ -542,6 +578,7 @@ class HeteroRuntime(HostRuntime):
             self.instances[name] = inst
             self.partitions[host_map[name]].instances.append(inst)
             self.profiles[name] = ActorProfile()
+        self.host_fused = self._attach_host_fused(module, readers, writers)
 
         if programs is not None and program is not None:
             raise ValueError("pass program= or programs=, not both")

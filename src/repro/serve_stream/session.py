@@ -19,7 +19,11 @@ The pipeline is the serve-mode reading of the lowered module (Fig. 6):
     sessions' blocks ride one batched dispatch per lane (device→device
     channels between partitions stay numpy blocks in an ``ArrayFifo``);
   * remaining host actors run as ordinary actor machines on the engine
-    thread (single-threaded per session, so every FIFO is non-deferred).
+    thread (single-threaded per session, so every FIFO is non-deferred) —
+    except fused static-rate regions (``meta["host_fused"]``), whose member
+    machines collapse into one block-wise ``HostFusedRegion`` executor per
+    session, exactly the one the thread scheduler fires (see
+    docs/runtime.md).
 
 Token values take exactly the PLink path (float32 staging, masked write-
 back), so a session's outputs are bit-identical to a sequential
@@ -393,6 +397,17 @@ class SessionPipeline:
             if name in carry:  # hot-swap: persistent actor state survives
                 inst.state = carry[name]
             self.instances[name] = inst
+        # fused host regions: members collapse into one block executor per
+        # group (the member machines stay wrapped inside for tail fallback
+        # and state transplant) — the same executor the thread scheduler
+        # fires, so serve-mode host rounds get the identical fast path
+        self.host_fused: Dict[str, object] = {}
+        if module.meta.get("host_fused"):
+            from repro.runtime.host_fused import attach_host_fused
+
+            self.host_fused = attach_host_fused(
+                module, self.instances, readers, writers, self.fifos
+            )
         if carry:
             for stage in self.stages.values():
                 stage.state = _transplant_device_state(
@@ -433,14 +448,19 @@ class SessionPipeline:
 
     def host_round(self, telemetry=None) -> int:
         """Fire every host actor machine once (round-robin, like a thread
-        partition's fire step)."""
+        partition's fire step).  Fused host regions ride the same list as
+        single block-wise instances; their telemetry key carries the member
+        list so profile ingestion can split the time back over authored
+        actors (``core.profiler.profile_from_telemetry``)."""
         execs = 0
         for name, inst in self.instances.items():
             t0 = time.perf_counter_ns()
             e = inst.invoke(self.max_execs_per_invoke)
             if telemetry is not None and e:
                 telemetry.actor_fired(
-                    name, e, time.perf_counter_ns() - t0
+                    getattr(inst, "telemetry_key", name),
+                    e,
+                    time.perf_counter_ns() - t0,
                 )
             execs += e
         return execs
@@ -486,7 +506,13 @@ class SessionPipeline:
 
     def carry_state(self) -> Dict[str, Dict]:
         """Actor state to transplant into a rebuilt pipeline (hot-swap)."""
-        carry = {n: inst.state for n, inst in self.instances.items()}
+        carry: Dict[str, Dict] = {}
+        for n, inst in self.instances.items():
+            machines = getattr(inst, "machines", None)
+            if machines is not None:  # fused host region: per-member states
+                carry.update({m: mach.state for m, mach in machines.items()})
+            else:
+                carry[n] = inst.state
         for stage in self.stages.values():
             carry.update(_flatten_device_state(stage))
         return carry

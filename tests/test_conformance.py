@@ -5,10 +5,15 @@ Generates random well-typed actor chains over an integer-exact op palette
 float32 device math agree *bitwise*) plus random legal XCF placements with
 1..3 device partitions, and asserts
 
-    host-only == hetero (unfused) == hetero (fused)
+    interpreted-host == fused-host == hetero (unfused) == hetero (fused)
 
-token-for-token.  Every future placement-machinery change (staging plans,
-PLink lanes, fusion rewrites, hot-swap plumbing) has to get past this.
+token-for-token.  The fused-host axis drives the same chains through the
+``fuse-sdf-host-regions`` block executor (``repro.runtime.host_fused``) —
+spec-carrying ops (affine/clip) fuse, the spec-less ``negate`` forces
+interpreted islands between fused groups, so every generated case exercises
+the fast-path/fallback seam too.  Every future placement-machinery change
+(staging plans, PLink lanes, fusion rewrites, host fusion, hot-swap
+plumbing) has to get past this.
 
 Degrades to skips without ``hypothesis`` (tests/helpers.py convention);
 CI sets ``CONFORMANCE_EXAMPLES=200`` for the smoke gate.
@@ -160,8 +165,12 @@ def test_harness_smoke():
 def _check(case):
     g, got, xcf = _build(case)
 
-    repro.compile(g, backend="host").run()
+    repro.compile(g, backend="host", fuse=False).run()
     host = list(got)
+    got.clear()
+
+    repro.compile(g, backend="host", fuse=True).run()
+    host_fused = list(got)
     got.clear()
 
     repro.compile(g, xcf, block=BLOCK, fuse=False).run()
@@ -172,6 +181,7 @@ def _check(case):
     fused = list(got)
     got.clear()
 
+    assert host_fused == host, (case, host_fused[:8], host[:8])
     assert unfused == host, (case, unfused[:8], host[:8])
     assert fused == host, (case, fused[:8], host[:8])
 
@@ -179,6 +189,7 @@ def _check(case):
 @given(case=case_strategy)
 @settings(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
 def test_differential_conformance(case):
-    """host-only == hetero(unfused) == hetero(fused), bitwise, for random
-    networks under random 1..3-device-partition placements."""
+    """interpreted-host == fused-host == hetero(unfused) == hetero(fused),
+    bitwise, for random networks under random 1..3-device-partition
+    placements."""
     _check(case)

@@ -60,6 +60,91 @@ def test_fifo_order_property(ops):
 
 
 # ---------------------------------------------------------------------------
+# peek_view / commit — the zero-copy contiguous bulk window
+# ---------------------------------------------------------------------------
+
+
+def test_peek_view_contiguous_and_wrapping():
+    f = RingFifo(8, deferred=False)
+    f.write(list(range(6)))
+    v = f.peek_view(4)  # window [0:4] is contiguous
+    assert v == [0, 1, 2, 3]
+    f.commit(4)
+    assert f.count() == 2
+    f.write([6, 7, 8, 9])  # write wraps; window [4:8]+[0:2] now wraps too
+    assert f.peek_view(6) is None  # caller must fall back to read()
+    assert f.peek_view(4) == [4, 5, 6, 7]  # the contiguous prefix still works
+    assert f.read(6) == (4, 5, 6, 7, 8, 9)
+
+
+def test_peek_view_deferred_protocol():
+    """commit participates in the deferred publish protocol exactly like
+    read: consumed space is invisible to the writer until publish."""
+    f = RingFifo(4, deferred=True)
+    f.write([1, 2, 3])
+    f.publish_writer()
+    f.snapshot_reader()
+    assert f.peek_view(2) == [1, 2]
+    f.commit(2)
+    f.snapshot_writer()
+    assert f.space() == 1  # reader hasn't published its commit yet
+    f.publish_reader()
+    f.snapshot_writer()
+    assert f.space() == 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.integers(-4, 4), min_size=1, max_size=60))
+def test_peek_view_commit_equivalent_to_read(ops):
+    """Random interleavings: draining via peek_view+commit (with read as the
+    wrap fallback) observes exactly the stream read() would — wrap and
+    no-wrap windows included."""
+    f = RingFifo(8, deferred=False)
+    model = []
+    nxt = 0
+    for op in ops:
+        if op > 0:
+            n = min(op, f.space())
+            vals = list(range(nxt, nxt + n))
+            f.write(vals)
+            model.extend(vals)
+            nxt += n
+        elif op < 0:
+            n = min(-op, f.count())
+            if n == 0:
+                continue
+            view = f.peek_view(n)
+            if view is None:
+                got = list(f.read(n))
+            else:
+                assert list(view) == list(f.peek(n))  # view == boxed peek
+                got = list(view)
+                f.commit(n)
+            want = model[:n]
+            del model[:n]
+            assert got == want
+    assert f.count() == len(model)
+
+
+def test_array_fifo_peek_view_is_zero_copy():
+    import numpy as np
+
+    from repro.runtime.fifo import ArrayFifo
+
+    f = ArrayFifo(64, name="lane")
+    blk = np.arange(10, dtype=np.float32)
+    f.write(blk)
+    v = f.peek_view(4)
+    assert v.base is blk  # a genuine view into the written block, no copy
+    np.testing.assert_array_equal(v, [0, 1, 2, 3])
+    f.commit(4)
+    assert f.count() == 6
+    f.write(np.arange(10, 13, dtype=np.float32))
+    assert f.peek_view(9) is None  # spans two blocks: fall back to read
+    np.testing.assert_array_equal(f.read(9), np.arange(4, 13))
+
+
+# ---------------------------------------------------------------------------
 # ArrayFifo — the device→device staged lane
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,392 @@
+"""Fused block-wise host execution (fuse-sdf-host-regions +
+runtime.host_fused): bitwise identity with per-token interpretation on all
+five Table-I networks via run() AND serve(), the fast-path/fallback seam,
+pass plumbing, the numpy stream evaluator, the perm op, and the host-fused
+MILP coefficients."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.apps.streams import NETWORKS
+from repro.core.cost_model import NetworkProfile, evaluate
+from repro.core.profiler import profile_from_telemetry, profile_host_fused
+from repro.core.xcf import make_xcf
+from repro.frontend.program import synthesize_xcf
+from repro.ir.passes import lower
+from repro.kernels.stream_fused import (
+    StreamOp,
+    StreamProgram,
+    fused_stream,
+    fused_stream_np,
+)
+from repro.runtime.host_fused import HostFusedRegion
+
+from helpers import drain_source, make_chain
+
+SIZES = {"TopFilter": 1200, "FIR32": 600, "Bitonic8": 48, "IDCT8": 48,
+         "ZigZag": 12}
+FUSABLE = {"FIR32", "Bitonic8", "IDCT8", "ZigZag"}  # TopFilter is dynamic
+EGRESS = {"FIR32": "sink"}
+
+
+def _build(name):
+    size = SIZES[name]
+    builder = NETWORKS[name]
+    return builder(size) if name != "FIR32" else builder(n=size)
+
+
+# ---------------------------------------------------------------------------
+# Golden: fused host == interpreted host, bitwise, run() and serve()
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SIZES))
+def test_host_fused_bitwise_identical_run(name):
+    net, got = _build(name)
+    repro.compile(net, backend="host", fuse=False).run()
+    ref = list(got)
+
+    prog = repro.compile(net, backend="host")
+    prog.run()
+    fused = list(got)
+    assert fused == ref  # bitwise: tokens are Python floats
+
+    specs = prog.module.meta.get("host_fused", {})
+    if name in FUSABLE:
+        assert specs, f"{name}: expected a fused host region"
+        got.clear()
+        rt = prog._build_runtime()
+        rt.run_single()
+        assert list(got) == ref
+        region = next(iter(rt.host_fused.values()))
+        assert region.tokens_fused > 0  # the fast path actually ran
+    else:
+        assert not specs
+
+
+@pytest.mark.parametrize("name", sorted(SIZES))
+def test_host_fused_bitwise_identical_serve(name):
+    net, got = _build(name)
+    repro.compile(net, backend="host", fuse=False).run()
+    ref = list(got)
+
+    net2, _ = _build(name)
+    prog = repro.compile(net2, backend="host", block=64)
+    stream = drain_source(prog.graph)
+    with prog.serve() as server:
+        s = server.open_session()
+        # deliberately torn chunk sizes: below the staging quantum of the
+        # multi-rate networks, so the per-token fallback interleaves with
+        # the fused fast path mid-stream
+        for i in range(0, len(stream), 7):
+            s.submit(stream[i:i + 7])
+        s.close()
+        assert server.drain(timeout=120)
+        assert s.output(EGRESS.get(name)) == ref
+        if name in FUSABLE:
+            assert s.pipeline.host_fused
+            region = next(iter(s.pipeline.host_fused.values()))
+            assert region.tokens_fused > 0
+
+
+def test_fused_and_interpreted_paths_interleave():
+    """Tokens trickled below the quantum flow through interpretation
+    (leaving internal-channel residue), then bulk tokens resume the fast
+    path — the seam must not reorder or change a bit."""
+    net, got = _build("IDCT8")
+    repro.compile(net, backend="host", fuse=False).run()
+    ref = list(got)
+
+    import time
+
+    net2, _ = _build("IDCT8")
+    prog = repro.compile(net2, backend="host", block=64)
+    stream = drain_source(prog.graph)
+    with prog.serve() as server:
+        s = server.open_session()
+        s.submit(stream[:3])       # 3 < quantum 8: interpreted tail
+        time.sleep(0.05)           # let the engine interpret the residue
+        s.submit(stream[3:5])      # still torn
+        time.sleep(0.05)
+        s.submit(stream[5:133])    # bulk: fast path resumes once drained
+        s.submit(stream[133:])
+        s.close()
+        assert server.drain(timeout=120)
+        out = s.output()
+        region = next(iter(s.pipeline.host_fused.values()))
+        assert region.interp_invocations > 0
+        assert region.fast_invocations > 0
+    assert out == ref
+
+
+def test_hetero_placement_keeps_host_side_fused():
+    """Half the FIR chain on the device, half on the host: fuse=True fuses
+    BOTH sides and stays bitwise equal to the fully-interpreted placement."""
+    net, got = _build("FIR32")
+    g = net.graph()
+    elig = [a for a in g.topo_order() if g.actors[a].device_ok]
+    half = set(elig[: len(elig) // 2])
+    asg = {
+        a: ("accel" if a in half else "t0") for a in g.actors
+    }
+    xcf = make_xcf(g.name, asg)
+
+    repro.compile(net, xcf, block=64, fuse=False).run()
+    ref = list(got)
+    prog = repro.compile(net, xcf, block=64)
+    specs = prog.module.meta.get("host_fused", {})
+    assert specs  # the host half fused
+    members = {m for s in specs.values() for m in s.members}
+    assert members and members.isdisjoint(half)
+    prog.run()
+    assert list(got) == ref
+
+
+def test_threads_placement_fuses_per_thread():
+    """Host groups never span thread partitions: a region is per sw region,
+    exactly like device regions are per hw partition."""
+    net, _ = _build("FIR32")
+    g = net.graph()
+    order = g.topo_order()
+    asg = {a: f"t{i % 2}" for i, a in enumerate(order)}
+    prog = repro.compile(net, make_xcf(g.name, asg))
+    mapping = prog.module.assignment()
+    for spec in prog.module.meta.get("host_fused", {}).values():
+        assert len({mapping[m] for m in spec.members}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Pass plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_detection_and_spec_meta():
+    net, _ = NETWORKS["IDCT8"](16)
+    mod = lower(net.graph(), None)
+    assert mod.meta["sdf_host_groups"] == [["clip", "descale", "idct"]]
+    (spec,) = mod.meta["host_fused"].values()
+    assert spec.members == ("descale", "idct", "clip")  # topological
+    assert spec.quantum == 8  # the 8-point transform's staging granule
+    assert spec.fires_per_quantum == 8 + 1 + 8  # descale x8, idct x1, clip x8
+    assert len(spec.in_keys) == 1 and len(spec.out_keys) == 1
+
+
+def test_fuse_off_and_dynamic_actors():
+    net, _ = NETWORKS["IDCT8"](16)
+    mod = lower(net.graph(), None, fuse=False)
+    assert "host_fused" not in mod.meta
+    net2, _ = NETWORKS["TopFilter"](64)
+    mod2 = lower(net2.graph(), None)
+    assert "sdf_host_groups" not in mod2.meta  # filter is guarded (dynamic)
+
+
+def test_specless_members_stay_interpreted():
+    """make_chain actors carry no stream_op: nothing to detect, the whole
+    chain keeps its per-token machines."""
+    g, got = make_chain(n_stages=3, n_tok=64)
+    mod = lower(g, None)
+    assert "sdf_host_groups" not in mod.meta
+    prog = repro.compile(g)
+    prog.run()
+    assert len(got) == 64
+
+
+def test_region_survives_in_module():
+    """Unlike device fusion, host fusion rewrites nothing — members and
+    channels survive, which is what makes the interpreted fallback free."""
+    net, _ = NETWORKS["IDCT8"](16)
+    mod = lower(net.graph(), None)
+    assert {"descale", "idct", "clip"} <= set(mod.actors)
+    keys = {ch.key for ch in mod.channels}
+    for spec in mod.meta["host_fused"].values():
+        assert set(spec.in_keys) <= keys
+        assert set(spec.out_keys) <= keys
+        assert set(spec.internal_keys) <= keys
+
+
+# ---------------------------------------------------------------------------
+# The numpy evaluator + the perm op
+# ---------------------------------------------------------------------------
+
+
+def test_fused_stream_np_matches_scalar_semantics():
+    """float64 numpy evaluation == the scalar interpreted arithmetic,
+    including the float32 round trip of matmul8."""
+    basis = np.asarray(
+        np.linalg.qr(np.random.default_rng(0).normal(size=(8, 8)))[0],
+        np.float32,
+    )
+    prog = StreamProgram(
+        n_inputs=1, n_regs=3,
+        ops=(
+            StreamOp("affine", (0,), 1, (-128.0, 0.125, 0.0)),
+            StreamOp("matmul8", (1,), 2, (basis,)),
+        ),
+        outputs=(2,),
+    )
+    x = [float(v) for v in np.random.default_rng(1).integers(0, 256, 64)]
+    (out,) = fused_stream_np([x], prog)
+    # the interpreted path: scalar float64 affine, then float32 8-block matmul
+    expect = []
+    for i in range(0, 64, 8):
+        blk = [(v - 128.0) * 0.125 + 0.0 for v in x[i:i + 8]]
+        y = np.asarray(blk, np.float32) @ basis
+        expect.extend(float(v) for v in y)
+    assert out.tolist() == expect
+
+
+def test_perm_op_ref_and_pallas():
+    idx = np.random.default_rng(0).permutation(64).astype(np.int32)
+    prog = StreamProgram(
+        n_inputs=1, n_regs=2,
+        ops=(StreamOp("perm", (0,), 1, (idx,)),),
+        outputs=(1,),
+    )
+    import jax.numpy as jnp
+
+    x = np.abs(np.random.default_rng(1).normal(size=(128,))).astype(np.float32)
+    want = x.reshape(-1, 64)[:, idx].reshape(-1)
+    (ref,) = fused_stream([jnp.asarray(x)], prog, use="ref")
+    np.testing.assert_array_equal(np.asarray(ref), want)
+    (pal,) = fused_stream([jnp.asarray(x)], prog, use="pallas")
+    np.testing.assert_array_equal(np.asarray(pal), want)
+    (nref,) = fused_stream_np([x.astype(np.float64)], prog)
+    np.testing.assert_array_equal(nref, want.astype(np.float64))
+
+
+def test_zigzag_device_fusion_uses_stream_path():
+    net, _ = NETWORKS["ZigZag"](8)
+    prog = repro.compile(net, backend="device", block=64)
+    fused = prog.module.meta["fused"]
+    assert all(v["codegen"] == "pallas" for v in fused.values())
+    assert any("perm" in (v["ops"] or "") for v in fused.values())
+
+
+# ---------------------------------------------------------------------------
+# Host-fused coefficients: profiler -> cost model -> solvers
+# ---------------------------------------------------------------------------
+
+
+def test_profile_host_fused_coefficients():
+    net, _ = _build("FIR32")
+    g = net.graph()
+    prog = repro.compile(net)
+    prof = prog.profile(include_device=False, include_links=False)
+    macs = [a for a in g.actors if a.startswith("mac")]
+    assert all(m in prof.exec_sw_fused for m in macs)
+    total_interp = sum(prof.exec_sw[m] for m in macs)
+    total_fused = sum(prof.exec_sw_fused[m] for m in macs)
+    assert total_fused < total_interp / 3  # several-fold, conservatively
+    # actors outside any fused region carry no fused coefficient
+    assert "source" not in prof.exec_sw_fused
+    assert "sink" not in prof.exec_sw_fused
+
+
+def test_evaluate_charges_fused_rate_when_colocated():
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    prof = NetworkProfile()
+    for a in g.actors:
+        prof.exec_sw[a] = 1.0
+    prof.exec_sw_fused["s0"] = 0.1
+    prof.exec_sw_fused["s1"] = 0.1
+    together = evaluate(g, {a: "t0" for a in g.actors}, prof)
+    apart = evaluate(
+        g, {"src": "t0", "s0": "t0", "s1": "t1", "snk": "t1"}, prof
+    )
+    # co-located fusable neighbors run at the fused rate...
+    assert together["T_t0"] == pytest.approx(1.0 + 0.1 + 0.1 + 1.0)
+    # ...split across threads they fall back to the interpreter
+    assert apart["T_t0"] == pytest.approx(2.0)
+    assert apart["T_t1"] == pytest.approx(2.0)
+
+
+def test_bb_bound_admissible_with_fused_rates():
+    """branch & bound must not prune the fused-host optimum: its partition
+    loads bound with min(interpreted, fused)."""
+    from repro.core.milp import solve_bb, solve_exact
+
+    g, _ = make_chain(n_stages=3, n_tok=8)
+    prof = NetworkProfile()
+    for a in g.actors:
+        prof.exec_sw[a] = 1.0
+        prof.exec_hw[a] = 0.8
+    for a in ("s0", "s1", "s2"):
+        prof.exec_sw_fused[a] = 0.05
+    for k in [ch.key for ch in g.channels]:
+        prof.tokens[k] = 64
+    parts = ["t0", "t1", "accel"]
+    exact = solve_exact(g, prof, parts)
+    bb = solve_bb(g, prof, parts)
+    assert bb.objective == pytest.approx(exact.objective)
+
+
+def test_profile_from_telemetry_splits_hostfused_key():
+    class Snap:
+        actor_time_ns = {"hostfused:s0+s1": 4_000_000, "src": 1_000_000}
+        channel_tokens = {}
+        device_time_ns = 0
+
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    base = NetworkProfile()
+    base.exec_sw = {"s0": 3.0, "s1": 1.0, "src": 0.5, "snk": 0.5}
+    prof = profile_from_telemetry(g, Snap(), base=base)
+    assert prof.exec_sw["src"] == pytest.approx(1e-3)
+    # split 3:1 by the base interpreted times
+    assert prof.exec_sw_fused["s0"] == pytest.approx(3e-3)
+    assert prof.exec_sw_fused["s1"] == pytest.approx(1e-3)
+    assert "s0" not in prof.exec_hw  # never device-attributed
+
+
+def test_serve_telemetry_reports_fused_rates():
+    net, _ = _build("FIR32")
+    prog = repro.compile(net, backend="host")
+    stream = drain_source(prog.graph)
+    with prog.serve() as server:
+        s = server.open_session()
+        s.submit(stream)
+        s.close()
+        assert server.drain(timeout=120)
+        snap = server.telemetry.lifetime()
+    fused_keys = [k for k in snap.actor_time_ns if k.startswith("hostfused:")]
+    assert fused_keys
+    base, _ = __import__("repro.core.profiler", fromlist=["profile_host"]).\
+        profile_host(prog.graph, max_seconds=5.0)
+    prof = profile_from_telemetry(prog.graph, snap, base=base)
+    assert any(a.startswith("mac") for a in prof.exec_sw_fused)
+
+
+# ---------------------------------------------------------------------------
+# Hot swap with fused host regions
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_device_to_fused_host():
+    """Mid-stream swap from an accelerator placement to a host-only one:
+    the rebuilt pipelines carry fused host regions, and the stream stays
+    bitwise intact (ZigZag is integer-exact on both paths)."""
+    import time
+
+    net, got = _build("ZigZag")
+    prog = repro.compile(net, backend="device", block=64)
+    stream = drain_source(prog.graph)
+    prog.run()
+    ref = list(got)
+
+    net2, _ = _build("ZigZag")
+    prog2 = repro.compile(net2, backend="device", block=64)
+    with prog2.serve() as server:
+        s = server.open_session()
+        s.submit(stream[: len(stream) // 2])
+        time.sleep(0.05)
+        server.request_repartition(synthesize_xcf(prog2.graph, "host"))
+        s.submit(stream[len(stream) // 2:])
+        s.close()
+        assert server.drain(timeout=120)
+        assert s.output() == ref
+        assert server.telemetry.lifetime().swaps == 1
+        assert s.pipeline.host_fused  # rebuilt pipeline runs the block executor
+        assert any(
+            isinstance(i, HostFusedRegion)
+            for i in s.pipeline.instances.values()
+        )

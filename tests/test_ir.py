@@ -39,6 +39,7 @@ def test_lower_records_pass_trace():
     assert names == [
         "lower-frontend", "legalize-placement", "eliminate-dead",
         "infer-fifo-depths", "detect-sdf-regions", "fuse-sdf-regions",
+        "fuse-sdf-host-regions",
     ]
     assert "module chain" in mod.dump_trace("lower-frontend")
     with pytest.raises(KeyError):
