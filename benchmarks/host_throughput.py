@@ -17,7 +17,6 @@ outputs); the speedup is what the MILP's host-fused coefficients price into
 
 from __future__ import annotations
 
-import time
 
 from _util import emit, smoke_scale
 

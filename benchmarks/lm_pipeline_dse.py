@@ -7,7 +7,6 @@ from __future__ import annotations
 from _util import emit
 
 from repro.configs import list_archs, get_config
-from repro.core.cost_model import DEFAULT_LINKS, LinkModel
 from repro.core.partitioner import explore_lm
 
 

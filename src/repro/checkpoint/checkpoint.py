@@ -19,7 +19,6 @@ import os
 import queue
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 

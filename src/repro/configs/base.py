@@ -16,8 +16,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass, replace
+
+from typing import Callable, Dict, List, Tuple
+
 
 # ---------------------------------------------------------------------------
 # Block layout descriptors

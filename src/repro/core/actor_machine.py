@@ -26,8 +26,10 @@ Conditions:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+
+from typing import Dict, List, Optional, Tuple, Union
+
 
 from repro.core.actor import Action, Actor
 

@@ -8,7 +8,8 @@ on and the runtimes execute.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
 from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 from repro.core.actor import Actor
@@ -46,6 +47,9 @@ class ActorGraph:
         self.name = name
         self.actors: Dict[str, Actor] = {}
         self.channels: List[Channel] = []
+        # actor name -> "file:line" where it was authored (filled by the DSL;
+        # empty for hand-built graphs).  Diagnostics use it as provenance.
+        self.origins: Dict[str, str] = {}
 
     # -- construction -------------------------------------------------------
     def add(self, actor: Actor) -> Actor:

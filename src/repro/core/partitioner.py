@@ -11,8 +11,10 @@ Two front-ends:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
 
 from repro.core.cost_model import (
     DEFAULT_LINKS,

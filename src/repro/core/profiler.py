@@ -13,7 +13,8 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
+
 
 import numpy as np
 
@@ -36,7 +37,7 @@ def profile_host(
     so far instead of hanging for ``max_rounds`` rounds.
     """
     rt = HostRuntime(graph, None, controller=controller)
-    rt.run_single(max_rounds, max_seconds=max_seconds)
+    rt.run_single(max_rounds, max_seconds=max_seconds, on_deadline="return")
     prof = NetworkProfile()
     for name, p in rt.profiles.items():
         prof.exec_sw[name] = p.time_ns / 1e9
@@ -75,7 +76,7 @@ def profile_host_fused(
     if not specs:
         return prof
     rt = HostRuntime(module, controller=controller)
-    rt.run_single(max_rounds, max_seconds=max_seconds)
+    rt.run_single(max_rounds, max_seconds=max_seconds, on_deadline="return")
     for gid, spec in specs.items():
         p = rt.profiles.get(gid)
         if p is None or not p.time_ns:

@@ -12,12 +12,13 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional
+
 
 import numpy as np
 
-from repro.core.actor import Actor, Action, Port
-from repro.core.graph import ActorGraph
+from repro.core.actor import Actor
+
 from repro.runtime.fifo import RingFifo
 
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
 
 PAD, BOS, EOS = 0, 1, 2
 OFFSET = 3

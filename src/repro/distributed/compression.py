@@ -16,8 +16,8 @@ Two pieces:
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
+
 
 import jax
 import jax.numpy as jnp

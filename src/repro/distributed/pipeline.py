@@ -14,12 +14,10 @@ StreamBlocks partitioner (``core.partitioner.explore_lm`` — chain DP).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # JAX >= 0.7

@@ -14,8 +14,10 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+
+from typing import Any, Dict, Optional, Sequence
+
 
 import jax
 import numpy as np

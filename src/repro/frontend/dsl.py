@@ -46,8 +46,10 @@ interchangeable everywhere, including ``repro.compile``.
 from __future__ import annotations
 
 import inspect
+import sys
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
 
 from repro.core.actor import (
     Action,
@@ -62,6 +64,18 @@ from repro.core.graph import ActorGraph, GraphError
 
 class FrontendError(GraphError):
     """Invalid DSL usage, reported at authoring/build time."""
+
+
+def _caller_origin() -> str:
+    """``file:line`` of the first stack frame outside this module — the user
+    code that placed the actor.  Streamcheck diagnostics carry it so a finding
+    points at the authoring site, not at the compiler."""
+    f = sys._getframe(1)
+    while f is not None and f.f_globals.get("__file__") == __file__:
+        f = f.f_back
+    if f is None:
+        return ""
+    return f"{f.f_code.co_filename}:{f.f_lineno}"
 
 
 # ---------------------------------------------------------------------------
@@ -372,6 +386,7 @@ class Network:
                 f"got {type(obj).__name__}"
             )
         self._graph.add(a)  # GraphError on duplicate names
+        self._graph.origins[a.name] = _caller_origin()
         h = ActorHandle(self, a.name, a)
         self._handles[a.name] = h
         return h

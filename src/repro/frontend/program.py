@@ -152,6 +152,7 @@ class Program:
         max_execs_per_invoke: int = 10_000,
         fuse: bool = True,
         opt_level: int = 1,
+        check: object = True,
     ):
         self._source = source
         self._graph = graph
@@ -163,6 +164,7 @@ class Program:
             max_execs_per_invoke=max_execs_per_invoke,
             fuse=fuse,
             opt_level=opt_level,
+            check=check,
         )
         # The middle-end: every placement check, depth resolution, and fusion
         # decision happens here, once per (graph, xcf, opts) triple.
@@ -173,6 +175,7 @@ class Program:
             block=block,
             fuse=fuse,
             opt_level=opt_level,
+            check=check,
         )
         # jitted device partitions, built lazily and reused across run()
         # calls (the (graph, xcf, opts) triple is fixed for this Program's
@@ -217,6 +220,28 @@ class Program:
         """The module after every pass (or after ``pass_name`` only) — the
         compiler's pass-by-pass story for this placement."""
         return self._module.dump_trace(pass_name)
+
+    def check(self):
+        """The streamcheck findings for this Program (``Diagnostics``).
+
+        Returns the diagnostics collected at compile time; when analysis was
+        skipped (``check=False``), runs the full suite now under the
+        warn-and-continue policy — ``Program.check()`` itself never raises,
+        it reports.  See docs/analysis.md for the ``SB###`` catalog.
+        """
+        from repro.analysis import check_module
+
+        diags = self._module.meta.get("diagnostics")
+        if diags is None:
+            diags = check_module(self._module, block=self._opts["block"])
+        return diags
+
+    @property
+    def repetition_vector(self) -> Optional[Dict[str, int]]:
+        """Fires-per-iteration per actor from the rate analysis (None when
+        analysis was skipped and ``check()`` has not been called)."""
+        rep = self._module.meta.get("repetition")
+        return dict(rep) if rep is not None else None
 
     def describe(self) -> str:
         asg = self._xcf.assignment()
@@ -457,6 +482,7 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
     max_execs_per_invoke: int = 10_000,
     fuse: bool = True,
     opt_level: int = 1,
+    check: object = True,
 ) -> Program:
     """Compile a dataflow network into an executable ``Program``.
 
@@ -469,6 +495,13 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
     ``fuse=False`` disables SDF region fusion in the device partition (the
     unfused per-actor baseline); ``opt_level=2`` additionally folds fused op
     chains algebraically (faster, no longer bit-identical to unfused).
+
+    ``check`` is the streamcheck policy (see ``repro.analysis`` and
+    docs/analysis.md): True (default) rejects networks with error-severity
+    findings — inconsistent SDF rates, sure deadlocks, undersized buffers —
+    at compile time with an ``AnalysisError`` carrying stable ``SB###``
+    codes; ``"warn"`` collects findings without rejecting
+    (``Program.check()`` returns them); False skips analysis.
     """
     graph = _as_graph(net)
     if xcf is not None:
@@ -492,4 +525,5 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
         max_execs_per_invoke=max_execs_per_invoke,
         fuse=fuse,
         opt_level=opt_level,
+        check=check,
     )

@@ -231,7 +231,7 @@ def build_host_fused(
     """Lower one static-rate software region to a ``HostFusedSpec``, or None
     when any member falls outside the stream-op palette (the region then
     stays fully interpreted)."""
-    import math
+    from repro.analysis.rates import region_repetition
 
     order = [a for a in module.topo_order() if a in set(members)]
     b_ins, b_outs, internal = _region_io(module, order)
@@ -244,19 +244,26 @@ def build_host_fused(
     if built is None:
         return None
     program, _masks = built
-    rates: List[int] = []
-    fires = 0
-    for m in order:
-        impl = module.actors[m].impl
-        for act in impl.actions:
-            rates.extend(act.consumes.values())
-            rates.extend(act.produces.values())
-    quantum = math.lcm(*(max(r, 1) for r in rates)) if rates else 1
-    fires_each = []
-    for m in order:
-        a0 = module.actors[m].impl.actions[0]
-        rate = max(next(iter(a0.consumes.values()), 1), 1)
-        fires_each.append(quantum // rate)
+    # The analyzer's region-restricted repetition vector is the single
+    # source of truth for iteration shape: member m fires q[m] times per
+    # region iteration, and every boundary channel moves rate*q[endpoint]
+    # tokens.  The block executor drives all boundary fifos with one scalar
+    # quantum, so those per-channel counts must agree — true across the 1:1
+    # stream-op palette; anything else stays interpreted.
+    q = region_repetition(module, order)
+    fires_each = [q[m] for m in order]
+    counts = set()
+    for ch in b_ins:
+        counts.add(
+            module.actors[ch.dst].rate.consume_rate(ch.dst_port) * q[ch.dst]
+        )
+    for ch in b_outs:
+        counts.add(
+            module.actors[ch.src].rate.produce_rate(ch.src_port) * q[ch.src]
+        )
+    if len(counts) != 1 or 0 in counts:
+        return None
+    quantum = counts.pop()
     fires = sum(fires_each)
     return HostFusedSpec(
         members=tuple(order),

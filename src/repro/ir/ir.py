@@ -294,7 +294,15 @@ class IRModule:
                 f"depth={d if d is not None else '?'}({ch.depth_source()})"
             )
         for k in sorted(self.meta):
-            lines.append(f"  meta {k}={self.meta[k]}")
+            v = self.meta[k]
+            if k == "diagnostics":
+                # streamcheck findings: one line per diagnostic so the pass
+                # trace shows exactly what the analyses saw at this point
+                lines.append(f"  meta diagnostics={v!r}")
+                for d in v:
+                    lines.append(f"    diag {d}")
+                continue
+            lines.append(f"  meta {k}={v}")
         return "\n".join(lines)
 
     def record(self, pass_name: str) -> None:

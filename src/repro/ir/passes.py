@@ -16,10 +16,21 @@ Default pipeline (in order):
   infer-fifo-depths    resolves every channel depth: XCF-pinned > authored >
                        inferred (rate- and boundary-aware); replaces the old
                        mutate-the-graph-per-XCF depth rebuild
+  analyze-rates        solves the SDF balance equations (repro.analysis):
+                       ``meta["repetition"]`` gets the repetition vector,
+                       inconsistent-rate networks get an SB101 diagnostic
   detect-sdf-regions   finds maximal static-rate regions inside each device
                        partition (never across a partition boundary) AND
                        inside each software partition (stream-op members
                        only — candidates for fused block execution on host)
+  streamcheck          compile-time dataflow verification (repro.analysis):
+                       deadlock simulation, buffer/block sufficiency, and
+                       the boundedness/liveness/placement lints.  Under the
+                       default ``check=True`` policy error-severity findings
+                       raise ``AnalysisError`` here — before any runtime
+                       thread spins up; ``check="warn"`` collects findings
+                       in ``meta["diagnostics"]`` without rejecting, and
+                       ``check=False`` skips both analysis passes
   fuse-sdf-regions     collapses each device SDF region into one fused actor
                        (Pallas stream kernel when specs allow, composed-jnp
                        otherwise)
@@ -44,6 +55,7 @@ from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro import analysis
 from repro.core.graph import ActorGraph, GraphError
 from repro.core.xcf import XCF
 from repro.ir import fusion
@@ -70,6 +82,10 @@ class PassContext:
     block: int = 1024
     fuse: bool = True
     opt_level: int = 1  # 2 adds algebraic folding (not bit-preserving)
+    # streamcheck policy: True/"error" rejects error-severity findings with
+    # AnalysisError, "warn" collects them in meta["diagnostics"] without
+    # rejecting, False skips the analysis passes entirely
+    check: object = True
 
 
 class Pass:
@@ -408,6 +424,51 @@ class DetectSDFRegions(Pass):
         )
 
 
+class AnalyzeRates(Pass):
+    """Solve the SDF balance equations (see ``repro.analysis.rates``).
+
+    Stores the repetition vector — minimal fires-per-iteration per static
+    component, 1 for dynamic/unconstrained actors — in
+    ``meta["repetition"]`` and starts the module's diagnostics collection.
+    Runs before region detection so fusion and the device staging plan can
+    consume region-restricted vectors instead of re-deriving lcm math, and
+    before fusion so SB101 names authored actors.  Rejection is deferred to
+    the ``streamcheck`` pass so a single AnalysisError carries *all*
+    findings.
+    """
+
+    name = "analyze-rates"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        if ctx.check is False:
+            return module
+        analysis.run_rate_analysis(module)
+        return module
+
+
+class StreamCheck(Pass):
+    """Compile-time dataflow verification (see ``repro.analysis``).
+
+    Deadlock simulation against resolved FIFO depths (SB102), buffer and
+    staging-block sufficiency (SB103/SB104), and the SB2xx lints.  Placed
+    after region detection (SB104 needs the hw regions, SB202 the would-be
+    groups) but before fusion, so every diagnostic names actors the user
+    authored.  ``ctx.check`` selects the policy: True/"error" raises
+    ``AnalysisError`` on error-severity findings, "warn" only collects,
+    False skipped this pass before it ran.
+    """
+
+    name = "streamcheck"
+
+    def run(self, module: IRModule, ctx: PassContext) -> IRModule:
+        if ctx.check is False:
+            return module
+        diags = analysis.run_streamcheck(module, block=ctx.block)
+        if diags.has_errors and ctx.check in (True, "error"):
+            raise analysis.AnalysisError(module.name, diags)
+        return module
+
+
 class FuseSDFRegions(Pass):
     """Collapse each detected SDF region into one fused device actor.
 
@@ -525,7 +586,9 @@ def default_pipeline() -> PassPipeline:
         LegalizePlacement(),
         EliminateDead(),
         InferFifoDepths(),
+        AnalyzeRates(),
         DetectSDFRegions(),
+        StreamCheck(),
         FuseSDFRegions(),
         FuseSDFHostRegions(),
     ])
@@ -550,9 +613,16 @@ def lower(
     block: int = 1024,
     fuse: bool = True,
     opt_level: int = 1,
+    check: object = True,
 ) -> IRModule:
     """Lower a network/graph (+ optional XCF placement) through the default
-    pipeline.  This is the only road from authored graphs to the backends."""
+    pipeline.  This is the only road from authored graphs to the backends.
+
+    ``check`` is the streamcheck policy: True (default) rejects networks
+    with error-severity findings (``AnalysisError``, a ``GraphError``),
+    "warn" collects findings in ``meta["diagnostics"]`` without rejecting,
+    False skips the analysis passes.
+    """
     ctx = PassContext(
         graph=_as_graph(src),
         xcf=xcf,
@@ -560,6 +630,7 @@ def lower(
         block=block,
         fuse=fuse,
         opt_level=opt_level,
+        check=check,
     )
     return default_pipeline().run(ctx)
 

@@ -9,7 +9,6 @@ parallel grid rows, matching expert-sharding over the mesh).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

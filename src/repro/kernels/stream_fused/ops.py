@@ -11,12 +11,13 @@ into one loop) — both compute the identical op sequence.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
+
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.stream_fused.ref import fused_stream_np, fused_stream_ref  # noqa: F401 — fused_stream_np re-exported for host-region callers
+from repro.kernels.stream_fused.ref import fused_stream_ref  # noqa: F401 — fused_stream_np re-exported for host-region callers
 
 OP_KINDS = (
     "affine", "clip", "matmul8", "axpy", "const", "min2", "max2", "perm"

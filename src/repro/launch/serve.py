@@ -13,8 +13,8 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
-from typing import Dict, Optional
+from typing import Dict
+
 
 import jax
 import jax.numpy as jnp

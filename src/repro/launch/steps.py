@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeCell
-from repro.distributed.sharding import make_pspec, make_rules, shard_ctx
+from repro.distributed.sharding import make_pspec
+
 from repro.model import lm
 from repro.model.layers import logical_axes as defs_logical
 from repro.optim import OptConfig, adamw_update, init_opt_state

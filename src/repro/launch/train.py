@@ -14,10 +14,6 @@ Options: --full (exact assigned config; only sensible on a real mesh),
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
-from functools import partial
-from pathlib import Path
 from typing import Any, Dict, Optional
 
 import jax

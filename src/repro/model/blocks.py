@@ -2,12 +2,14 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
+
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN, BlockKind
+from repro.configs.base import FFN_DENSE, FFN_NONE, MIXER_ATTN, BlockKind
+
 from repro.model.attention import attn_defs, attention
 from repro.model.layers import mlp_defs, norm_defs, rms_norm, swiglu
 from repro.model.moe import moe_defs, moe_ffn

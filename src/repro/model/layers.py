@@ -17,8 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
+
 
 import jax
 import jax.numpy as jnp

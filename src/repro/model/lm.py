@@ -13,8 +13,8 @@ chunk body, so the (tokens × vocab) logits tensor never materializes.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
+
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,8 @@ attention does.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
+
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.actor import Actor
-from repro.core.graph import ActorGraph
+from repro.core.graph import ActorGraph, GraphError
 from repro.ir.ir import IRModule
 
 
@@ -115,27 +115,26 @@ def region_quantum(module: IRModule, actor_name: str) -> int:
     (often 1), but members *inside* the region may fire at coarser rates —
     the 8-point IDCT consumes 8 tokens per firing behind a rate-1 descale.
     Staging a block that is not a whole number of region iterations would
-    hand such a member a block mixing valid tokens with padding.  The LCM of
-    every member's action rates is a safe iteration granule.
+    hand such a member a block mixing valid tokens with padding.  The
+    analyzer's region-restricted repetition vector gives the iteration
+    shape: member ``m`` fires ``q[m]`` times, moving ``rate * q[m]`` tokens
+    per port — the lcm of those per-iteration throughputs is the granule.
     """
     import math
 
+    from repro.analysis.rates import member_rates, region_repetition
+
     ir = module.actors[actor_name]
-    members = ir.fused_from or (actor_name,)
-    graph = module.source
-    rates: List[int] = []
+    members = list(ir.fused_from or (actor_name,))
+    q = region_repetition(module, members)
+    rate_of, _edges = member_rates(module, members)
+    counts: List[int] = []
     for m in members:
-        impl = (
-            graph.actors.get(m)
-            if graph is not None and m in getattr(graph, "actors", {})
-            else (ir.impl if m == actor_name else None)
-        )
-        if impl is None:
-            continue
-        for act in impl.actions:
-            rates.extend(act.consumes.values())
-            rates.extend(act.produces.values())
-    return math.lcm(*(max(r, 1) for r in rates)) if rates else 1
+        r = rate_of(m)
+        for _p, n in tuple(r.consumes) + tuple(r.produces):
+            if n > 0:
+                counts.append(n * q.get(m, 1))
+    return math.lcm(*counts) if counts else 1
 
 
 def staging_plan(
@@ -157,23 +156,35 @@ def staging_plan(
     launches.  Disjoint internal components keep independent progress, so a
     placement like {descale, clip} with the idct on the host between them
     still pipelines instead of deadlocking on the empty downstream group.
-    """
-    import math
 
+    Granules come from the analyzer's repetition vector, solved once per
+    internal component over the *authored* members (fused actors expand to
+    their ``fused_from``): port ``a.p`` stages ``consume_rate(p) *
+    q[member]`` tokens per component iteration — the replacement for the
+    old lcm-of-all-rates derivation, agreeing with it on every Table-I
+    network but tighter on mixed-rate chains.
+    """
+    from repro.analysis.rates import port_member, region_repetition
     from repro.ir.ir import connected_components
 
     sub = set(members) if members is not None else {a for (a, _p, _d) in in_ports}
     comp = connected_components(sub, module.channels)
+    comp_members: Dict[str, List[str]] = {}
+    for a in sub:
+        ir = module.actors[a]
+        comp_members.setdefault(comp[a], []).extend(ir.fused_from or (a,))
+    comp_q = {
+        k: region_repetition(module, ms) for k, ms in comp_members.items()
+    }
 
     groups: Dict[str, List[str]] = {}
     quanta: Dict[str, int] = {}
     for (a, p, _dt) in in_ports:
         key = f"{a}.{p}"
         groups.setdefault(comp[a], []).append(key)
-        quanta[key] = math.lcm(
-            max(module.actors[a].rate.consume_rate(p), 1),
-            region_quantum(module, a),
-        )
+        c = max(module.actors[a].rate.consume_rate(p), 1)
+        q = comp_q[comp[a]].get(port_member(module, a, p), 1)
+        quanta[key] = c * q
     return groups, quanta
 
 
@@ -276,8 +287,6 @@ def compile_partition(
         if partition is not None:
             region = module.regions.get(partition)
             if region is None or region.kind != "hw":
-                from repro.core.graph import GraphError
-
                 raise GraphError(
                     f"{module.name}: no hw partition {partition!r} (hw "
                     f"partitions: {[r.id for r in module.hw_regions()]})"
@@ -370,8 +379,6 @@ def compile_partition(
     in_groups, in_quanta = staging_plan(module, in_ports, names)
     too_small = {k: q for k, q in in_quanta.items() if q > block}
     if too_small:
-        from repro.core.graph import GraphError
-
         raise GraphError(
             f"{name}: block={block} is smaller than the staging quantum of "
             f"{too_small} — a whole region iteration must fit in one staged "

@@ -12,11 +12,19 @@ stores are atomic under the GIL.)
 Channels whose two endpoints live on the same thread publish immediately
 (``deferred=False``) — the cross-thread protocol is unnecessary there and
 immediate visibility lets a chain of same-thread actors pipeline within a round.
+
+When the ownership sanitizer (``repro.runtime.sanitizer``) is enabled at
+construction time, every endpoint operation asserts the single-thread
+discipline the protocol depends on; ``occupancy``/``total_written``/
+``unpublished`` stay unguarded — they are the deliberately cross-thread
+introspection surface (stall reports, quiescence checks).
 """
 
 from __future__ import annotations
 
 from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.runtime import sanitizer
 
 
 class RingFifo:
@@ -25,6 +33,9 @@ class RingFifo:
         self.capacity = capacity
         self.name = name
         self.deferred = deferred
+        self._guard = (
+            sanitizer.EndpointGuard(name) if sanitizer.enabled() else None
+        )
         self._buf: List[Any] = [None] * capacity
         # published (visible cross-thread)
         self.w_pub = 0
@@ -39,16 +50,24 @@ class RingFifo:
 
     # ---- pre-fire -----------------------------------------------------------
     def snapshot_reader(self) -> None:
+        if self._guard is not None:
+            self._guard.check("reader")
         self._w_snap = self.w_pub
 
     def snapshot_writer(self) -> None:
+        if self._guard is not None:
+            self._guard.check("writer")
         self._r_snap = self.r_pub
 
     # ---- post-fire ------------------------------------------------------------
     def publish_reader(self) -> None:
+        if self._guard is not None:
+            self._guard.check("reader")
         self.r_pub = self._r_loc
 
     def publish_writer(self) -> None:
+        if self._guard is not None:
+            self._guard.check("writer")
         self.w_pub = self._w_loc
 
     def _sync_now(self) -> None:
@@ -60,6 +79,8 @@ class RingFifo:
 
     # ---- reader API -------------------------------------------------------------
     def count(self) -> int:
+        if self._guard is not None:
+            self._guard.check("reader")
         if not self.deferred:
             self._w_snap = self.w_pub
         return self._w_snap - self._r_loc
@@ -99,6 +120,8 @@ class RingFifo:
 
     # ---- writer API ----------------------------------------------------------------
     def space(self) -> int:
+        if self._guard is not None:
+            self._guard.check("writer")
         if not self.deferred:
             self._r_snap = self.r_pub
         return self.capacity - (self._w_loc - self._r_snap)
@@ -159,6 +182,9 @@ class ArrayFifo:
         self.capacity = capacity
         self.name = name
         self.deferred = deferred
+        self._guard = (
+            sanitizer.EndpointGuard(name) if sanitizer.enabled() else None
+        )
         self._blocks: List[Any] = []  # writer appends, reader pops head
         self._head = 0  # tokens consumed from _blocks[0]
         self._w = 0  # total written (writer-owned)
@@ -184,6 +210,8 @@ class ArrayFifo:
 
     # -- reader API ----------------------------------------------------------
     def count(self) -> int:
+        if self._guard is not None:
+            self._guard.check("reader")
         return self._w - self._r
 
     def read(self, n: int):
@@ -242,6 +270,8 @@ class ArrayFifo:
 
     # -- writer API ----------------------------------------------------------
     def space(self) -> int:
+        if self._guard is not None:
+            self._guard.check("writer")
         return self.capacity - (self._w - self._r)
 
     def write(self, vals) -> None:

@@ -17,8 +17,10 @@ from __future__ import annotations
 
 import time
 import warnings
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+
+from typing import Any, Dict, Optional, Tuple
+
 
 import jax
 import jax.numpy as jnp

@@ -262,13 +262,20 @@ class HostRuntime:
         self,
         max_rounds: int = 1_000_000,
         max_seconds: Optional[float] = None,
+        on_deadline: str = "raise",
     ) -> int:
         """Deterministic single-threaded execution (ignores the thread mapping).
 
-        ``max_seconds`` bounds wall-clock time — profiling a network that
-        never quiesces (a server-style pipeline) returns what it measured so
-        far instead of spinning through a million rounds.
+        ``max_seconds`` bounds wall-clock time and ``max_rounds`` the round
+        count.  A run that ends by budget instead of quiescence raises
+        ``StallError`` with a stall report (which actors are blocked on
+        which FIFOs, with fill levels) — silently-partial output hides
+        hangs.  Callers that *want* the partial result (profilers sampling a
+        never-quiescent server pipeline) pass ``on_deadline="return"``.
         """
+        from repro.runtime.stall import StallError, stall_report
+
+        assert on_deadline in ("raise", "return"), on_deadline
         deadline = (
             None if max_seconds is None
             else time.perf_counter() + max_seconds
@@ -276,6 +283,8 @@ class HostRuntime:
         parts = list(self.partitions.values())
         backoff = AdaptiveBackoff()
         total = 0
+        quiesced = False
+        expired = ""
         for _ in range(max_rounds):
             execs = sum(p.run_round() for p in parts)
             total += execs
@@ -283,13 +292,23 @@ class HostRuntime:
                 pending = any(p.has_pending_async() for p in parts)
                 moved = any(f.unpublished for f in self.fifos.values())
                 if not moved and not pending:
+                    quiesced = True
                     break
                 if pending:  # let the in-flight device step complete
                     backoff.pause()
             else:
                 backoff.reset()
             if deadline is not None and time.perf_counter() >= deadline:
+                expired = f"max_seconds={max_seconds} expired"
                 break
+        else:
+            expired = f"max_rounds={max_rounds} exhausted without quiescence"
+        if not quiesced and on_deadline == "raise":
+            raise StallError(
+                f"{self.module.name}: run_single ended by budget "
+                f"({expired}) with the network not quiescent",
+                stall_report(self),
+            )
         return total
 
     # ------------------------------------------------------------------ threads --
@@ -369,11 +388,27 @@ class HostRuntime:
                     return
                 self._cv.wait(timeout=0.005)
 
-    def run_threads(self, n_cores: Optional[int] = None) -> float:
-        """Run until quiescent; returns wall-clock seconds."""
+    def run_threads(
+        self,
+        n_cores: Optional[int] = None,
+        max_seconds: Optional[float] = None,
+        on_deadline: str = "raise",
+    ) -> float:
+        """Run until quiescent; returns wall-clock seconds.
+
+        ``max_seconds`` arms a watchdog: if the network has not quiesced by
+        the deadline, every thread is terminated and (under the default
+        ``on_deadline="raise"``) a ``StallError`` carrying the stall report
+        is raised — a hung placement becomes an actionable diagnosis
+        instead of a forever-blocked join.
+        """
+        from repro.runtime.stall import StallError, stall_report
+
+        assert on_deadline in ("raise", "return"), on_deadline
         self._quiet = {name: -1 for name in self.partitions}
         self._terminate = False
         self._thread_error = None
+        self._stalled = False
         avail = list(range(os.cpu_count() or 1))
         threads = []
         t0 = time.perf_counter()
@@ -384,10 +419,29 @@ class HostRuntime:
             )
             threads.append(th)
             th.start()
+        if max_seconds is not None:
+            def _watchdog() -> None:
+                with self._cv:
+                    done = self._cv.wait_for(
+                        lambda: self._terminate, timeout=max_seconds
+                    )
+                    if not done:
+                        self._stalled = True
+                        self._terminate = True
+                        self._cv.notify_all()
+
+            wd = threading.Thread(target=_watchdog, daemon=True)
+            wd.start()
         for th in threads:
             th.join()
         if self._thread_error is not None:
             raise self._thread_error
+        if self._stalled and on_deadline == "raise":
+            raise StallError(
+                f"{self.module.name}: run_threads hit max_seconds="
+                f"{max_seconds} without quiescence",
+                stall_report(self),
+            )
         return time.perf_counter() - t0
 
     def run(self, threaded: Optional[bool] = None) -> float:

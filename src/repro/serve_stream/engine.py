@@ -412,12 +412,22 @@ class StreamServer:
             for st in stages:
                 quanta.update(st.quantum)
             stuck = s.pipeline.occupancy() + sum(queued.values())
+            # per-fifo fill levels: the same picture runtime.stall paints
+            # for scheduler runs, so a torn tail names the exact channel
+            fills = {
+                "->".join(map(str, key[::2])): f.occupancy()
+                for key, f in s.pipeline.fifos.items()
+                if f.occupancy() > 0
+            }
+            fills.update(
+                {f"queue:{n}": q for n, q in queued.items() if q}
+            )
             s.error = (
                 f"session {s.sid}: stream ended with {stuck} tokens stuck "
                 f"below a consumption quantum "
                 f"{quanta or '(host actor rates)'} — submit whole "
                 f"iterations (e.g. multiples of 8 for an 8-point "
-                f"transform)"
+                f"transform); stuck tokens by fifo: {fills or '{}'}"
             )
             self._record_links(s.pipeline)
             s.finished.set()

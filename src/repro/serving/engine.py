@@ -15,8 +15,10 @@ idleness rule); a production deployment would put ``run`` on a PLink thread.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+
+from typing import List, Optional
+
 
 import jax
 import jax.numpy as jnp

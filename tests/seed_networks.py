@@ -9,7 +9,8 @@ Golden reference for tests/test_frontend.py: the DSL-authored networks in
 from __future__ import annotations
 
 import math
-from typing import Callable, List, Optional, Tuple
+from typing import List, Tuple
+
 
 import numpy as np
 

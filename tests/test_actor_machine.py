@@ -1,6 +1,5 @@
 """Actor-machine semantics: controller synthesis, priorities, persistence."""
 
-import pytest
 from helpers import given, settings, st
 
 from repro.core.actor import Actor, Action, Port

@@ -1,0 +1,520 @@
+"""streamcheck: compile-time dataflow verification + runtime sanitizers.
+
+Covers the analysis tentpole end to end: the SDF balance-equation solver
+(minimal repetition vectors, verified against the balance equations on all
+five Table-I networks), the zero-false-positive guarantee across the
+exhaustive legal 2-split placement sweep, rejection of seeded-bad networks
+with stable ``SB###`` codes, the analyzer-derived staging granules that
+replaced the old lcm derivation, the ``check=`` policy plumbing
+(``True``/``"warn"``/``False`` and ``Program.check()``), diagnostic
+provenance + ``ir_dump`` rendering, the ``python -m repro.analysis`` CLI,
+the FIFO endpoint-ownership sanitizer, and the scheduler's stall reporting
+(``StallError`` on budget expiry instead of silently-partial output).
+"""
+
+import math
+import threading
+
+import pytest
+
+import repro
+from repro.analysis import (
+    CODES,
+    AnalysisError,
+    Diagnostic,
+    check_module,
+    repetition_vector,
+    solve_rates,
+)
+from repro.apps.streams import NETWORKS
+from repro.core.actor import Action, Actor, Port, simple_actor, sink_actor, source_actor
+from repro.core.graph import ActorGraph, GraphError
+from repro.core.xcf import make_xcf
+from repro.ir.passes import lower
+from repro.runtime import sanitizer
+from repro.runtime.device_runtime import region_quantum
+from repro.runtime.fifo import RingFifo
+from repro.runtime.scheduler import HostRuntime
+from repro.runtime.stall import StallError, stall_report
+
+from test_multi_partition import SWEEP, _eligible, legal_two_splits, split_xcf
+
+
+def _count_source(n=8, name="src"):
+    def gen(stt):
+        i = stt.get("i", 0)
+        return ({"i": i + 1}, float(i)) if i < n else (stt, None)
+
+    return source_actor(name, gen, has_next=lambda stt: stt.get("i", 0) < n)
+
+
+def _chain(name="chain", n=8, rate=1, depth=None):
+    """src -> blk(consumes/produces ``rate``) -> sink."""
+    g = ActorGraph(name)
+    g.add(_count_source(n))
+    g.add(Actor("blk", inputs=[Port("IN", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("b", consumes={"IN": rate},
+                                produces={"OUT": rate},
+                                fire=lambda st, t: (st, {"OUT": list(t["IN"])}))]))
+    g.add(sink_actor("sink", lambda st, v: st))
+    g.connect("src", "blk", "OUT", "IN", depth=depth)
+    g.connect("blk", "sink")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# rate analysis: balance equations on the Table-I networks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,kw", SWEEP, ids=[s[0] for s in SWEEP])
+def test_repetition_vector_balances_and_is_minimal(name, kw):
+    """meta["repetition"] satisfies every static-static balance equation
+    exactly, and is minimal (component-wise gcd 1) — the property the old
+    ad-hoc lcm math only approximated."""
+    net, _ = NETWORKS[name](**kw)
+    module = lower(net.graph(), None)
+    q = module.meta["repetition"]
+    assert set(q) == set(module.actors)
+    for ch in module.channels:
+        src, dst = module.actors[ch.src], module.actors[ch.dst]
+        if not (src.rate.static and dst.rate.static):
+            continue
+        p = src.rate.produce_rate(ch.src_port)
+        c = dst.rate.consume_rate(ch.dst_port)
+        if p > 0 and c > 0:
+            assert p * q[ch.src] == c * q[ch.dst], (name, str(ch), q)
+    # minimality per connected component of the balance constraints
+    comp_gcd = math.gcd(*q.values())
+    assert comp_gcd >= 1
+    assert all(v >= 1 for v in q.values())
+
+
+class _Sig:
+    """Minimal RateSig stand-in for the generic solver."""
+
+    static = True
+
+    def __init__(self, consumes=(), produces=()):
+        self._c, self._p = dict(consumes), dict(produces)
+
+    def consume_rate(self, port):
+        return self._c.get(port, 0)
+
+    def produce_rate(self, port):
+        return self._p.get(port, 0)
+
+
+def test_repetition_vector_helper_multirate():
+    sigs = {
+        "a": _Sig(produces={"o": 3}),
+        "b": _Sig(consumes={"i": 2}, produces={"o": 1}),
+        "c": _Sig(consumes={"i": 6}),
+    }
+    q = repetition_vector(
+        ["a", "b", "c"], sigs.__getitem__,
+        [("a", "o", "b", "i"), ("b", "o", "c", "i")])
+    assert q == {"a": 4, "b": 6, "c": 1}
+
+
+def test_repetition_vector_helper_inconsistent_returns_none():
+    sigs = {
+        "a": _Sig(produces={"o1": 1, "o2": 1}),
+        "b": _Sig(consumes={"i1": 1, "i2": 2}),
+    }
+    q = repetition_vector(
+        ["a", "b"], sigs.__getitem__,
+        [("a", "o1", "b", "i1"), ("a", "o2", "b", "i2")])
+    assert q is None
+
+
+# ---------------------------------------------------------------------------
+# zero false positives: the exhaustive legal placement sweep stays clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,kw", SWEEP, ids=[s[0] for s in SWEEP])
+def test_streamcheck_clean_on_placement_sweep(name, kw):
+    """Every legal 2-partition split of every Table-I network lowers with
+    zero error-severity findings — accepted placements are never rejected."""
+    net, _ = NETWORKS[name](**kw)
+    g = net.graph()
+    splits = legal_two_splits(g) or [None]
+    for split in splits:
+        xcf = None if split is None else split_xcf(g, *split)
+        module = lower(g, xcf, block=64, check="warn")
+        diags = module.meta["diagnostics"]
+        assert not diags.has_errors, (name, split, diags.render())
+
+
+# ---------------------------------------------------------------------------
+# staging granules: analyzer-derived, agreeing with the old lcm derivation
+# ---------------------------------------------------------------------------
+
+
+GOLDEN_QUANTA = {"FIR32": 1, "Bitonic8": 1, "IDCT8": 8, "ZigZag": 64}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_QUANTA), ids=sorted(GOLDEN_QUANTA))
+def test_region_quantum_matches_golden(name):
+    kw = dict(SWEEP)[name]
+    net, _ = NETWORKS[name](**kw)
+    g = net.graph()
+    elig = _eligible(g)
+    asg = {a: ("d0" if a in elig else "t0") for a in g.actors}
+    module = lower(g, make_xcf(g.name, asg, accel=("d0",)), block=64)
+    fused = [a for a, ir in module.actors.items() if ir.fused_from]
+    assert fused, name
+    assert region_quantum(module, fused[0]) == GOLDEN_QUANTA[name]
+
+
+# ---------------------------------------------------------------------------
+# seeded-bad networks and the check= policy
+# ---------------------------------------------------------------------------
+
+
+def _bad_rates_graph():
+    """Reconvergent paths with contradictory ratios: no repetition vector."""
+    g = ActorGraph("bad_rates")
+    g.add(_count_source())
+    g.add(Actor("tee", inputs=[Port("IN", "float32")],
+                outputs=[Port("O1", "float32"), Port("O2", "float32")],
+                actions=[Action("d", consumes={"IN": 1},
+                                produces={"O1": 1, "O2": 1},
+                                fire=lambda st, t: (st, {"O1": [t["IN"][0]],
+                                                         "O2": [t["IN"][0]]}))]))
+    g.add(simple_actor("same", lambda st, v: (st, v)))
+    g.add(Actor("dbl", inputs=[Port("IN", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("f", consumes={"IN": 1}, produces={"OUT": 2},
+                                fire=lambda st, t: (st, {"OUT": [t["IN"][0]] * 2}))]))
+    g.add(Actor("join", inputs=[Port("I1", "float32"), Port("I2", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("j", consumes={"I1": 1, "I2": 1},
+                                produces={"OUT": 1},
+                                fire=lambda st, t: (st, {"OUT": [t["I1"][0]]}))]))
+    g.add(sink_actor("sink", lambda st, v: st))
+    g.connect("src", "tee")
+    g.connect("tee", "same", "O1", "IN")
+    g.connect("tee", "dbl", "O2", "IN")
+    g.connect("same", "join", "OUT", "I1")
+    g.connect("dbl", "join", "OUT", "I2")
+    g.connect("join", "sink")
+    return g
+
+
+def test_solve_rates_reports_sb101_with_witness_channel():
+    module = lower(_bad_rates_graph(), None, check=False)
+    q, diags = solve_rates(module)
+    assert q is None
+    errs = diags.errors
+    assert [d.code for d in errs] == ["SB101"]
+    assert errs[0].channels, "SB101 must carry a witness channel"
+
+
+def test_compile_rejects_bad_rates_by_default():
+    with pytest.raises(AnalysisError) as ei:
+        repro.compile(_bad_rates_graph(), backend="host")
+    assert "SB101" in ei.value.codes
+    # the error is a GraphError subclass: existing handling keeps working
+    assert isinstance(ei.value, GraphError)
+
+
+def test_check_warn_compiles_and_reports():
+    p = repro.compile(_bad_rates_graph(), backend="host", check="warn")
+    diags = p.check()
+    assert diags.has_errors and "SB101" in diags.codes()
+
+
+def test_check_false_skips_then_on_demand():
+    p = repro.compile(_bad_rates_graph(), backend="host", check=False)
+    assert p.repetition_vector is None  # analysis genuinely skipped
+    diags = p.check()  # on-demand run, never raises
+    assert "SB101" in diags.codes()
+
+
+def test_buffer_smaller_than_one_firing_is_sb103():
+    g = _chain(rate=8, depth=4)  # blk needs 8 tokens, fifo holds 4
+    with pytest.raises(AnalysisError) as ei:
+        repro.compile(g, backend="host")
+    assert "SB103" in ei.value.codes
+
+
+def test_block_smaller_than_staging_granule_is_sb104():
+    net, _ = NETWORKS["ZigZag"](n_blocks=2)
+    g = net.graph()
+    elig = _eligible(g)
+    asg = {a: ("d0" if a in elig else "t0") for a in g.actors}
+    xcf = make_xcf(g.name, asg, accel=("d0",))
+    with pytest.raises(AnalysisError) as ei:
+        repro.compile(g, xcf, block=32)
+    assert "SB104" in ei.value.codes
+    # the same placement is clean at a sufficient block size
+    assert not repro.compile(g, xcf, block=64).check().has_errors
+
+
+def test_unconsumed_port_is_sb204_warning():
+    g = ActorGraph("probe204")
+    g.add(_count_source(4))
+    g.add(Actor("dup", inputs=[Port("IN", "float32")],
+                outputs=[Port("O1", "float32"), Port("O2", "float32")],
+                actions=[Action("d", consumes={"IN": 1},
+                                produces={"O1": 1, "O2": 1},
+                                fire=lambda st, t: (st, {"O1": [t["IN"][0]],
+                                                         "O2": [t["IN"][0]]}))]))
+    g.add(Actor("pick", inputs=[Port("I1", "float32"), Port("I2", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("p", consumes={"I1": 1}, produces={"OUT": 1},
+                                fire=lambda st, t: (st, {"OUT": [t["I1"][0]]}))]))
+    g.add(sink_actor("sink", lambda st, v: st))
+    g.connect("src", "dup")
+    g.connect("dup", "pick", "O1", "I1")
+    g.connect("dup", "pick", "O2", "I2")
+    g.connect("pick", "sink")
+    p = repro.compile(g, backend="host")  # warnings don't reject
+    codes = p.check().codes()
+    assert "SB204" in codes
+
+
+def test_sinkless_cycle_warns_not_errors():
+    g = ActorGraph("cycle")
+    for n in ("a", "b"):
+        g.add(Actor(n, inputs=[Port("IN", "float32")],
+                    outputs=[Port("OUT", "float32")],
+                    actions=[Action("f", consumes={"IN": 1},
+                                    produces={"OUT": 1},
+                                    fire=lambda st, t: (st, {"OUT": [t["IN"][0]]}))]))
+    g.connect("a", "b")
+    g.connect("b", "a")
+    module = lower(g, None, check="warn")
+    diags = module.meta["diagnostics"]
+    assert not diags.has_errors  # a dead cycle wedges only itself
+    codes = diags.codes()
+    assert "SB201" in codes and "SB205" in codes
+
+
+# ---------------------------------------------------------------------------
+# diagnostics framework: provenance, rendering, ir_dump, CLI
+# ---------------------------------------------------------------------------
+
+
+def test_diagnostic_rejects_unknown_code():
+    with pytest.raises(AssertionError):
+        Diagnostic(code="SB999", severity="error", message="nope")
+
+
+def test_dsl_provenance_reaches_diagnostics():
+    from repro.frontend import network
+
+    net = network("prov")
+    src = net.source("src", lambda st: (st, None), has_next=lambda st: False)
+    blk = net.add(Actor("blk", inputs=[Port("IN", "float32")],
+                        outputs=[Port("OUT", "float32")],
+                        actions=[Action("b", consumes={"IN": 8},
+                                        produces={"OUT": 8},
+                                        fire=lambda st, t: (st, {"OUT": list(t["IN"])}))]))
+    out = []
+    snk = net.sink("sink", collect=out)
+    net.connect(src.OUT, blk.IN, depth=4)  # SB103: 4 < 8
+    net.connect(blk.OUT, snk.IN)
+    with pytest.raises(AnalysisError) as ei:
+        repro.compile(net)
+    (err,) = ei.value.diagnostics.errors
+    assert err.code == "SB103"
+    assert "test_analysis.py" in err.origin  # points at the authoring site
+
+
+def test_ir_dump_renders_diagnostics():
+    net, _ = NETWORKS["IDCT8"](n_blocks=2)
+    p = repro.compile(net, backend="host")
+    dump = p.ir_dump("streamcheck")
+    assert "diagnostics=" in dump
+    p2 = repro.compile(_bad_rates_graph(), backend="host", check="warn")
+    dump2 = p2.ir_dump("streamcheck")
+    assert "diag SB101" in dump2
+
+
+def test_check_module_is_idempotent():
+    module = lower(_bad_rates_graph(), None, check=False)
+    d1 = check_module(module)
+    d2 = check_module(module)
+    assert len(d1) == len(d2)  # findings are reset, not duplicated
+
+
+def test_cli_all_networks_clean(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main([]) == 0
+    out = capsys.readouterr().out
+    for name in NETWORKS:
+        assert name in out
+    assert "0 error(s)" in out
+
+
+def test_cli_file_scan_and_missing_file(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    f = tmp_path / "example.py"
+    f.write_text("from repro.apps.streams import NETWORKS\n"
+                 "net, out = NETWORKS['IDCT8']()\n")
+    assert main([str(f)]) == 0
+    out = capsys.readouterr().out
+    assert "IDCT8" in out and "TopFilter" not in out.replace(
+        "no registered networks", "")
+    assert main([str(tmp_path / "nope.py")]) == 2
+
+
+def test_codes_catalog_is_documented():
+    import os
+
+    doc_path = os.path.join(os.path.dirname(__file__), "..", "docs",
+                            "analysis.md")
+    doc = open(doc_path).read()
+    for code in CODES:
+        assert code in doc, f"{code} missing from docs/analysis.md"
+
+
+# ---------------------------------------------------------------------------
+# runtime: ownership sanitizer
+# ---------------------------------------------------------------------------
+
+
+def test_sanitizer_catches_cross_thread_endpoint_use():
+    sanitizer.enable(True)
+    try:
+        f = RingFifo(8, "probe")
+    finally:
+        sanitizer.enable(False)
+    f.write([1.0])  # main thread claims the writer side
+    errs = []
+
+    def misuse():
+        try:
+            f.space()  # writer-side API from another thread
+        except sanitizer.OwnershipError as e:
+            errs.append(e)
+
+    t = threading.Thread(target=misuse)
+    t.start()
+    t.join()
+    assert len(errs) == 1
+    assert "probe" in str(errs[0]) and "owned by" in str(errs[0])
+
+
+def test_sanitizer_allows_distinct_reader_writer_threads():
+    sanitizer.enable(True)
+    try:
+        f = RingFifo(8, "queue", deferred=False)  # admission-queue style
+    finally:
+        sanitizer.enable(False)
+    f.write([1.0, 2.0])  # main thread: writer
+    got = []
+
+    def reader():
+        got.append(f.read(2))  # other thread: reader — a legal split
+
+    t = threading.Thread(target=reader)
+    t.start()
+    t.join()
+    assert got == [(1.0, 2.0)]
+    # introspection stays unguarded (stall reports read cross-thread)
+    assert f.occupancy() == 0
+
+
+def test_sanitizer_off_by_default():
+    f = RingFifo(4, "plain")
+    assert f._guard is None
+
+
+def test_sanitizer_release_allows_handoff():
+    g = sanitizer.EndpointGuard("h")
+    g.check("reader")
+    g.release("reader")
+    done = []
+
+    def other():
+        g.check("reader")  # re-claimed by the new owner
+        done.append(True)
+
+    t = threading.Thread(target=other)
+    t.start()
+    t.join()
+    assert done == [True]
+
+
+# ---------------------------------------------------------------------------
+# runtime: stall reporting
+# ---------------------------------------------------------------------------
+
+
+def _stalling_module():
+    """An endless chain keeps the run from quiescing while ``blk`` waits
+    forever on 8 tokens its 4-token source can never supply — a snapshot at
+    budget expiry must name blk and the 4 stranded tokens."""
+    g = ActorGraph("stalling")
+    g.add(_count_source(10**9, name="pump"))
+    g.add(sink_actor("drain", lambda st, v: st))
+    g.connect("pump", "drain")
+    g.add(_count_source(4, name="src"))
+    g.add(Actor("blk", inputs=[Port("IN", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("b", consumes={"IN": 8}, produces={"OUT": 8},
+                                fire=lambda st, t: (st, {"OUT": list(t["IN"])}))]))
+    g.add(sink_actor("sink", lambda st, v: st))
+    g.connect("src", "blk")
+    g.connect("blk", "sink")
+    return lower(g, None, fuse=False, check=False)
+
+
+def test_run_single_budget_expiry_raises_stall_error():
+    rt = HostRuntime(_stalling_module())
+    with pytest.raises(StallError) as ei:
+        rt.run_single(max_seconds=0.1, max_rounds=10**9)
+    msg = str(ei.value)
+    assert "stall report" in msg
+    assert "blk" in msg and "needs 8" in msg
+    assert ei.value.report  # machine-readable attachment
+
+
+def test_deadlocked_network_quiesces_cleanly():
+    """A *wedged* network (nothing can fire) is quiescent, not stalled —
+    rejecting it is compile-time streamcheck's job, and run_single returning
+    is the correct runtime semantics."""
+    g = _chain(n=4, rate=8)  # blk can never gather 8 tokens
+    rt = HostRuntime(lower(g, None, fuse=False, check=False))
+    rt.run_single()  # returns: no budget hit, network is quiescent
+
+
+def test_run_single_max_rounds_exhaustion_raises():
+    g = _chain(n=10**9)  # effectively endless source
+    rt = HostRuntime(lower(g, None, fuse=False, check=False))
+    with pytest.raises(StallError, match="max_rounds"):
+        rt.run_single(max_rounds=3)
+
+
+def test_run_single_on_deadline_return_keeps_legacy_behavior():
+    rt = HostRuntime(_stalling_module())
+    rt.run_single(max_seconds=0.05, max_rounds=10**9, on_deadline="return")
+
+
+def test_run_single_quiescent_run_does_not_raise():
+    g = _chain(n=8, rate=8)
+    rt = HostRuntime(lower(g, None, fuse=False, check=False))
+    rt.run_single()  # completes: 8 tokens, one firing of blk
+
+
+def test_run_threads_watchdog_raises_stall_error():
+    rt = HostRuntime(_stalling_module(), controller="am")
+    with pytest.raises(StallError) as ei:
+        rt.run_threads(max_seconds=0.2)
+    assert "max_seconds" in str(ei.value)
+    assert "stall report" in str(ei.value)
+
+
+def test_stall_report_names_blocked_actor_and_fifo_fill():
+    rt = HostRuntime(_stalling_module())
+    rt.run_single(max_seconds=0.1, max_rounds=10**9, on_deadline="return")
+    rep = stall_report(rt)
+    assert "blk" in rep and "src.OUT->blk.IN" in rep
+    assert "4/" in rep  # the 4 stranded tokens are visible

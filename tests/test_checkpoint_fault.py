@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
 from repro.data.pipeline import DataConfig, DataPipeline

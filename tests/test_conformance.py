@@ -24,9 +24,11 @@ import os
 import pytest
 
 import repro
-from repro.core.actor import simple_actor, sink_actor, source_actor
+from repro.analysis import AnalysisError
+from repro.core.actor import Action, Actor, Port, simple_actor, sink_actor, source_actor
 from repro.core.graph import ActorGraph
 from repro.core.xcf import make_xcf
+from repro.runtime import sanitizer
 
 from helpers import HAVE_HYPOTHESIS, given, settings, st
 
@@ -165,21 +167,25 @@ def test_harness_smoke():
 def _check(case):
     g, got, xcf = _build(case)
 
-    repro.compile(g, backend="host", fuse=False).run()
-    host = list(got)
-    got.clear()
+    # Every axis runs under the FIFO endpoint-ownership sanitizer: a
+    # conformance pass that silently violated the single-thread endpoint
+    # discipline would be a bug the bitwise comparison can't see.
+    with sanitizer.sanitized():
+        repro.compile(g, backend="host", fuse=False).run()
+        host = list(got)
+        got.clear()
 
-    repro.compile(g, backend="host", fuse=True).run()
-    host_fused = list(got)
-    got.clear()
+        repro.compile(g, backend="host", fuse=True).run()
+        host_fused = list(got)
+        got.clear()
 
-    repro.compile(g, xcf, block=BLOCK, fuse=False).run()
-    unfused = list(got)
-    got.clear()
+        repro.compile(g, xcf, block=BLOCK, fuse=False).run()
+        unfused = list(got)
+        got.clear()
 
-    repro.compile(g, xcf, block=BLOCK, fuse=True).run()
-    fused = list(got)
-    got.clear()
+        repro.compile(g, xcf, block=BLOCK, fuse=True).run()
+        fused = list(got)
+        got.clear()
 
     assert host_fused == host, (case, host_fused[:8], host[:8])
     assert unfused == host, (case, unfused[:8], host[:8])
@@ -193,3 +199,102 @@ def test_differential_conformance(case):
     bitwise, for random networks under random 1..3-device-partition
     placements."""
     _check(case)
+
+
+# ---------------------------------------------------------------------------
+# seeded-bad networks: streamcheck must reject them with stable codes
+# ---------------------------------------------------------------------------
+
+
+def _bad_rates_graph():
+    """Reconvergent paths whose rate ratios contradict: the tee's O1 path is
+    1:1 while the O2 path doubles, but the join consumes 1 from each — the
+    balance equations have no solution (SB101)."""
+    g = ActorGraph("bad_rates")
+
+    def gen(stt):
+        i = stt.get("i", 0)
+        return ({"i": i + 1}, float(i)) if i < 8 else (stt, None)
+
+    g.add(source_actor("src", gen, has_next=lambda stt: stt.get("i", 0) < 8))
+    g.add(Actor("tee", inputs=[Port("IN", "float32")],
+                outputs=[Port("O1", "float32"), Port("O2", "float32")],
+                actions=[Action("dup", consumes={"IN": 1},
+                                produces={"O1": 1, "O2": 1},
+                                fire=lambda stt, t: (stt, {"O1": [t["IN"][0]],
+                                                           "O2": [t["IN"][0]]}))]))
+    g.add(simple_actor("same", lambda stt, v: (stt, v)))
+    g.add(Actor("dbl", inputs=[Port("IN", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("f", consumes={"IN": 1}, produces={"OUT": 2},
+                                fire=lambda stt, t: (stt, {"OUT": [t["IN"][0]] * 2}))]))
+    g.add(Actor("join", inputs=[Port("I1", "float32"), Port("I2", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("j", consumes={"I1": 1, "I2": 1},
+                                produces={"OUT": 1},
+                                fire=lambda stt, t: (stt, {"OUT": [t["I1"][0]]}))]))
+    g.add(sink_actor("sink", lambda stt, v: stt))
+    g.connect("src", "tee")
+    g.connect("tee", "same", "O1", "IN")
+    g.connect("tee", "dbl", "O2", "IN")
+    g.connect("same", "join", "OUT", "I1")
+    g.connect("dbl", "join", "OUT", "I2")
+    g.connect("join", "sink")
+    return g
+
+
+def _undersized_diamond_graph(depth=4):
+    """A static diamond whose direct edge is too shallow for the bulk
+    branch's 8-token granularity: split space-blocks on the depth-``depth``
+    direct edge while blk still needs 8 — a sure deadlock (SB102) even
+    though every channel individually admits one firing."""
+    g = ActorGraph("undersized")
+
+    def gen(stt):
+        i = stt.get("i", 0)
+        return ({"i": i + 1}, float(i)) if i < 64 else (stt, None)
+
+    g.add(source_actor("src", gen, has_next=lambda stt: stt.get("i", 0) < 64))
+    g.add(Actor("split", inputs=[Port("IN", "float32")],
+                outputs=[Port("O1", "float32"), Port("O2", "float32")],
+                actions=[Action("dup", consumes={"IN": 1},
+                                produces={"O1": 1, "O2": 1},
+                                fire=lambda stt, t: (stt, {"O1": [t["IN"][0]],
+                                                           "O2": [t["IN"][0]]}))]))
+    g.add(Actor("blk", inputs=[Port("IN", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("b", consumes={"IN": 8}, produces={"OUT": 8},
+                                fire=lambda stt, t: (stt, {"OUT": list(t["IN"])}))]))
+    g.add(Actor("join", inputs=[Port("I1", "float32"), Port("I2", "float32")],
+                outputs=[Port("OUT", "float32")],
+                actions=[Action("j", consumes={"I1": 1, "I2": 1},
+                                produces={"OUT": 1},
+                                fire=lambda stt, t: (stt, {"OUT": [t["I1"][0]]}))]))
+    g.add(sink_actor("sink", lambda stt, v: stt))
+    g.connect("src", "split", "OUT", "IN")
+    g.connect("split", "blk", "O1", "IN")
+    g.connect("split", "join", "O2", "I1", depth=depth)
+    g.connect("blk", "join", "OUT", "I2")
+    g.connect("join", "sink")
+    return g
+
+
+def test_streamcheck_rejects_inconsistent_rates():
+    with pytest.raises(AnalysisError) as ei:
+        repro.compile(_bad_rates_graph(), backend="host")
+    assert "SB101" in ei.value.codes, ei.value.codes
+
+
+def test_streamcheck_rejects_undersized_cycle_fifo():
+    with pytest.raises(AnalysisError) as ei:
+        repro.compile(_undersized_diamond_graph(), backend="host")
+    assert "SB102" in ei.value.codes, ei.value.codes
+
+
+def test_seeded_bad_networks_pass_when_repaired():
+    """The same topologies with the defect removed compile and run clean —
+    the rejection above is the analysis working, not a false positive."""
+    g = _undersized_diamond_graph(depth=16)  # roomy direct edge: no deadlock
+    p = repro.compile(g, backend="host")
+    assert not p.check().has_errors
+    p.run()

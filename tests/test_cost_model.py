@@ -2,7 +2,8 @@
 
 import pytest
 
-from repro.core.cost_model import LinkModel, NetworkProfile, evaluate
+from repro.core.cost_model import LinkModel, evaluate
+
 
 from test_milp import chain_graph, make_profile
 

@@ -3,12 +3,11 @@
 import jax.numpy as jnp
 import pytest
 
-from repro.core.actor import simple_actor, sink_actor, source_actor
-from repro.core.graph import ActorGraph
 from repro.runtime.device_runtime import compile_partition
 from repro.runtime.scheduler import HeteroRuntime, HostRuntime
 
-from helpers import make_chain, make_topfilter, topfilter_expected
+from helpers import make_chain, make_topfilter
+
 
 
 def test_compile_sdf_chain():

@@ -10,7 +10,8 @@ import pytest
 import repro
 from repro.apps.streams import NETWORKS
 from repro.core.cost_model import NetworkProfile, evaluate
-from repro.core.profiler import profile_from_telemetry, profile_host_fused
+from repro.core.profiler import profile_from_telemetry
+
 from repro.core.xcf import make_xcf
 from repro.frontend.program import synthesize_xcf
 from repro.ir.passes import lower

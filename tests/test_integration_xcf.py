@@ -2,9 +2,7 @@
 rules."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.partitioner import best_point, explore
 from repro.core.profiler import profile_device, profile_host
@@ -47,7 +45,8 @@ def test_elastic_remesh_restore(tmp_path):
     different sharding rules (the surviving-pods scenario)."""
     from repro.checkpoint import restore, save
     from repro.configs import get_config
-    from repro.distributed.sharding import full_dp_rules, make_rules
+    from repro.distributed.sharding import full_dp_rules
+
     from repro.launch.mesh import make_test_mesh
     from repro.model import lm
 

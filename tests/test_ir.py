@@ -38,8 +38,8 @@ def test_lower_records_pass_trace():
     names = [n for n, _ in mod.trace]
     assert names == [
         "lower-frontend", "legalize-placement", "eliminate-dead",
-        "infer-fifo-depths", "detect-sdf-regions", "fuse-sdf-regions",
-        "fuse-sdf-host-regions",
+        "infer-fifo-depths", "analyze-rates", "detect-sdf-regions",
+        "streamcheck", "fuse-sdf-regions", "fuse-sdf-host-regions",
     ]
     assert "module chain" in mod.dump_trace("lower-frontend")
     with pytest.raises(KeyError):
@@ -311,8 +311,6 @@ def test_non_convex_sdf_group_not_fused():
     them would put the dynamic actor both upstream and downstream of the
     fused region (a cycle).  The pass must skip the group, and the program
     must still compile and run correctly."""
-    import jax.numpy as jnp
-
     g = ActorGraph("nonconvex")
 
     def gen(st):

@@ -110,7 +110,6 @@ def test_solvers_agree_property(sw, hw, tokens):
 
 
 def test_chain_dp_optimal_vs_bruteforce():
-    import itertools
 
     names = list("abcdef")
     ex = {"a": 3.0, "b": 1.0, "c": 4.0, "d": 1.0, "e": 5.0, "f": 2.0}

@@ -1,7 +1,6 @@
 """Paper §V-C: multi-objective partitioning — minimize T + α·R where R charges
 device resource use.  Sweeping α traces the performance/resource Pareto front."""
 
-import pytest
 
 from repro.core.milp import solve_exact
 

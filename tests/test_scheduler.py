@@ -1,6 +1,5 @@
 """Software runtime: quiescence, thread mappings, profiling, hetero runtime."""
 
-import itertools
 
 import pytest
 from helpers import given, settings, st

@@ -3,7 +3,6 @@ idleness, the HLO analyzer multiplies loop bodies correctly."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.serve import run_serving
