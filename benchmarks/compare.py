@@ -1,0 +1,109 @@
+"""Regression gate: current BENCH_streams.json vs a committed baseline.
+
+Usage (what CI runs after the smoke benchmark step)::
+
+    python -m benchmarks.compare \
+        [current.json] [baseline.json] [--threshold 0.20]
+
+Defaults: ``BENCH_streams.json`` vs
+``benchmarks/baseline/BENCH_streams.smoke.json``.
+
+The gate looks only at **ratio rows** (speedups and amortization factors —
+``us_per_call`` rows are raw wall-clock and far too machine-dependent to
+gate on): a suite fails when a higher-is-better ratio drops more than
+``threshold`` (default 20%) below the committed baseline.  Rows whose name
+marks them lower-is-better or noise-dominated (error fractions, roofline
+fractions) are reported but never gated.  Rows present only on one side are
+reported and skipped — adding a benchmark must not fail the gate.
+
+Exit status: 1 when any gated row regresses, else 0.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, Tuple
+
+DEFAULT_CURRENT = Path("BENCH_streams.json")
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline" / (
+    "BENCH_streams.smoke.json"
+)
+DEFAULT_THRESHOLD = 0.20
+
+# name fragments of ratio rows that are NOT gated: error/accuracy and
+# roofline fractions track fidelity (lower- or target-is-better), and the
+# end-to-end corner wall-clock at smoke scale is jit-compile dominated —
+# run-to-run swings exceed any honest regression threshold
+_UNGATED = ("error", "frac", "worst_fraction", "milp", "hw_vs_single")
+
+
+def _ratio_rows(payload: Dict) -> Iterator[Tuple[str, str, float]]:
+    for suite, data in sorted(payload.get("suites", {}).items()):
+        for row in data.get("rows", []):
+            r = row.get("ratio")
+            if r is not None and r > 0:
+                yield suite, row["name"], float(r)
+
+
+def _gated(name: str) -> bool:
+    return not any(tok in name for tok in _UNGATED)
+
+
+def compare(current: Dict, baseline: Dict, threshold: float) -> int:
+    base = {name: (suite, r) for suite, name, r in _ratio_rows(baseline)}
+    cur = {name: (suite, r) for suite, name, r in _ratio_rows(current)}
+    failures = 0
+    for name in sorted(base):
+        suite, b = base[name]
+        if name not in cur:
+            print(f"MISSING  {name} (baseline {b:.3f}; suite {suite!r} "
+                  f"not in current run — skipped)")
+            continue
+        c = cur[name][1]
+        delta = c / b - 1.0
+        if not _gated(name):
+            print(f"ungated  {name}: {b:.3f} -> {c:.3f} ({delta:+.1%})")
+            continue
+        if c < b * (1.0 - threshold):
+            failures += 1
+            print(f"FAIL     {name}: {b:.3f} -> {c:.3f} ({delta:+.1%}, "
+                  f"allowed -{threshold:.0%})")
+        else:
+            print(f"ok       {name}: {b:.3f} -> {c:.3f} ({delta:+.1%})")
+    for name in sorted(set(cur) - set(base)):
+        print(f"NEW      {name}: {cur[name][1]:.3f} (no baseline — skipped)")
+    if failures:
+        print(f"# {failures} ratio(s) regressed >"
+              f"{threshold:.0%} vs {len(base)} baselined")
+    else:
+        print(f"# no regressions vs {len(base)} baselined ratio(s)")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    threshold = DEFAULT_THRESHOLD
+    if "--threshold" in argv:
+        i = argv.index("--threshold")
+        threshold = float(argv[i + 1])
+        del argv[i:i + 2]
+    current = Path(argv[0]) if len(argv) > 0 else DEFAULT_CURRENT
+    baseline = Path(argv[1]) if len(argv) > 1 else DEFAULT_BASELINE
+    if not current.exists():
+        print(f"current run {current} not found — run benchmarks first")
+        return 1
+    if not baseline.exists():
+        print(f"baseline {baseline} not found — nothing to gate against")
+        return 1
+    failures = compare(
+        json.loads(current.read_text()),
+        json.loads(baseline.read_text()),
+        threshold,
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ Reproduces the paper's qualitative findings: thread-per-actor frequently *hurts*
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict
 
@@ -88,18 +89,37 @@ def main() -> None:
         net, got = builder(size) if name != "FIR32" else builder(n=size)
         tokens = size if name in ("TopFilter", "FIR32") else size * 8
         prog = repro.compile(net, block=BLOCK)
-        row: Dict[str, float] = {}
+        # the hardware corner gives each host-resident IO/rate-conversion
+        # actor its own thread (the device side is unchanged): a hot Deal or
+        # Merge never queues behind another interpreted actor, so its FIFO
+        # work overlaps the device pipeline instead of serializing behind
+        # the source/sink loop
+        n_hosted = sum(
+            1 for a in net.graph().actors.values() if not a.device_ok
+        )
+        placed: Dict[str, object] = {}
         for corner, backend in CORNERS.items():
             try:
-                placed = prog.repartition(backend=backend)
+                placed[corner] = prog.repartition(
+                    backend=backend,
+                    threads=max(1, n_hosted) if corner == "hardware" else None,
+                )
             except FrontendError:  # no device-eligible actors
                 continue
-            r = placed.run()
-            row[corner] = r.seconds
+        # best-of-R, corners interleaved per round: slow drift on a shared
+        # host (CI) hits every corner equally instead of biasing whichever
+        # happened to run last
+        repeats = 1 if os.environ.get("BENCH_SMOKE") else 4
+        row: Dict[str, float] = {}
+        for _ in range(repeats):
+            for corner, p in placed.items():
+                r = p.run()
+                row[corner] = min(row.get(corner, float("inf")), r.seconds)
+        for corner, secs in row.items():
             emit(
                 f"table1/{name}/{corner}",
-                1e6 * r.seconds / tokens,
-                f"tput={tokens / r.seconds:.0f}tok/s produced={len(got)}",
+                1e6 * secs / tokens,
+                f"tput={tokens / secs:.0f}tok/s produced={len(got)}",
             )
         if "hardware" in row and "single" in row:
             emit(

@@ -69,24 +69,28 @@ def run_rate_analysis(module) -> Diagnostics:
     return diags
 
 
-def run_streamcheck(module, block: int = 1024) -> Diagnostics:
+def run_streamcheck(module, block: int = 1024, megastep_k=None) -> Diagnostics:
     """Stage 2: deadlock simulation (SB102), buffer sufficiency (SB103),
-    staging-granule-vs-block (SB104), and the SB2xx lints.  Extends the
-    diagnostics started by :func:`run_rate_analysis` (running it first if
-    needed) and returns the full collection."""
+    staging-granule-vs-block (SB104) + megastep depth sufficiency (SB206),
+    and the SB2xx lints.  Extends the diagnostics started by
+    :func:`run_rate_analysis` (running it first if needed) and returns the
+    full collection.  ``megastep_k`` defaults to the lowered module's
+    ``meta["megastep"]`` target (1 when depth inference has not run)."""
     diags = module.meta.get("diagnostics")
     if diags is None:
         diags = run_rate_analysis(module)
+    if megastep_k is None:
+        megastep_k = module.meta.get("megastep", 1)
     repetition = module.meta.get("repetition")
     diags.extend(check_deadlock(module, repetition))
     diags.extend(check_buffers(module))
-    diags.extend(check_block(module, block))
+    diags.extend(check_block(module, block, megastep_k=megastep_k))
     diags.extend(run_lints(module))
     return diags
 
 
-def check_module(module, block: int = 1024) -> Diagnostics:
+def check_module(module, block: int = 1024, megastep_k=None) -> Diagnostics:
     """Run the full suite from scratch (idempotent: prior findings are
     discarded, not duplicated)."""
     run_rate_analysis(module)
-    return run_streamcheck(module, block=block)
+    return run_streamcheck(module, block=block, megastep_k=megastep_k)

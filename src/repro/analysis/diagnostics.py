@@ -51,6 +51,7 @@ CODES: Dict[str, str] = {
     "SB203": "chatty device partition boundary",
     "SB204": "unbounded backlog channel (consumer never drains the port)",
     "SB205": "sinkless network never quiesces",
+    "SB206": "crossing FIFO too shallow for the megastep target (k clamps)",
 }
 
 ERROR = "error"

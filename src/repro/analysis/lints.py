@@ -25,6 +25,9 @@ networks and placements):
   SB205  a sinkless network: quiescence is defined by sinks draining the
          sources; with no sink the quiescence run-loop never terminates on
          its own (only ``max_rounds``/``max_seconds`` stop it).
+  SB206  a crossing FIFO too shallow for the megastep target: the device
+         runtime clamps k per partition to ``depth // (2*block)``, so the
+         placement runs with less boundary amortization than requested.
 """
 
 from __future__ import annotations
@@ -97,10 +100,20 @@ def _region_granules(module, region) -> Dict[str, int]:
     return granules
 
 
-def check_block(module, block: int) -> Diagnostics:
-    """SB104: every device staging granule must fit in one transfer block."""
+def check_block(module, block: int, megastep_k: int = 1) -> Diagnostics:
+    """SB104: every device staging granule must fit in one transfer block —
+    a megastep launch stages k blocks, but each *chunk* of the stack is
+    still one block, so the quantum bound is unchanged by k.
+
+    SB206 (warning): a crossing FIFO shallower than ``2*k*block`` cannot
+    absorb a pipelined megastep launch at the requested k — the device
+    runtime clamps k down per partition (``resolve_megastep_k``), so the
+    placement still runs, just with less boundary amortization than asked
+    for.  Depth inference sizes crossing channels for k; this fires only
+    for XCF-pinned or hand-set shallower depths."""
     diags = Diagnostics(origins=_module_origins(module))
     for region in module.hw_regions():
+        members = set(region.actors) & set(module.actors)
         for ch_name, granule in sorted(_region_granules(module, region).items()):
             if granule > block:
                 diags.error(
@@ -114,6 +127,25 @@ def check_block(module, block: int) -> Diagnostics:
                     actors=tuple(sorted(region.actors)),
                     channels=(ch_name,),
                 )
+        if megastep_k > 1 and members:
+            for ch in module.channels:
+                if (ch.src in members) == (ch.dst in members):
+                    continue
+                depth = ch.resolved_depth
+                need = 2 * megastep_k * block
+                if depth is not None and depth < need:
+                    eff = max(1, depth // (2 * block))
+                    diags.warn(
+                        "SB206",
+                        f"crossing channel {ch} has depth {depth} but the "
+                        f"megastep target k={megastep_k} needs "
+                        f"{need} (= 2*k*block) to keep a pipelined launch "
+                        f"in flight — the runtime clamps this partition to "
+                        f"k={eff}; deepen the FIFO (or drop the megastep "
+                        f"target) to restore the amortization",
+                        actors=(ch.src, ch.dst),
+                        channels=(ch,),
+                    )
     return diags
 
 

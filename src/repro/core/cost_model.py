@@ -103,6 +103,11 @@ class NetworkProfile:
     # Physical cores available: threads beyond this serialize (the paper pins
     # threads to dedicated cores and never exceeds them; the DSE must know).
     n_cores: Optional[int] = None
+    # Device megastep target: repetition-vector iterations per launch.  The
+    # PLink lane terms in eq. (4)/(5) amortize the per-launch boundary cost
+    # over k·b-token staged transfers (one launch moves k buffers' worth),
+    # so `explore()` prices megastep placements at their real boundary tax.
+    megastep_k: int = 1
 
     def exec_time(self, actor: str, partition: str, accel) -> float:
         accels = {accel} if isinstance(accel, str) else set(accel)
@@ -159,6 +164,7 @@ def evaluate(
     *,
     accel="accel",  # str | Iterable[str]: accelerator partition id(s)
     plink_thread: Optional[str] = None,
+    megastep_k: Optional[int] = None,
 ) -> Dict[str, float]:
     """Predicted execution time for one partitioning (the MILP objective).
 
@@ -192,7 +198,13 @@ def evaluate(
                 else prof.exec_time(a, p, accels)
             )
 
-    # (2) + (5): one PLink lane per accelerator partition
+    # (2) + (5): one PLink lane per accelerator partition.  A megastep
+    # launch stages/retires k buffers' worth of tokens per boundary
+    # round-trip, so τ's effective buffer is k·b — the per-launch latency
+    # term ξ's fixed cost amortizes over k iterations.
+    k_mega = max(
+        1, prof.megastep_k if megastep_k is None else int(megastep_k)
+    )
     T_lane: Dict[str, float] = {}
     link = prof.links["plink"]
     for apid in used_accels:
@@ -206,7 +218,7 @@ def evaluate(
         for ch in graph.channels:
             key = ch.key
             n = prof.tokens.get(key, 0)
-            b = prof.buffers.get(key, prof.default_buffer)
+            b = prof.buffers.get(key, prof.default_buffer) * k_mega
             s_hw = assignment[ch.src] == apid
             t_hw_side = assignment[ch.dst] == apid
             if t_hw_side and not s_hw:

@@ -17,10 +17,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 
 from repro.core.cost_model import (
-    DEFAULT_LINKS,
     LinkModel,
     NetworkProfile,
-    evaluate,
     lm_layer_profile,
 )
 from repro.core.graph import ActorGraph, GraphError
@@ -61,6 +59,7 @@ def explore(
     alpha: float = 0.0,
     accel: str = "accel",
     accel_capacity: Optional[int] = None,
+    megastep_k: Optional[int] = None,
 ) -> List[DesignPoint]:
     """Sweep thread counts × accelerator-partition counts, solve the MILP at
     each point, emit legalized XCFs.
@@ -69,8 +68,13 @@ def explore(
     0, ``True`` → 1, any int k → k device partitions named ``accel0..``).
     ``accel_capacity`` bounds the actors per device partition (the
     per-accelerator resource term) — what makes a k-way split win over one
-    overfull partition.
+    overfull partition.  ``megastep_k`` overrides ``prof.megastep_k`` — the
+    launches-amortization factor the evaluator's PLink terms divide the
+    boundary latency by (``Program.explore`` sets it from its compile
+    options).
     """
+    if megastep_k is not None:
+        prof.megastep_k = max(1, int(megastep_k))
     points: List[DesignPoint] = []
     any_device = any(a.device_ok for a in graph)
     for n in thread_counts:

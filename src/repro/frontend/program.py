@@ -61,7 +61,9 @@ def synthesize_xcf(
     ``threads`` — round-robin over ``threads`` software threads (default: one
                   thread per actor, the paper's "many" corner),
     ``device``  — every device-eligible actor on the accelerator partition,
-                  IO/host-only actors on one software thread.
+                  IO/host-only actors round-robin over ``threads`` software
+                  threads (default one) so host-side rate conversion can
+                  overlap the device pipeline.
     """
     if backend == "host":
         assignment = {a: "t0" for a in graph.actors}
@@ -80,8 +82,14 @@ def synthesize_xcf(
                 f"backend='device': no device-eligible actors in "
                 f"{graph.name!r} ({reasons})"
             )
+        n = 1 if threads is None else max(1, threads)
+        hosted = [
+            a for a in graph.topo_order()
+            if not graph.actors[a].device_ok
+        ]
+        thread_of = {a: f"t{i % n}" for i, a in enumerate(hosted)}
         assignment = {
-            a: (accel if act.device_ok else "t0")
+            a: (accel if act.device_ok else thread_of[a])
             for a, act in graph.actors.items()
         }
     else:
@@ -153,6 +161,7 @@ class Program:
         fuse: bool = True,
         opt_level: int = 1,
         check: object = True,
+        megastep: object = "auto",
     ):
         self._source = source
         self._graph = graph
@@ -165,6 +174,7 @@ class Program:
             fuse=fuse,
             opt_level=opt_level,
             check=check,
+            megastep=megastep,
         )
         # The middle-end: every placement check, depth resolution, and fusion
         # decision happens here, once per (graph, xcf, opts) triple.
@@ -176,6 +186,7 @@ class Program:
             fuse=fuse,
             opt_level=opt_level,
             check=check,
+            megastep=megastep,
         )
         # jitted device partitions, built lazily and reused across run()
         # calls (the (graph, xcf, opts) triple is fixed for this Program's
@@ -463,6 +474,11 @@ class Program:
 
         if prof is None:
             prof = self.profile()
+        # price megasteps: the plink boundary cost in eq. (4) amortizes over
+        # k repetition-vector iterations per launch
+        from repro.ir.passes import resolve_megastep
+
+        prof.megastep_k = resolve_megastep(self._opts.get("megastep", "auto"))
         return _explore(
             self._graph, prof,
             thread_counts=thread_counts, accel_options=accel_options,
@@ -483,6 +499,7 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
     fuse: bool = True,
     opt_level: int = 1,
     check: object = True,
+    megastep: object = "auto",
 ) -> Program:
     """Compile a dataflow network into an executable ``Program``.
 
@@ -502,6 +519,12 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
     at compile time with an ``AnalysisError`` carrying stable ``SB###``
     codes; ``"warn"`` collects findings without rejecting
     (``Program.check()`` returns them); False skips analysis.
+
+    ``megastep`` sets the device megastep target — repetition-vector
+    iterations per device launch (see docs/runtime.md): ``"auto"`` (default)
+    uses the built-in target, an int pins it, ``False``/``None``/``1``
+    disables megasteps (one block per launch).  The effective per-partition
+    k is clamped by FIFO depths and statefulness at device compile time.
     """
     graph = _as_graph(net)
     if xcf is not None:
@@ -526,4 +549,5 @@ def compile(  # noqa: A001 - deliberate façade name: repro.compile(...)
         fuse=fuse,
         opt_level=opt_level,
         check=check,
+        megastep=megastep,
     )

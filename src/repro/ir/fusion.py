@@ -404,6 +404,11 @@ def build_fused(
         device_ok=True,
         vector_fire=vf,
     )
+    if codegen == "pallas":
+        # expose the StreamProgram on the actor impl: the device runtime's
+        # flat-megastep gate reads it to size (k, block) chunk stacks against
+        # the program's block_unit
+        actor.stream_program = program
     return FusedBuild(
         actor=actor,
         codegen=codegen,

@@ -69,7 +69,33 @@ __all__ = [
     "lower",
     "legalize_xcf",
     "device_dtype_ok",
+    "resolve_megastep",
+    "DEFAULT_MEGASTEP_K",
 ]
+
+# How many repetition-vector iterations one device launch covers when the
+# user asks for ``megastep="auto"``.  Four keeps the staged burst (2*k*block
+# tokens of crossing-FIFO headroom) modest while amortizing the per-launch
+# stage/dispatch/sync/retire boundary cost 4x — the runtime clamps further
+# per partition (FIFO depths, statefulness); see
+# ``runtime.device_runtime.compile_partition``.
+DEFAULT_MEGASTEP_K = 4
+
+
+def resolve_megastep(megastep) -> int:
+    """Resolve a ``megastep`` option to a target chunk count.
+
+    ``"auto"`` -> ``DEFAULT_MEGASTEP_K``; ``False``/``None`` -> 1 (one
+    repetition-vector block per launch, the pre-megastep behavior); an int
+    is taken literally (floored at 1).  An int already resolved by a prior
+    call passes through unchanged, so the value stored in
+    ``module.meta["megastep"]`` can be re-resolved safely.
+    """
+    if megastep is None or megastep is False:
+        return 1
+    if megastep == "auto":
+        return DEFAULT_MEGASTEP_K
+    return max(1, int(megastep))
 
 
 @dataclass
@@ -82,6 +108,12 @@ class PassContext:
     block: int = 1024
     fuse: bool = True
     opt_level: int = 1  # 2 adds algebraic folding (not bit-preserving)
+    # megastep policy: "auto" (default) targets DEFAULT_MEGASTEP_K
+    # repetition-vector iterations per device launch, False/1 disables,
+    # an int pins the target.  Depth inference sizes crossing FIFOs for it
+    # and the resolved target lands in ``meta["megastep"]``; the device
+    # backend clamps per partition.
+    megastep: object = "auto"
     # streamcheck policy: True/"error" rejects error-severity findings with
     # AnalysisError, "warn" collects them in meta["diagnostics"] without
     # rejecting, False skips the analysis passes entirely
@@ -292,8 +324,10 @@ class InferFifoDepths(Pass):
 
     Priority: XCF-pinned > authored > inferred.  Inference is rate- and
     boundary-aware: a channel crossing the device partition needs room for
-    two in-flight PLink blocks (double buffering), and a multi-rate edge
-    needs at least a couple of firings' worth of tokens.
+    two in-flight PLink *launches* — each covering up to ``megastep`` blocks
+    (``meta["megastep"]``, the resolved chunk count per launch) — so staging
+    launch N+1 can overlap launch N's dispatch without the FIFO wedging; a
+    multi-rate edge needs at least a couple of firings' worth of tokens.
     """
 
     name = "infer-fifo-depths"
@@ -301,6 +335,8 @@ class InferFifoDepths(Pass):
     def run(self, module: IRModule, ctx: PassContext) -> IRModule:
         pinned = ctx.xcf.fifo_depths() if ctx.xcf is not None else {}
         hw_of = module.hw_assignment()
+        k = resolve_megastep(ctx.megastep)
+        module.meta["megastep"] = k
         for ch in module.channels:
             ch.xcf_depth = pinned.get(ch.key)
             rate = max(
@@ -310,13 +346,14 @@ class InferFifoDepths(Pass):
             )
             # a channel crossing *any* device boundary — host<->hw or
             # hw<->hw between two different partitions — stages whole PLink
-            # blocks and needs room for two of them (double buffering)
+            # launches of k blocks each and needs room for two of them
+            # (double buffering, now megastep-sized)
             crossing = (
                 (ch.src in hw_of or ch.dst in hw_of)
                 and hw_of.get(ch.src) != hw_of.get(ch.dst)
             )
             if crossing:
-                ch.inferred_depth = max(ctx.default_depth, 2 * ctx.block)
+                ch.inferred_depth = max(ctx.default_depth, 2 * k * ctx.block)
             else:
                 ch.inferred_depth = max(ctx.default_depth, 2 * rate)
         return module
@@ -614,6 +651,7 @@ def lower(
     fuse: bool = True,
     opt_level: int = 1,
     check: object = True,
+    megastep: object = "auto",
 ) -> IRModule:
     """Lower a network/graph (+ optional XCF placement) through the default
     pipeline.  This is the only road from authored graphs to the backends.
@@ -622,6 +660,11 @@ def lower(
     with error-severity findings (``AnalysisError``, a ``GraphError``),
     "warn" collects findings in ``meta["diagnostics"]`` without rejecting,
     False skips the analysis passes.
+
+    ``megastep`` sets how many repetition-vector iterations one device
+    launch covers ("auto"/int/False — see ``resolve_megastep``): crossing
+    FIFO depths are sized for it here and the device backend reads the
+    resolved target from ``meta["megastep"]``.
     """
     ctx = PassContext(
         graph=_as_graph(src),
@@ -631,6 +674,7 @@ def lower(
         fuse=fuse,
         opt_level=opt_level,
         check=check,
+        megastep=megastep,
     )
     return default_pipeline().run(ctx)
 

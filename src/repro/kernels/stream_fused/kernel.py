@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.stream_fused.ops import block_unit as _block_unit
 from repro.kernels.stream_fused.ref import apply_op
 
 
@@ -58,18 +59,6 @@ def _stream_kernel(x_ref, *rest, program):
             )
     for j, r in enumerate(program.outputs):
         o_ref[j, :] = regs[r]
-
-
-def _block_unit(program) -> int:
-    """Token granule a tile must be a multiple of so no block op (matmul8's
-    8-blocks, perm's P-blocks) ever straddles a tile edge."""
-    import math
-
-    units = [8]
-    for op in program.ops:
-        if op.kind == "perm":
-            units.append(len(op.params[0]))
-    return math.lcm(*units)
 
 
 def _tile(n: int, unit: int = 8, want: int = 512) -> int:

@@ -52,6 +52,23 @@ class StreamProgram:
         return f"stream({self.n_inputs} in, {self.n_regs} regs): {body} -> {outs}"
 
 
+def block_unit(program: StreamProgram) -> int:
+    """Token granule a tile (or a megastep chunk) must be a multiple of so
+    no block transform — ``matmul8``'s 8-blocks, ``perm``'s P-blocks — ever
+    straddles an edge.  The Pallas kernel sizes its grid tiles with this,
+    and the device runtime uses it to gate the *flat* megastep: a
+    ``(k, block)`` chunk stack may flatten into one ``k*block``-token launch
+    only when ``block % block_unit == 0``, which keeps every chunk's block
+    transforms whole and therefore bit-identical to k separate launches."""
+    import math
+
+    units = [8]
+    for op in program.ops:
+        if op.kind == "perm":
+            units.append(len(op.params[0]))
+    return math.lcm(*units)
+
+
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 

@@ -81,9 +81,11 @@ def fused_stream_ref(inputs: Sequence[jax.Array], program) -> List[jax.Array]:
     in the program's declared output order.
 
     Inputs may be ``(N,)`` wires or ``(B, N)`` batched wires (one row per
-    server session): every op is elementwise over the token axis except
-    ``matmul8``, whose 8-blocks never straddle a row when ``N % 8 == 0``, so
-    each row of the batched result is bit-identical to the row run alone.
+    server session, or one row per megastep *chunk* — the ``(k, block)``
+    stacks the flat megastep feeds through): every op is elementwise over the
+    token axis except ``matmul8``, whose 8-blocks never straddle a row when
+    ``N % 8 == 0``, so each row of the batched result is bit-identical to the
+    row run alone.
     """
     regs: List[jax.Array] = [None] * program.n_regs
     for i, x in enumerate(inputs):

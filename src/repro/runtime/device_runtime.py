@@ -18,6 +18,19 @@ emit a validity mask; tokens flow between in-partition actors as
 program.  The step also returns an ``idle`` flag — hardware idleness
 detection (§III-B): the host (PLink) never polls internal state, it just
 reads the flag.
+
+Megasteps: ``megastep`` runs ``megastep_k`` blocks ("chunks") per launch so
+the host↔device boundary cost — stage, dispatch, sync, retire — is paid once
+per k repetition-vector iterations instead of once per iteration.  Inputs
+arrive as ``(k, block)`` stacks; on the generic path a ``lax.scan`` threads
+the chunks through ``raw_step`` sequentially (bit-identical to k separate
+launches by construction), and when every member is a fused Pallas stream
+region the whole stack runs as ONE flat multi-iteration grid launch over
+``k*block`` tokens (``flat_megastep`` — the stream kernel's token axis is
+shape-polymorphic and its block transforms never straddle a chunk edge).
+Actor state never round-trips to host between launches: the jitted entry
+points donate the state argument, and PLink chains each launch off the
+previous launch's state *future*.
 """
 
 from __future__ import annotations
@@ -62,7 +75,31 @@ class DeviceProgram:
     partition: str = ""
     pe: str = ""
     device: Any = None
+    # megastep: chunks (repetition-vector blocks) per launch.  k == 1 means
+    # the classic one-block step; k > 1 means ``megastep``/``raw_megastep``
+    # accept ``(k, block)`` input stacks and return ``(k, block)`` outputs.
+    megastep_k: int = 1
+    # True when the megastep lowers to ONE flat (k*block,)-token launch
+    # (every member a fused Pallas stream region) instead of a k-chunk scan
+    flat_megastep: bool = False
+    # whether the jitted entry points donate the state argument (state stays
+    # device-resident across launches; callers must never reuse a donated
+    # state tree)
+    donate: bool = True
+    # the untraced megastep — what batched_megastep vmaps over
+    raw_megastep: Callable = None
+    # jitted megastep: (state, {in: (vals (k,block), mask (k,block))}) ->
+    # (state', {out: (k,block)...}, idle); donates state like ``step``
+    megastep: Callable = None
     _batched: Dict[str, Callable] = field(default_factory=dict, repr=False)
+
+    def launch(self, state, inputs):
+        """Dispatch one launch: the megastep when this program has one
+        (``megastep_k > 1`` — inputs are ``(k, block)`` stacks), else the
+        classic one-block ``step``.  Both donate ``state``."""
+        if self.megastep_k > 1:
+            return self.megastep(state, inputs)
+        return self.step(state, inputs)
 
     def batched_step(self, batch: int) -> Callable:
         """One jitted launch stepping ``batch`` independent session lanes.
@@ -86,6 +123,19 @@ class DeviceProgram:
                 jax.vmap(self.raw_step, in_axes=(0, 0))
             )
         return self._batched["vmap"]
+
+    def batched_megastep(self, batch: int) -> Callable:
+        """``batched_step`` for megastep programs: one jitted launch running
+        ``batch`` lanes of ``(k, block)`` chunk stacks — lane *i* bit-
+        identical to an unbatched ``megastep`` over lane *i*."""
+        assert self.raw_megastep is not None, (
+            f"{self.name}: program compiled without a megastep"
+        )
+        if "vmap_mega" not in self._batched:
+            self._batched["vmap_mega"] = jax.jit(
+                jax.vmap(self.raw_megastep, in_axes=(0, 0))
+            )
+        return self._batched["vmap_mega"]
 
     def batched_init_state(self, batch: int) -> Dict[str, Any]:
         """``init_state`` broadcast to ``batch`` lanes."""
@@ -260,6 +310,49 @@ def _lower_legacy(graph: ActorGraph, names: Sequence[str]) -> IRModule:
     return lower(graph, make_xcf(graph.name, assignment), fuse=False)
 
 
+def resolve_megastep_k(
+    module: IRModule,
+    sub,
+    init_state: Dict[str, Any],
+    in_ports,
+    block: int,
+    megastep,
+) -> int:
+    """Clamp the requested megastep target to what one partition supports.
+
+    A launch of k chunks stages up to ``k*block`` tokens per boundary port
+    and may retire as many, and PLink keeps a second launch in flight while
+    the first computes — every crossing FIFO must absorb ``2*k*block``
+    tokens, so k is floored to ``depth // (2*block)`` over the partition's
+    boundary channels (depth inference sizes them for the requested k; an
+    XCF-pinned shallower depth clamps here, flagged by the SB206 lint).
+    Stateful partitions are clamped to 1: the block scan that vectorizes a
+    stateful actor advances its state over *padding* positions too, so only
+    all-stateless partitions (fused stream regions, stateless vector fires)
+    keep megastep ≡ per-iteration bitwise on ragged tails.  Partitions with
+    no boundary inputs (on-device sources) have no staged work to amortize
+    and also stay at 1.
+    """
+    from repro.ir.passes import resolve_megastep
+
+    if megastep is None:
+        megastep = module.meta.get("megastep", 1)
+    k = resolve_megastep(megastep)
+    if k <= 1:
+        return 1
+    if not in_ports:
+        return 1
+    if any(s for s in init_state.values()):
+        return 1
+    for ch in module.channels:
+        if (ch.src in sub) == (ch.dst in sub):
+            continue
+        depth = ch.resolved_depth
+        if depth:
+            k = min(k, max(1, depth // (2 * block)))
+    return max(1, k)
+
+
 def compile_partition(
     src,
     actor_names: Optional[Sequence[str]] = None,
@@ -270,6 +363,7 @@ def compile_partition(
     donate: bool = True,
     partition: Optional[str] = None,
     device: Any = None,
+    megastep=None,
 ) -> DeviceProgram:
     """Compile one hw region of ``src`` into one jitted step.
 
@@ -279,7 +373,9 @@ def compile_partition(
     ``partition`` selects a region by id when the module has several hw
     regions (``compile_hw_partitions`` builds them all); ``device``
     overrides the JAX device binding otherwise resolved from the region's
-    ``pe`` string.
+    ``pe`` string.  ``megastep`` overrides the lowered module's
+    ``meta["megastep"]`` chunks-per-launch target; either way the effective
+    ``megastep_k`` is clamped per partition (``resolve_megastep_k``).
     """
     pe = ""
     if isinstance(src, IRModule):
@@ -371,7 +467,7 @@ def compile_partition(
     if device is not None:
         # Commit the state to the partition's device: jit then compiles (and
         # keeps, via donation) the whole step there, and staged inputs follow
-        # through PLink's device_put.  This is the sub-mesh binding from
+        # the committed state's placement.  This is the sub-mesh binding from
         # ``PartitionSpec.pe`` — on a single-device host every partition
         # resolves to that device and the binding is a no-op.
         init_state = jax.device_put(init_state, device)
@@ -383,6 +479,48 @@ def compile_partition(
             f"{name}: block={block} is smaller than the staging quantum of "
             f"{too_small} — a whole region iteration must fit in one staged "
             f"block; raise block= to at least the largest quantum"
+        )
+
+    megastep_k = resolve_megastep_k(
+        module, sub, init_state, in_ports, block, megastep
+    )
+    flat = False
+    raw_megastep = jitted_megastep = None
+    if megastep_k > 1:
+        # Flat path: when every member is a fused Pallas stream region the
+        # step body is shape-polymorphic over the token axis (fused_stream
+        # flattens a (k, block) stack into one k*block-token grid launch),
+        # so the megastep is literally ONE kernel launch with a k×-larger
+        # grid — provided no block transform (matmul8 8-blocks, perm
+        # P-blocks) straddles a chunk edge, i.e. block % block_unit == 0.
+        from repro.kernels.stream_fused.ops import block_unit
+
+        def _flat_ok(a: str) -> bool:
+            prog_obj = getattr(impls[a], "stream_program", None)
+            return (
+                module.actors[a].codegen == "pallas"
+                and prog_obj is not None
+                and block % block_unit(prog_obj) == 0
+            )
+
+        flat = all(_flat_ok(a) for a in names)
+
+        if flat:
+            raw_megastep = step  # shape-polymorphic: (k, block) in, one launch
+        else:
+            def raw_megastep(state, inputs):
+                """Scan ``raw_step`` over the k chunks — bit-identical to k
+                sequential launches (same state threading, same per-chunk
+                masks), with the boundary paid once."""
+                def body(st, chunk):
+                    st, outs, idle = step(st, chunk)
+                    return st, (outs, idle)
+
+                state, (outs, idles) = jax.lax.scan(body, state, inputs)
+                return state, outs, jnp.all(idles)
+
+        jitted_megastep = jax.jit(
+            raw_megastep, donate_argnums=(0,) if donate else ()
         )
     return DeviceProgram(
         name=name,
@@ -403,6 +541,11 @@ def compile_partition(
         partition=partition or name,
         pe=pe,
         device=device,
+        megastep_k=megastep_k,
+        flat_megastep=flat,
+        donate=donate,
+        raw_megastep=raw_megastep,
+        megastep=jitted_megastep,
     )
 
 
@@ -411,14 +554,17 @@ def compile_hw_partitions(
     *,
     block: int = 1024,
     donate: bool = True,
+    megastep=None,
 ) -> Dict[str, "DeviceProgram"]:
     """Compile every hw region of a lowered module — one independently
     jitted ``DeviceProgram`` per device partition, each bound to the JAX
     device its ``PartitionSpec.pe`` resolves to.  Returns ``{partition id:
-    program}`` in stable order."""
+    program}`` in stable order.  ``megastep`` defaults to the module's
+    lowered ``meta["megastep"]`` target."""
     return {
         r.id: compile_partition(
-            module, block=block, donate=donate, partition=r.id
+            module, block=block, donate=donate, partition=r.id,
+            megastep=megastep,
         )
         for r in module.hw_regions()
         if r.actors  # an empty hw partition has nothing to compile

@@ -10,23 +10,36 @@ out-of-order queue; the returned arrays are futures/events),
 PLink is itself an actor on a host thread and never blocks it: if the in-flight
 step has not completed (``is_ready`` false), PLink simply yields so other actors
 on its thread keep working — the paper's non-blocking OpenCL event design.
-Double buffering: one step can be in flight while the next block is staged.
+
+DMA/compute overlap: staging packs into a ring of preallocated host buffers
+(``_N_SLOTS`` quad-buffering — the packing of launch N+1 reuses a slot whose
+launch has long retired, never one still feeding an async dispatch), and up to
+``_MAX_INFLIGHT`` launches stay in flight while the next block is packed — the
+host-side ``np`` packing of block N+1 genuinely overlaps the device compute of
+block N.  Device state never round-trips: each launch is chained off the
+previous launch's *state future* (``self.state`` is updated at dispatch time,
+not at retirement), the jitted entry donates it, and retirement pulls only the
+boundary outputs and the idle flag back to host.  With a megastep program
+(``megastep_k > 1``) each launch carries a ``(k, block)`` chunk stack, so the
+whole stage→dispatch→sync→retire boundary round-trip is paid once per k
+repetition-vector iterations.
 """
 
 from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Deque, Dict, Tuple
 
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.device_runtime import DeviceProgram
+from repro.runtime.fifo import ArrayFifo
 
 try:
     from ml_dtypes import bfloat16 as _BF16
@@ -100,9 +113,26 @@ class PLinkStats:
     tokens_in: int = 0
     tokens_out: int = 0
     idle_signals: int = 0
+    # boundary wall-time split (per launch, summed): host-side packing into
+    # the staging ring, the async dispatch enqueue, readiness polling on the
+    # in-flight results, and the masked write-back into host FIFOs
+    stage_ns: int = 0
+    dispatch_ns: int = 0
+    sync_ns: int = 0
+    retire_ns: int = 0
+    # legacy aggregates (stage+dispatch / sync+retire) — benchmark compat
     h2d_ns: int = 0
     d2h_ns: int = 0
     tests: int = 0  # scheduler profiling contract
+
+
+# Staging ring depth and in-flight launch cap.  _N_SLOTS > _MAX_INFLIGHT + 1
+# guarantees the slot being packed is never one a still-in-flight launch may
+# read (the jit argument path can alias the numpy staging buffer zero-copy
+# on CPU):
+# the busy-slot skip in ``_stage_inputs`` enforces it structurally.
+_N_SLOTS = 4
+_MAX_INFLIGHT = 2
 
 
 class PLink:
@@ -118,13 +148,32 @@ class PLink:
         self.name = name
         self.state = program.init_state
         self.stats = PLinkStats()
-        self.inflight: Optional[Tuple[Any, Dict, Any]] = None  # (state', outs, idle)
+        self.k = max(1, program.megastep_k)
+        # in-flight launches, oldest first: (outs, idle, n_in, slot).  The
+        # state future is NOT kept here — it was chained (and donated) into
+        # the next launch at dispatch time, so readiness polling must never
+        # touch it: its buffer may already be consumed.
+        self.inflight: Deque[Tuple[Dict, Any, int, int]] = deque()
         self.pending_valid: Dict[str, int] = {}
         self.terminated = False
         self.device_idle = False
         # minimal Actor-duck for the scheduler
         self.actor = type("A", (), {"name": name})()
         self.stats_tests = 0
+        # preallocated staging ring: per slot, per boundary port, one
+        # (k, block) value buffer + mask reused across launches
+        shape = (self.k, program.block)
+        self._slots = [
+            {
+                f"{a}.{p}": (
+                    np.zeros(shape, _np_dtype(dt)),
+                    np.zeros(shape, bool),
+                )
+                for (a, p, dt) in program.in_ports
+            }
+            for _ in range(_N_SLOTS)
+        ]
+        self._slot = 0
 
     # -- helpers ---------------------------------------------------------------
     def _plan(self) -> Dict[str, int]:
@@ -147,48 +196,119 @@ class PLink:
         return plan
 
     def _stage_inputs(self):
-        """Drain host FIFOs into one device block per port."""
-        block = self.program.block
-        device = self.program.device
-        put = (
-            jnp.asarray if device is None
-            else (lambda a: jax.device_put(a, device))
-        )
-        plan = self._plan()
-        staged = {}
-        total = 0
-        for (a, p, dt) in self.program.in_ports:
-            key = f"{a}.{p}"
-            n = plan.get(key, 0)
-            arr = np.zeros((block,), _np_dtype(dt))
-            mask = np.zeros((block,), bool)
-            if n:
-                arr[:n] = np.asarray(
-                    self.env.inputs[key].read(n), dtype=arr.dtype
-                )
-                mask[:n] = True
-            staged[key] = (put(arr), put(mask))
-            total += n
-        return staged, total
+        """Drain host FIFOs into the next free staging-ring slot.
 
-    def _retire(self, result) -> int:
-        state, outs, idle = result
-        self.state = state
+        One ``(k, block)`` chunk stack per boundary port (a plain
+        ``(block,)`` row when ``k == 1``), packed into *preallocated* reused
+        buffers — no per-launch allocation churn.  Chunks are planned one at
+        a time (``_plan`` re-runs between rows), which drains the FIFOs in
+        exactly the order k sequential one-block launches would; every
+        position not written this launch is zeroed with its mask False, so a
+        reused buffer can never leak a previous launch's tokens into the
+        padding a stateful scan walks over.  Bulk drains go through the
+        FIFO's low-copy ``peek_view``/``commit`` window when the ring
+        storage is contiguous, falling back to ``read``.
+        """
+        device = self.program.device
+        # Only a non-default device needs an explicit transfer: the jitted
+        # step's committed state pins placement, so uncommitted numpy slot
+        # buffers ride the jit argument fast path (~5x cheaper than a
+        # device_put round per launch on this backend).  The staging ring's
+        # busy-slot discipline makes that safe — a slot is never rewritten
+        # while its launch is still in flight, so even a zero-copy alias of
+        # the numpy buffer is stable until the launch retires.
+        put = (
+            None if device is None or device is jax.devices()[0]
+            else (lambda tree: jax.device_put(tree, device))
+        )
+        t0 = time.perf_counter_ns()
+        busy = {s for (_o, _i, _n, s) in self.inflight}
+        idx = self._slot
+        while idx in busy:
+            idx = (idx + 1) % _N_SLOTS
+        slot = self._slots[idx]
+        total = 0
+        for j in range(self.k):
+            plan = self._plan()
+            any_n = False
+            for (a, p, _dt) in self.program.in_ports:
+                key = f"{a}.{p}"
+                arr, mask = slot[key]
+                n = plan.get(key, 0)
+                if n:
+                    any_n = True
+                    ep = self.env.inputs[key]
+                    view = (
+                        ep.peek_view(n)
+                        if hasattr(ep, "peek_view") else None
+                    )
+                    if view is not None:
+                        arr[j, :n] = np.asarray(view, dtype=arr.dtype)
+                        ep.commit(n)
+                    else:
+                        arr[j, :n] = np.asarray(ep.read(n), dtype=arr.dtype)
+                arr[j, n:] = 0
+                mask[j, :n] = True
+                mask[j, n:] = False
+                total += n
+            if not any_n and j + 1 < self.k:
+                # out of stageable granules: the remaining chunks are pure
+                # padding (zero values, all-False masks) — static (k, block)
+                # shapes mean one jit trace serves every fill level
+                for arr, mask in slot.values():
+                    arr[j + 1:] = 0
+                    mask[j + 1:] = False
+                break
+        staged = {}
+        for (a, p, _dt) in self.program.in_ports:
+            key = f"{a}.{p}"
+            arr, mask = slot[key]
+            if self.k == 1:
+                staged[key] = (arr[0], mask[0])
+            else:
+                staged[key] = (arr, mask)
+        # one batched transfer for the whole pytree when a transfer is
+        # needed at all: per-leaf dispatches collapse into a single call —
+        # the fixed dispatch cost dominates at block scale, and on a
+        # GIL-bound host every µs the PLink thread spends dispatching is
+        # stolen from the interpreted actors
+        if put is not None:
+            staged = put(staged)
+        dt_ns = time.perf_counter_ns() - t0
+        self.stats.stage_ns += dt_ns
+        self.stats.h2d_ns += dt_ns
+        return staged, total, idx
+
+    def _retire(self, outs, idle) -> int:
+        """Pull one completed launch's *boundary* outputs back to host —
+        never internal FIFO or actor state, which stays device-resident."""
         t0 = time.perf_counter_ns()
         moved = 0
+        # one batched D2H pull for every output leaf instead of a sync
+        # transfer per port
+        outs = jax.device_get(outs)
         for key, (vals, mask) in outs.items():
-            vals = np.asarray(vals)
-            mask = np.asarray(mask)
+            # (k, block) boolean indexing flattens row-major = chunk order,
+            # so megastep outputs retire in exactly per-iteration order
             keep = vals[mask]
             if keep.size:
-                # the endpoint decides the storage: a RingFifo boxes host
-                # tokens, a device->device ArrayFifo queues the array itself
-                self.env.outputs[key].write(keep)
+                # the endpoint decides the storage: a device->device
+                # ArrayFifo queues the array itself; a RingFifo carries host
+                # tokens, boxed via tolist() — native Python floats, not
+                # numpy scalars, so downstream interpreted actors do native
+                # arithmetic instead of paying ~10x per-token on np.float32
+                ep = self.env.outputs[key]
+                if isinstance(getattr(ep, "fifo", None), ArrayFifo):
+                    ep.write(keep)
+                else:
+                    ep.write(keep.tolist())
                 moved += int(keep.size)
         self.device_idle = bool(idle)
         if self.device_idle:
             self.stats.idle_signals += 1
-        self.stats.d2h_ns += time.perf_counter_ns() - t0
+        dt_ns = time.perf_counter_ns() - t0
+        self.stats.retire_ns += dt_ns
+        self.stats.d2h_ns += dt_ns
         self.stats.tokens_out += moved
         return moved
 
@@ -198,41 +318,64 @@ class PLink:
         """True while a device step is in flight — the scheduler must not
         declare quiescence until the step retires (its outputs may wake
         downstream actors)."""
-        return self.inflight is not None
+        return len(self.inflight) > 0
 
     def invoke(self, max_execs: int = 1) -> int:
         progress = 0
-        # 1) retire a completed in-flight step without blocking
-        if self.inflight is not None:
-            arrays = jax.tree.leaves(self.inflight)
+        # 1) retire completed launches, oldest first, without blocking.
+        # Readiness polls only the boundary outputs + idle flag — the state
+        # future was donated into the chained next launch and must not be
+        # touched here.
+        while self.inflight:
+            outs, idle, _n_in, _slot = self.inflight[0]
+            t0 = time.perf_counter_ns()
+            arrays = jax.tree.leaves((outs, idle))
             ready = all(
-                getattr(a, "is_ready", lambda: True)() for a in arrays
-                if hasattr(a, "is_ready")
+                a.is_ready() for a in arrays if hasattr(a, "is_ready")
             )
+            poll_ns = time.perf_counter_ns() - t0
+            self.stats.sync_ns += poll_ns
+            self.stats.d2h_ns += poll_ns
             if not ready:
-                return 0  # never block the thread (paper §III-D)
-            progress += self._retire(self.inflight)
-            self.inflight = None
-        # 2) stage + launch the next step if there is any input (double buffer).
-        # Never launch a step whose retirement could overflow an output FIFO:
-        # a launch may retire up to one block of valid tokens per port, and a
-        # device->device lane (or a slow host consumer) has no other
+                if len(self.inflight) >= _MAX_INFLIGHT:
+                    return progress  # pipeline full; never block (§III-D)
+                break  # head still computing — overlap: stage the next block
+            self.inflight.popleft()
+            progress += self._retire(outs, idle)
+        # 2) stage + launch the next block while up to _MAX_INFLIGHT - 1
+        # earlier launches compute (DMA/compute overlap).  Never launch a
+        # step whose retirement could overflow an output FIFO: every launch
+        # still in flight may retire up to k*block valid tokens per port,
+        # and a device->device lane (or a slow host consumer) has no other
         # backpressure point — the lane would assert mid-retire.  Space can
         # only grow between launch and retire (this PLink is the single
         # writer), so checking before staging is sufficient; the check also
         # runs before _stage_inputs so no host tokens are drained into a
         # block we then refuse to launch.
+        has_inputs = bool(self.program.in_ports)
+        if has_inputs and not self._plan():
+            # nothing stageable: return before touching the staging ring —
+            # idle polls while a launch computes must not pay the (k, block)
+            # buffer zeroing that _stage_inputs does per call
+            return progress
+        need = (len(self.inflight) + 1) * self.k * self.program.block
         for ep in self.env.outputs.values():
             cap = getattr(getattr(ep, "fifo", None), "capacity", None)
-            if cap is not None and ep.space() < min(self.program.block, cap):
+            if cap is not None and ep.space() < min(need, cap):
                 return progress
-        staged, n_in = self._stage_inputs()
-        has_inputs = bool(self.program.in_ports)
+        staged, n_in, slot = self._stage_inputs()
         if n_in == 0 and has_inputs:
             return progress
         t0 = time.perf_counter_ns()
-        self.inflight = self.program.step(self.state, staged)
-        self.stats.h2d_ns += time.perf_counter_ns() - t0
+        state, outs, idle = self.program.launch(self.state, staged)
+        # chain the NEXT launch off this launch's state *future* — state
+        # never round-trips to host, and the jitted entry donates it
+        self.state = state
+        dt_ns = time.perf_counter_ns() - t0
+        self.stats.dispatch_ns += dt_ns
+        self.stats.h2d_ns += dt_ns
+        self.inflight.append((outs, idle, n_in, slot))
+        self._slot = (slot + 1) % _N_SLOTS
         self.stats.launches += 1
         self.stats.tokens_in += n_in
         progress += n_in

@@ -500,12 +500,12 @@ class HeteroRuntime(HostRuntime):
     producing PLink queues retired numpy blocks that the consuming PLink
     stages directly, with no per-token Python boxing in between.
 
-    With a single device partition the PLink is scheduled on
-    ``plink_thread`` (default: the first host thread — the paper puts it on
-    p1).  With several, each PLink gets its own dedicated scheduler thread
-    so the lanes keep independent async steps in flight and the partitions
-    pipeline against each other; pass ``plink_thread`` to force them all
-    onto one thread.
+    Every PLink gets its own dedicated scheduler thread by default — single
+    partition included — so the boundary work (staging ring packing, masked
+    retirement) overlaps the host actors' token processing instead of
+    serializing behind them on one thread.  Pass ``plink_thread`` to pin
+    all lanes onto a named (possibly shared) thread instead — e.g. the
+    first host thread, the paper's p1 placement.
     """
 
     def __init__(
@@ -522,6 +522,7 @@ class HeteroRuntime(HostRuntime):
         program=None,  # prebuilt DeviceProgram (single-partition modules)
         programs: Optional[Dict[str, object]] = None,  # pid -> DeviceProgram
         fuse: bool = True,
+        megastep: object = "auto",
     ):
         from repro.ir.passes import lower
         from repro.runtime.device_runtime import compile_partition
@@ -544,6 +545,7 @@ class HeteroRuntime(HostRuntime):
                 default_depth=default_depth,
                 block=block,
                 fuse=fuse,
+                megastep=megastep,
             )
         hw_regions = [r for r in module.hw_regions() if r.actors]
         assert hw_regions, "HeteroRuntime needs at least one device actor"
@@ -556,10 +558,6 @@ class HeteroRuntime(HostRuntime):
         single = len(hw_regions) == 1
         if plink_thread is not None:
             plink_threads = {r.id: plink_thread for r in hw_regions}
-        elif single:
-            plink_threads = {
-                hw_regions[0].id: threads[0] if threads else "t0"
-            }
         else:  # one dedicated lane thread per device partition
             plink_threads = {r.id: f"plink:{r.id}" for r in hw_regions}
 

@@ -99,13 +99,15 @@ class DeviceBatcher:
         mark = len(self.inflight)
         t0 = time.perf_counter_ns()
         if self.mode == "sequential" or len(live) == 1:
-            # one dispatch per session — the per-session baseline
+            # one dispatch per session — the per-session baseline.  launch()
+            # routes to the megastep when the program runs k>1 iterations
+            # per dispatch (payloads are (k, block) chunk stacks).
             for st, staged in zip(live, payloads):
                 ins = {
                     k: (jnp.asarray(v), jnp.asarray(m))
                     for k, (v, m) in staged.items()
                 }
-                res = self.program.step(st.state, ins)
+                res = self.program.launch(st.state, ins)
                 self.inflight.append(
                     _Inflight([st], res, batched=False, lanes=1)
                 )
@@ -129,7 +131,12 @@ class DeviceBatcher:
                     )
                     for k in padded[0]
                 }
-                res = self.program.batched_step(b)(state_b, ins_b)
+                batched_fn = (
+                    self.program.batched_megastep(b)
+                    if getattr(self.program, "megastep_k", 1) > 1
+                    else self.program.batched_step(b)
+                )
+                res = batched_fn(state_b, ins_b)
                 self.inflight.append(
                     _Inflight(c_live, res, batched=True, lanes=len(c_live))
                 )

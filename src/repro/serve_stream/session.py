@@ -211,6 +211,17 @@ class DeviceStage:
         self.pending = False  # riding in an in-flight batch
         self.tokens_staged = 0
         self.tokens_retired = 0
+        # megastep: payloads are (k, block) chunk stacks when the program
+        # runs k>1 repetition-vector iterations per launch
+        self.k = max(1, getattr(program, "megastep_k", 1))
+        shape = (self.k, program.block) if self.k > 1 else (program.block,)
+        # preallocated staging buffers, reused across launches — safe
+        # because ``stage()`` refuses to repack while ``pending`` (the
+        # previous payload may still be riding an in-flight batch)
+        self._bufs: Dict[str, Tuple[np.ndarray, np.ndarray]] = {
+            key: (np.zeros(shape, dt), np.zeros(shape, bool))
+            for key, dt in self.dtypes.items()
+        }
 
     def _plan(self) -> Dict[str, int]:
         """Tokens stageable per boundary port right now (whole granules,
@@ -232,23 +243,46 @@ class DeviceStage:
         return sum(self._plan().values())
 
     def stage(self) -> Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]]:
-        """Drain up to one block per port; None when nothing to do."""
+        """Drain up to ``k`` blocks per port into the reused staging
+        buffers; None when nothing to do (or while the previous payload is
+        still in flight — the buffers must not be repacked under it)."""
+        if self.pending:
+            return None
         plan = self._plan()
         if not plan:
             return None
-        block = self.program.block
-        staged = {}
         total = 0
-        for key in self.quantum:  # every in-port must appear in the payload
-            n = plan.get(key, 0)
-            arr = np.zeros((block,), self.dtypes[key])
-            mask = np.zeros((block,), bool)
-            if n:
-                vals = self.in_eps[key].read(n)
-                arr[:n] = np.asarray(vals, dtype=arr.dtype)
-                mask[:n] = True
-            staged[key] = (arr, mask)
-            total += n
+        for j in range(self.k):
+            if j > 0:
+                plan = self._plan()
+            for key in self.quantum:  # every in-port appears in the payload
+                arr, mask = self._bufs[key]
+                row_a = arr[j] if self.k > 1 else arr
+                row_m = mask[j] if self.k > 1 else mask
+                n = plan.get(key, 0)
+                if n:
+                    ep = self.in_eps[key]
+                    view = (
+                        ep.peek_view(n)
+                        if hasattr(ep, "peek_view") else None
+                    )
+                    if view is not None:
+                        row_a[:n] = np.asarray(view, dtype=arr.dtype)
+                        ep.commit(n)
+                    else:
+                        row_a[:n] = np.asarray(ep.read(n), dtype=arr.dtype)
+                # zero the tail: reused buffers must never leak a previous
+                # launch's tokens into masked-off padding
+                row_a[n:] = 0
+                row_m[:n] = True
+                row_m[n:] = False
+                total += n
+            if not plan and j + 1 < self.k:
+                for arr, mask in self._bufs.values():
+                    arr[j + 1:] = 0
+                    mask[j + 1:] = False
+                break
+        staged = {key: self._bufs[key] for key in self.quantum}
         self.tokens_staged += total
         self.pending = True
         return staged

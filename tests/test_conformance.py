@@ -6,8 +6,11 @@ float32 device math agree *bitwise*) plus random legal XCF placements with
 1..3 device partitions, and asserts
 
     interpreted-host == fused-host == hetero (unfused) == hetero (fused)
+                     == hetero megastep (fused and unfused, random k)
 
-token-for-token.  The fused-host axis drives the same chains through the
+token-for-token.  The megastep axes pin a random chunks-per-launch k and
+must retire the exact stream the per-iteration (megastep=False) launches
+produce — the megastep ≡ per-iteration guarantee.  The fused-host axis drives the same chains through the
 ``fuse-sdf-host-regions`` block executor (``repro.runtime.host_fused``) —
 spec-carrying ops (affine/clip) fuse, the spec-less ``negate`` forces
 interpreted islands between fused groups, so every generated case exercises
@@ -90,6 +93,7 @@ if HAVE_HYPOTHESIS:
         "n_dev": st.integers(1, 3),
         "n_threads": st.integers(1, 2),
         "place": st.lists(st.integers(0, 4), min_size=4, max_size=4),
+        "k": st.integers(2, 6),  # megastep chunks per device launch
     })
 else:  # pragma: no cover - shim keeps the decorator importable
     case_strategy = st
@@ -152,7 +156,7 @@ def test_harness_smoke():
             "ops": [("affine", 0, 3, 1), ("affine", -2, 1, 0),
                     ("clip", -20, 20), ("negate",)],
             "tokens": [5, -3, 0, 8, -8, 1],
-            "n_dev": 3, "n_threads": 1, "place": [1, 2, 3, 1],
+            "n_dev": 3, "n_threads": 1, "place": [1, 2, 3, 1], "k": 5,
         },
         {   # device sandwich: dev / host / dev
             "ops": [("negate",), ("affine", 2, 2, 2), ("negate",)],
@@ -179,17 +183,32 @@ def _check(case):
         host_fused = list(got)
         got.clear()
 
-        repro.compile(g, xcf, block=BLOCK, fuse=False).run()
+        # per-iteration baselines: one block per device launch
+        repro.compile(g, xcf, block=BLOCK, fuse=False, megastep=False).run()
         unfused = list(got)
         got.clear()
 
-        repro.compile(g, xcf, block=BLOCK, fuse=True).run()
+        repro.compile(g, xcf, block=BLOCK, fuse=True, megastep=False).run()
         fused = list(got)
+        got.clear()
+
+        # megastep axis: k chunks per launch (scan on composed regions, one
+        # flat Pallas grid on fused stream regions) must retire the exact
+        # same token stream as the per-iteration launches above
+        k = case.get("k", 3)
+        repro.compile(g, xcf, block=BLOCK, fuse=True, megastep=k).run()
+        mega = list(got)
+        got.clear()
+
+        repro.compile(g, xcf, block=BLOCK, fuse=False, megastep=k).run()
+        mega_unfused = list(got)
         got.clear()
 
     assert host_fused == host, (case, host_fused[:8], host[:8])
     assert unfused == host, (case, unfused[:8], host[:8])
     assert fused == host, (case, fused[:8], host[:8])
+    assert mega == host, (case, k, mega[:8], host[:8])
+    assert mega_unfused == host, (case, k, mega_unfused[:8], host[:8])
 
 
 @given(case=case_strategy)

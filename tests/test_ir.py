@@ -259,11 +259,28 @@ def test_depth_device_boundary_gets_double_buffer():
     g, _ = make_chain(n_stages=2, n_tok=8)
     xcf = make_xcf(g.name, {"src": "t0", "s0": "accel", "s1": "accel",
                             "snk": "t0"})
-    mod = lower(g, xcf, default_depth=256, block=1024)
-    # both surviving channels cross the device boundary: 2 * block wins
+    # megastep off: a crossing channel double-buffers one block
+    mod = lower(g, xcf, default_depth=256, block=1024, megastep=False)
     assert mod.channels, "expected boundary channels"
     for ch in mod.channels:
         assert ch.resolved_depth == 2048, str(ch)
+
+
+def test_depth_device_boundary_sized_for_megastep():
+    g, _ = make_chain(n_stages=2, n_tok=8)
+    xcf = make_xcf(g.name, {"src": "t0", "s0": "accel", "s1": "accel",
+                            "snk": "t0"})
+    # default megastep target k=4: crossing channels absorb 2*k*block so a
+    # pipelined megastep launch never clamps
+    mod = lower(g, xcf, default_depth=256, block=1024)
+    assert mod.meta["megastep"] == 4
+    for ch in mod.channels:
+        assert ch.resolved_depth == 8192, str(ch)
+    # an explicit integer target scales the same way
+    mod3 = lower(g, xcf, default_depth=256, block=1024, megastep=2)
+    assert mod3.meta["megastep"] == 2
+    for ch in mod3.channels:
+        assert ch.resolved_depth == 4096, str(ch)
 
 
 # ---------------------------------------------------------------------------

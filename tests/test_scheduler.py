@@ -71,8 +71,25 @@ def test_small_fifo_depths_still_correct():
 def test_hetero_runtime_matches_host():
     g, got = make_topfilter(n=1024, vectorized=True)
     rt = HeteroRuntime(
-        g, {"source": "t0", "filter": "accel", "sink": "t0"}, block=256
+        g,
+        {"source": "t0", "filter": "accel", "sink": "t0"},
+        block=256,
+        megastep=False,
     )
     rt.run_threads()
     assert got == topfilter_expected(n=1024)
     assert rt.plink.stats.launches >= 4  # blocks streamed through the device
+
+
+def test_hetero_runtime_megastep_amortizes_launches():
+    g, got = make_topfilter(n=1024, vectorized=True)
+    rt = HeteroRuntime(
+        g, {"source": "t0", "filter": "accel", "sink": "t0"}, block=256
+    )
+    rt.run_threads()
+    assert got == topfilter_expected(n=1024)
+    k = rt.plink.program.megastep_k
+    assert k > 1  # default target kicks in
+    # one launch moves k blocks: 1024 tokens fit in ceil(1024/(k*256)) launches
+    assert rt.plink.stats.launches >= -(-1024 // (k * 256))
+    assert rt.plink.stats.tokens_in == 1024
