@@ -38,6 +38,12 @@ DEFAULT_THRESHOLD = 0.20
 # run-to-run swings exceed any honest regression threshold
 _UNGATED = ("error", "frac", "worst_fraction", "milp", "hw_vs_single")
 
+# absolute floors checked on the *current* run, independent of baseline
+# drift: these ratios carry a hard promise, not a trajectory.  The tracing
+# overhead row is untraced/traced wall time — 0.95 is the documented "<5%
+# overhead when tracing is on" guarantee (docs/observability.md).
+_FLOORS = {"observability/trace_overhead": 0.95}
+
 
 def _ratio_rows(payload: Dict) -> Iterator[Tuple[str, str, float]]:
     for suite, data in sorted(payload.get("suites", {}).items()):
@@ -74,6 +80,15 @@ def compare(current: Dict, baseline: Dict, threshold: float) -> int:
             print(f"ok       {name}: {b:.3f} -> {c:.3f} ({delta:+.1%})")
     for name in sorted(set(cur) - set(base)):
         print(f"NEW      {name}: {cur[name][1]:.3f} (no baseline — skipped)")
+    for name, floor in sorted(_FLOORS.items()):
+        if name not in cur:
+            continue  # suite not in this (possibly partial) run
+        c = cur[name][1]
+        if c < floor:
+            failures += 1
+            print(f"FAIL     {name}: {c:.3f} below absolute floor {floor}")
+        else:
+            print(f"floor ok {name}: {c:.3f} >= {floor}")
     if failures:
         print(f"# {failures} ratio(s) regressed >"
               f"{threshold:.0%} vs {len(base)} baselined")

@@ -1,0 +1,116 @@
+"""Observability: tracing overhead + trace artifact validation.
+
+Three checks on the streamtrace layer (see docs/observability.md):
+
+  * ``observability/trace_overhead`` — best-of-N *interleaved* FIR32 host
+    runs, untraced vs traced; the ratio (untraced/traced seconds) is gated
+    in ``benchmarks/compare.py`` with an absolute floor of 0.95 — tracing
+    must cost <5% on a host-interpreted run, the instrumentation-densest
+    path (one span per actor invoke).
+  * ``observability/trace_artifact`` — a traced device run exports
+    ``artifacts/trace_smoke.json`` and the Chrome-trace schema validator
+    must pass over it with actor + PLink-phase + channel events present
+    (the artifact CI uploads).
+  * ``observability/serve_trace`` — a traced serve session exports
+    ``artifacts/trace_serve_smoke.json`` with session lifecycle + batched
+    device events, schema-checked the same way.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from _util import emit, smoke_scale
+
+import repro
+from repro.apps.streams import NETWORKS
+from repro.observability import validate_chrome_trace
+
+SIZES = smoke_scale({"host": 20000, "device": 8000, "serve": 8000})
+BLOCK = 256
+REPEATS = 5
+
+
+def trace_overhead() -> None:
+    net, _ = NETWORKS["FIR32"](n=SIZES["host"])
+    prog = repro.compile(net, backend="host")
+    prog.run()  # warm everything outside the measured pairs
+    best = {"off": float("inf"), "on": float("inf")}
+    for _ in range(REPEATS):
+        # interleave the two modes so slow host drift hits both equally
+        best["off"] = min(best["off"], prog.run().seconds)
+        best["on"] = min(best["on"], prog.run(trace=True).seconds)
+    ratio = best["off"] / best["on"]
+    emit(
+        "observability/trace_overhead",
+        derived=(
+            f"untraced {best['off'] * 1e3:.1f}ms / traced "
+            f"{best['on'] * 1e3:.1f}ms (floor 0.95 = <5% overhead)"
+        ),
+        ratio=ratio,
+    )
+
+
+def trace_artifact() -> None:
+    net, _ = NETWORKS["FIR32"](n=SIZES["device"])
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    path = out / "trace_smoke.json"
+    rep = prog.run(trace=str(path))
+    errs = validate_chrome_trace(
+        str(path),
+        require_cats=["actor", "plink", "run", "channel"],
+        require_tracks=["lane:"],
+    )
+    if errs:
+        raise AssertionError(f"{path} failed schema validation: {errs}")
+    emit(
+        "observability/trace_artifact",
+        derived=(
+            f"{path}: {rep.trace['otherData']['events']} events, "
+            f"schema valid"
+        ),
+    )
+
+
+def serve_trace() -> None:
+    n = SIZES["serve"]
+    net, _ = NETWORKS["FIR32"](n=n)
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    stream = [float(v) for v in range(n)]
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    path = out / "trace_serve_smoke.json"
+    with prog.serve(trace=True) as server:
+        s = server.open_session()
+        for i in range(0, n, BLOCK):
+            s.submit(stream[i:i + BLOCK])
+        s.close()
+        assert server.drain(timeout=300), "server drain timed out"
+        payload = server.trace(path)
+        ttfo = server.metrics.get("serve_ttfo_seconds").summary()
+    errs = validate_chrome_trace(
+        payload,
+        require_cats=["session", "device", "channel"],
+        require_tracks=["session:", "batch:"],
+    )
+    if errs:
+        raise AssertionError(f"{path} failed schema validation: {errs}")
+    emit(
+        "observability/serve_trace",
+        derived=(
+            f"{path}: {payload['otherData']['events']} events, schema "
+            f"valid, ttfo_p50={ttfo['p50'] * 1e6:.0f}us"
+        ),
+    )
+
+
+def main() -> None:
+    trace_overhead()
+    trace_artifact()
+    serve_trace()
+
+
+if __name__ == "__main__":
+    main()

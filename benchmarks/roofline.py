@@ -156,10 +156,16 @@ def boundary_breakdown() -> None:
     (async launch call), sync (readiness polling), retire (masked writes) —
     for the FIR32 all-device corner, megastep off vs the auto target.  The
     off/auto launch-count ratio is the amortization the megastep buys; the
-    per-launch split shows where the remaining boundary time goes."""
+    per-launch split shows where the remaining boundary time goes.
+
+    Rendered from a streamtrace: the run records PLink phase spans and
+    ``observability.phase_totals`` rebuilds the split from them — the span
+    layer is the single source of truth (no duplicated per-field
+    accumulation here), and the identical trace opens in Perfetto."""
     import repro
     from _util import smoke_scale
     from repro.apps.streams import NETWORKS
+    from repro.observability import phase_totals
 
     size = smoke_scale({"FIR32": 8000})["FIR32"]
     block = 256
@@ -167,15 +173,16 @@ def boundary_breakdown() -> None:
     for tag, mega in (("off", False), ("auto", "auto")):
         net, _got = NETWORKS["FIR32"](n=size)
         prog = repro.compile(net, backend="device", block=block, megastep=mega)
-        rt = prog._build_runtime()
-        rt.run_threads()
-        stats = [p.stats for p in rt.plinks.values()]
-        launches = max(1, sum(s.launches for s in stats))
+        rep = prog.run(trace=True)
+        lanes = phase_totals(rep.trace)
+        launches = max(1, sum(int(d["launches"]) for d in lanes.values()))
         split = {
-            f: sum(getattr(s, f + "_ns") for s in stats) / launches / 1e3
+            f: sum(d[f + "_ns"] for d in lanes.values()) / launches / 1e3
             for f in ("stage", "dispatch", "sync", "retire")
         }
-        k = max(p.program.megastep_k for p in rt.plinks.values())
+        k = max(
+            p.megastep_k for p in prog.device_programs().values()
+        )
         results[tag] = launches
         emit(
             f"roofline/boundary/megastep_{tag}",

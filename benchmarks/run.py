@@ -39,6 +39,8 @@ SUITES = [
     #                                          end-to-end + per-PLink-lane rows
     ("host_throughput", "host_throughput"),  # host fusion: fused block
     #                                          executor vs per-token interp
+    ("observability", "observability"),      # streamtrace: overhead gate +
+    #                                          trace artifact validation
 ]
 
 JSON_PATH = Path(os.environ.get("BENCH_JSON", "BENCH_streams.json"))

@@ -316,6 +316,30 @@ def profile_from_telemetry(
     return prof
 
 
+def profile_from_trace(
+    graph: ActorGraph,
+    trace,  # TraceRecorder | Chrome-trace payload dict | path to one
+    base: Optional[NetworkProfile] = None,
+    *,
+    seconds: Optional[float] = None,
+) -> NetworkProfile:
+    """Turn a recorded streamtrace into MILP inputs (§III-E, offline).
+
+    A trace file is a complete measurement of a real run, so the DSE can
+    replay it long after the run: the trace folds into a
+    ``TelemetrySnapshot`` (``observability.snapshot_from_trace``) and goes
+    through the SAME ``profile_from_telemetry`` ingestion the live serving
+    engine uses — one code path, two sources.  Instrumentation records the
+    identical durations/counts it feeds live telemetry, so the trace-fed
+    and telemetry-fed profiles (and the placements ``explore`` picks from
+    them) agree.
+    """
+    from repro.observability.trace_profile import snapshot_from_trace
+
+    snap = snapshot_from_trace(trace, seconds=seconds)
+    return profile_from_telemetry(graph, snap, base)
+
+
 def measure_device_link(
     sizes: Sequence[int] = (2**12, 2**16, 2**20, 2**22), repeats: int = 10,
 ) -> Tuple[LinkModel, List[Tuple[int, float]]]:

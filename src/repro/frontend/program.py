@@ -31,6 +31,7 @@ from repro.core.xcf import XCF, make_xcf
 from repro.frontend.dsl import FrontendError, Network
 from repro.ir.ir import IRModule
 from repro.ir.passes import lower
+from repro.observability.recorder import TraceRecorder, activate
 from repro.runtime.scheduler import DEFAULT_DEPTH, HeteroRuntime, HostRuntime
 
 BACKENDS = ("auto", "host", "threads", "device")
@@ -121,6 +122,10 @@ class RunReport:
     channel_tokens: Dict[str, int]
     plink_launches: int = 0
     plink_tokens_out: int = 0
+    # Chrome-trace payload when the run was traced (``run(trace=...)``);
+    # feed it to ``repro.observability`` validators or
+    # ``core.profiler.profile_from_trace`` for offline DSE
+    trace: Optional[Dict] = None
 
     @property
     def tests(self) -> int:
@@ -320,27 +325,53 @@ class Program:
         *,
         threaded: Optional[bool] = None,
         reset_collectors: bool = True,
+        trace: Union[None, bool, str, Path] = None,
     ) -> RunReport:
-        """Execute to quiescence on the placement the XCF describes."""
+        """Execute to quiescence on the placement the XCF describes.
+
+        ``trace`` turns on streamtrace recording for this run: pass a path
+        to also write the Chrome-trace JSON there, or ``True`` to only
+        attach the payload to ``RunReport.trace``.  The exported trace has
+        one track per scheduler thread (actor-firing spans), per PLink lane
+        (stage/dispatch/sync/retire phase spans), plus run-level and
+        channel-token events — openable in Perfetto / ``chrome://tracing``
+        and replayable through ``core.profiler.profile_from_trace``.
+        """
         if reset_collectors:
             self._reset_collectors()
-        rt = self._build_runtime()
-        hetero = isinstance(rt, HeteroRuntime)
-        t0 = time.perf_counter()
-        if hetero:
-            rt.run_threads()
-        elif threaded is None:
-            rt.run()
-        elif threaded:
-            rt.run_threads()
-        else:
-            rt.run_single()
-        seconds = time.perf_counter() - t0
+        rec = TraceRecorder() if trace else None
+        if rec is not None:
+            rec.meta.update(network=self._graph.name, kind="run")
+        with activate(rec):
+            rt = self._build_runtime()
+            hetero = isinstance(rt, HeteroRuntime)
+            t0 = time.perf_counter()
+            if hetero:
+                rt.run_threads()
+            elif threaded is None:
+                rt.run()
+            elif threaded:
+                rt.run_threads()
+            else:
+                rt.run_single()
+            seconds = time.perf_counter() - t0
         n_sw = len(rt.partitions)
         backend = (
             f"hetero({'+'.join(self.hw_partitions)}+{n_sw}thr)" if hetero
             else f"host({n_sw}thr)"
         )
+        payload = None
+        if rec is not None:
+            from repro.observability.chrome import (
+                chrome_trace,
+                write_chrome_trace,
+            )
+
+            rt.record_channel_totals()
+            rec.meta["backend"] = backend
+            payload = chrome_trace(rec)
+            if not isinstance(trace, bool):
+                write_chrome_trace(payload, trace)
         return RunReport(
             network=self._graph.name,
             backend=backend,
@@ -357,6 +388,7 @@ class Program:
                 sum(p.stats.tokens_out for p in rt.plinks.values())
                 if hetero else 0
             ),
+            trace=payload,
         )
 
     # -- serving ---------------------------------------------------------------
@@ -368,6 +400,7 @@ class Program:
         max_batch: int = 32,
         repartitioner=None,
         start: bool = False,
+        trace: bool = False,
     ):
         """A persistent multi-session streaming server over this placement.
 
@@ -378,6 +411,11 @@ class Program:
         live telemetry, and optional online repartitioning (pass an
         ``OnlineRepartitioner``).  Use as a context manager, or pass
         ``start=True``.  See ``docs/server.md``.
+
+        ``trace=True`` records the server's whole life with streamtrace
+        (``server.trace(path)`` exports Chrome-trace JSON; ``server
+        .metrics_text()`` exposes TTFO / inter-block latency histograms) —
+        see docs/observability.md.
         """
         from repro.serve_stream import StreamServer
 
@@ -387,6 +425,7 @@ class Program:
             batching=batching,
             max_batch=max_batch,
             repartitioner=repartitioner,
+            trace=trace,
         )
         return server.start() if start else server
 

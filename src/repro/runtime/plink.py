@@ -38,6 +38,7 @@ from typing import Any, Deque, Dict, Tuple
 import jax
 import numpy as np
 
+from repro.observability.recorder import current as _trace_current
 from repro.runtime.device_runtime import DeviceProgram
 from repro.runtime.fifo import ArrayFifo
 
@@ -142,6 +143,10 @@ class PLink:
     a normal actor on its thread (the paper schedules PLink on p1).
     """
 
+    # PLink paints its own lane track (stage/dispatch/sync/retire spans);
+    # the scheduler must not double-paint its invokes as actor spans.
+    trace_self = True
+
     def __init__(self, program: DeviceProgram, env, name: str = "plink"):
         self.program = program
         self.env = env  # PortEnv: host FIFO endpoints for the boundary ports
@@ -149,6 +154,15 @@ class PLink:
         self.state = program.init_state
         self.stats = PLinkStats()
         self.k = max(1, program.megastep_k)
+        # streamtrace: recorder captured once at construction — the invoke
+        # hot path pays one attribute read + None check when tracing is off.
+        # Readiness polls accumulate into _sync_acc and flush as ONE sync
+        # span per retire, so the event count stays O(launches) while the
+        # span totals still match PLinkStats exactly.
+        self.recorder = _trace_current()
+        self._track = f"lane:{name}"
+        self._sync_acc = 0
+        self._sync_t0 = 0
         # in-flight launches, oldest first: (outs, idle, n_in, slot).  The
         # state future is NOT kept here — it was chained (and donated) into
         # the next launch at dispatch time, so readiness polling must never
@@ -176,6 +190,18 @@ class PLink:
         self._slot = 0
 
     # -- helpers ---------------------------------------------------------------
+    def _phase(self, name: str, t0_ns: int, dur_ns: int, **args) -> None:
+        """One boundary-phase span on this lane's track."""
+        rec = self.recorder
+        if rec is not None:
+            rec.complete(self._track, name, "plink", t0_ns, dur_ns, args)
+
+    def _flush_sync(self) -> None:
+        """Emit accumulated readiness-poll time as a single sync span."""
+        if self._sync_acc:
+            self._phase("sync", self._sync_t0, self._sync_acc)
+            self._sync_acc = 0
+
     def _plan(self) -> Dict[str, int]:
         """Tokens stageable per boundary port right now: whole staging
         granules, lane-aligned across each destination actor's ports (a
@@ -277,6 +303,7 @@ class PLink:
         dt_ns = time.perf_counter_ns() - t0
         self.stats.stage_ns += dt_ns
         self.stats.h2d_ns += dt_ns
+        self._phase("stage", t0, dt_ns, tokens=total, k=self.k)
         return staged, total, idx
 
     def _retire(self, outs, idle) -> int:
@@ -310,6 +337,7 @@ class PLink:
         self.stats.retire_ns += dt_ns
         self.stats.d2h_ns += dt_ns
         self.stats.tokens_out += moved
+        self._phase("retire", t0, dt_ns, tokens=moved, idle=self.device_idle)
         return moved
 
     # -- scheduler contract ------------------------------------------------------
@@ -336,11 +364,16 @@ class PLink:
             poll_ns = time.perf_counter_ns() - t0
             self.stats.sync_ns += poll_ns
             self.stats.d2h_ns += poll_ns
+            if self.recorder is not None:
+                if not self._sync_acc:
+                    self._sync_t0 = t0
+                self._sync_acc += poll_ns
             if not ready:
                 if len(self.inflight) >= _MAX_INFLIGHT:
                     return progress  # pipeline full; never block (§III-D)
                 break  # head still computing — overlap: stage the next block
             self.inflight.popleft()
+            self._flush_sync()
             progress += self._retire(outs, idle)
         # 2) stage + launch the next block while up to _MAX_INFLIGHT - 1
         # earlier launches compute (DMA/compute overlap).  Never launch a
@@ -374,6 +407,7 @@ class PLink:
         dt_ns = time.perf_counter_ns() - t0
         self.stats.dispatch_ns += dt_ns
         self.stats.h2d_ns += dt_ns
+        self._phase("dispatch", t0, dt_ns, tokens=n_in, k=self.k)
         self.inflight.append((outs, idle, n_in, slot))
         self._slot = (slot + 1) % _N_SLOTS
         self.stats.launches += 1

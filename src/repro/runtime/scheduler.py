@@ -32,6 +32,7 @@ from typing import Dict, List, Optional
 from repro.core.actor_machine import ActorMachine, BasicController, PortEnv
 from repro.core.xcf import make_xcf
 from repro.ir.ir import IRModule
+from repro.observability.recorder import current as _trace_current
 from repro.runtime.fifo import ReaderEndpoint, RingFifo, WriterEndpoint
 
 DEFAULT_DEPTH = 4096
@@ -110,6 +111,7 @@ class ThreadPartition:
 
     def fire(self) -> int:
         execs = 0
+        rec = self.rt.recorder
         for inst in self.instances:
             t0 = time.perf_counter_ns()
             e = inst.invoke(self.rt.max_execs_per_invoke)
@@ -120,6 +122,18 @@ class ThreadPartition:
             prof.time_ns += dt
             prof.tests = inst.stats.tests
             execs += e
+            # streamtrace: one span per productive invoke, on this thread's
+            # track.  PLink records its own phase spans (trace_self) — an
+            # extra whole-invoke span would double-paint its lane.
+            if rec is not None and e and not getattr(inst, "trace_self", False):
+                rec.complete(
+                    f"thread:{self.name}",
+                    getattr(inst, "telemetry_key", inst.actor.name),
+                    "actor",
+                    t0,
+                    dt,
+                    {"fires": e},
+                )
         return execs
 
     def post_fire(self) -> None:
@@ -181,6 +195,10 @@ class HostRuntime:
         self.max_execs_per_invoke = max_execs_per_invoke
         self.controller_kind = controller
         self.pin_threads = pin_threads
+        # streamtrace: capture the process-current recorder once — the hot
+        # fire loop then pays a plain attribute read + None check when
+        # tracing is off
+        self.recorder = _trace_current()
         mapping = module.assignment()
         self.mapping = dict(mapping)
 
@@ -285,6 +303,7 @@ class HostRuntime:
         total = 0
         quiesced = False
         expired = ""
+        t_run = time.perf_counter_ns()
         for _ in range(max_rounds):
             execs = sum(p.run_round() for p in parts)
             total += execs
@@ -303,6 +322,7 @@ class HostRuntime:
                 break
         else:
             expired = f"max_rounds={max_rounds} exhausted without quiescence"
+        self._trace_run_end(t_run, quiesced)
         if not quiesced and on_deadline == "raise":
             raise StallError(
                 f"{self.module.name}: run_single ended by budget "
@@ -412,6 +432,7 @@ class HostRuntime:
         avail = list(range(os.cpu_count() or 1))
         threads = []
         t0 = time.perf_counter()
+        t_run = time.perf_counter_ns()
         for i, part in enumerate(self.partitions.values()):
             core = avail[i % len(avail)] if self.pin_threads else None
             th = threading.Thread(
@@ -434,6 +455,7 @@ class HostRuntime:
             wd.start()
         for th in threads:
             th.join()
+        self._trace_run_end(t_run, not self._stalled)
         if self._thread_error is not None:
             raise self._thread_error
         if self._stalled and on_deadline == "raise":
@@ -458,6 +480,44 @@ class HostRuntime:
 
     def total_fires(self) -> int:
         return sum(p.fires for p in self.profiles.values())
+
+    # -------------------------------------------------------------- streamtrace --
+    def _trace_run_end(self, t0_ns: int, quiesced: bool) -> None:
+        """Close the whole-run span on the ``runtime`` track."""
+        if self.recorder is None:
+            return
+        self.recorder.complete(
+            "runtime",
+            f"run:{self.module.name}",
+            "run",
+            t0_ns,
+            time.perf_counter_ns() - t0_ns,
+            {"quiesced": quiesced, "threads": len(self.partitions)},
+        )
+
+    def record_channel_totals(self) -> None:
+        """Emit one ``channel`` counter event per live FIFO with the total
+        tokens it moved, keyed by the *authored* channel endpoints — what
+        ``profile_from_trace`` ingests (the same authored-key convention
+        the serving engine's telemetry uses)."""
+        if self.recorder is None:
+            return
+        from repro.observability.trace_profile import authored_channel_key
+
+        for ch in self.module.channels:
+            f = self.fifos.get(str(ch))
+            if f is None or not f.total_written:
+                continue
+            src, sp, dst, dp = authored_channel_key(self.module, ch.key)
+            self.recorder.counter(
+                "channels",
+                f"{src}.{sp}->{dst}.{dp}",
+                f.total_written,
+                cat="channel",
+                args={
+                    "src": src, "src_port": sp, "dst": dst, "dst_port": dp,
+                },
+            )
 
 
 def runtime_from_xcf(graph, xcf, *, fuse: bool = True, **kw):
@@ -566,6 +626,7 @@ class HeteroRuntime(HostRuntime):
         self.max_execs_per_invoke = max_execs_per_invoke
         self.controller_kind = controller
         self.pin_threads = False
+        self.recorder = _trace_current()
         self.mapping = dict(host_map)
         self.partitions = {}
         for part in host_map.values():

@@ -70,6 +70,7 @@ class DeviceBatcher:
         max_batch: int = 32,
         depth: int = 2,             # in-flight batches (double buffering)
         telemetry=None,
+        recorder=None,
     ):
         if mode not in ("batched", "sequential"):
             raise ValueError(f"DeviceBatcher mode {mode!r}")
@@ -78,7 +79,22 @@ class DeviceBatcher:
         self.max_batch = max(1, max_batch)
         self.depth = max(1, depth)
         self.telemetry = telemetry
+        self.recorder = recorder  # streamtrace (None = untraced server)
+        self._track = "batch:" + (
+            getattr(program, "partition", "") or program.name
+        )
         self.inflight: List[_Inflight] = []
+
+    def _traced_dispatch(self, lanes: int, tokens_in: int) -> None:
+        """Mirror one ``device_dispatched`` telemetry record into the trace
+        (same lanes/token counts, so replay is exact)."""
+        if self.telemetry is not None:
+            self.telemetry.device_dispatched(lanes, tokens_in)
+        if self.recorder is not None:
+            self.recorder.instant(
+                self._track, "dispatch", "device",
+                {"lanes": lanes, "tokens_in": tokens_in},
+            )
 
     # -- launch --------------------------------------------------------------
     def can_launch(self) -> bool:
@@ -111,10 +127,9 @@ class DeviceBatcher:
                 self.inflight.append(
                     _Inflight([st], res, batched=False, lanes=1)
                 )
-                if self.telemetry is not None:
-                    self.telemetry.device_dispatched(
-                        1, sum(int(m.sum()) for _, m in staged.values()),
-                    )
+                self._traced_dispatch(
+                    1, sum(int(m.sum()) for _, m in staged.values())
+                )
         else:
             for i in range(0, len(live), self.max_batch):
                 c_live = live[i:i + self.max_batch]
@@ -140,15 +155,14 @@ class DeviceBatcher:
                 self.inflight.append(
                     _Inflight(c_live, res, batched=True, lanes=len(c_live))
                 )
-                if self.telemetry is not None:
-                    self.telemetry.device_dispatched(
-                        len(c_live),
-                        sum(
-                            int(m.sum())
-                            for p in c_pay
-                            for _, m in p.values()
-                        ),
-                    )
+                self._traced_dispatch(
+                    len(c_live),
+                    sum(
+                        int(m.sum())
+                        for p in c_pay
+                        for _, m in p.values()
+                    ),
+                )
         dt = time.perf_counter_ns() - t0
         new = self.inflight[mark:]
         for entry in new:  # split the call's wall time across its dispatches
@@ -187,9 +201,20 @@ class DeviceBatcher:
         else:
             (st,) = entry.stages
             moved += st.retire(state, outs)
+        dt = time.perf_counter_ns() - t0
         if self.telemetry is not None:
-            self.telemetry.device_retired(
-                moved, time.perf_counter_ns() - t0 + entry.t_launch_ns
+            self.telemetry.device_retired(moved, dt + entry.t_launch_ns)
+        if self.recorder is not None:
+            # args.time_ns carries the telemetry value (retire + its share
+            # of the launch call) so replay matches device_time_ns exactly;
+            # the span itself shows the host-side retire work
+            self.recorder.complete(
+                self._track, "retire", "device", t0, dt,
+                {
+                    "tokens_out": moved,
+                    "lanes": entry.lanes,
+                    "time_ns": dt + entry.t_launch_ns,
+                },
             )
         return moved
 

@@ -30,8 +30,11 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Union
 
+from repro.observability.metrics import MetricsRegistry
+from repro.observability.recorder import TraceRecorder
+from repro.observability.trace_profile import authored_channel_key
 from repro.runtime.scheduler import AdaptiveBackoff
 from repro.serve_stream.batcher import DeviceBatcher
 from repro.serve_stream.session import (
@@ -40,24 +43,6 @@ from repro.serve_stream.session import (
     StreamSession,
 )
 from repro.serve_stream.telemetry import ServerTelemetry
-
-
-def _authored_key(module, ch_key: Tuple[str, str, str, str]):
-    """Map a lowered channel key back to its authored-graph key.
-
-    Fusion renames boundary endpoints to ``fusedN`` / ``member__PORT``; the
-    MILP evaluates over authored channels, so telemetry must record the
-    authored key.  Ports of fused actors encode their member as
-    ``member__PORT``."""
-    src, sp, dst, dp = ch_key
-    g = module.source
-    if g is None:
-        return ch_key
-    if src not in g.actors and "__" in sp:
-        src, sp = sp.split("__", 1)
-    if dst not in g.actors and "__" in dp:
-        dst, dp = dp.split("__", 1)
-    return (src, sp, dst, dp)
 
 
 class StreamServer:
@@ -81,10 +66,43 @@ class StreamServer:
         batching: Union[bool, str] = True,
         max_batch: int = 32,
         repartitioner=None,  # OnlineRepartitioner (or None)
+        trace: bool = False,
     ):
         self._program = program
         self._opts = dict(program.opts)
         self.telemetry = ServerTelemetry()
+        # streamtrace: one recorder for the server's whole life when
+        # ``trace=True`` — session lifecycle instants, host-round actor
+        # spans, batched-device dispatch/retire events, channel counters.
+        # Export with ``server.trace(path)``.  The numbers recorded are the
+        # SAME measured values fed to ``self.telemetry``, so
+        # ``snapshot_from_trace`` replays this trace into an identical
+        # profile (docs/observability.md).
+        self.recorder: Optional[TraceRecorder] = (
+            TraceRecorder() if trace else None
+        )
+        if self.recorder is not None:
+            self.recorder.meta.update(
+                network=program.graph.name, kind="serve"
+            )
+        # SLO metrics: per-session time-to-first-output and inter-block
+        # delivery latency, plus running service counters — Prometheus
+        # exposition via ``metrics_text()``
+        self.metrics = MetricsRegistry()
+        self._h_ttfo = self.metrics.histogram(
+            "serve_ttfo_seconds",
+            "first submit to first delivered output, per session",
+        )
+        self._h_interblock = self.metrics.histogram(
+            "serve_interblock_seconds",
+            "gap between consecutive output deliveries, per session",
+        )
+        self._c_delivered = self.metrics.counter(
+            "serve_tokens_delivered_total", "tokens delivered to clients"
+        )
+        self._g_active = self.metrics.gauge(
+            "serve_sessions_active", "sessions opened and not yet finished"
+        )
         self.admission_depth = admission_depth or max(
             2 * self._opts["block"], 4096
         )
@@ -169,6 +187,11 @@ class StreamServer:
             session.pipeline = self._build_pipeline(session)
             self._sessions.append(session)
         self.telemetry.count("sessions_opened")
+        self._g_active.add(1)
+        if self.recorder is not None:
+            self.recorder.instant(
+                f"session:{sid}", "session_open", "session"
+            )
         self.notify_work()
         return session
 
@@ -194,12 +217,36 @@ class StreamServer:
             self._check_engine()
         return True
 
+    # -- observability surface -------------------------------------------------
+    def trace(self, path=None) -> Dict:
+        """Export the recorded trace as a Chrome-trace payload (optionally
+        writing it to ``path``).  Requires ``trace=True`` at construction."""
+        if self.recorder is None:
+            raise ServeError(
+                "server was not constructed with trace=True — nothing was "
+                "recorded"
+            )
+        from repro.observability.chrome import (
+            chrome_trace,
+            write_chrome_trace,
+        )
+
+        payload = chrome_trace(self.recorder)
+        if path is not None:
+            write_chrome_trace(payload, path)
+        return payload
+
+    def metrics_text(self) -> str:
+        """The metrics registry in Prometheus text exposition format."""
+        return self.metrics.expose_text()
+
     # -- engine plumbing (called from session/client threads) ----------------
     def notify_work(self, chunks: int = 0, tokens: int = 0) -> None:
-        if chunks:
-            self.telemetry.count("chunks_submitted", chunks)
-        if tokens:
-            self.telemetry.count("tokens_submitted", tokens)
+        if chunks or tokens:
+            # both counters under one telemetry lock: a snapshot() racing
+            # this client thread must never split one submission's chunk
+            # and token counts across two windows
+            self.telemetry.submitted(chunks, tokens)
         with self._wake:
             self._wake.notify_all()
 
@@ -236,7 +283,7 @@ class StreamServer:
         return {
             pid: DeviceBatcher(
                 dp, mode=self.mode, max_batch=self.max_batch,
-                telemetry=self.telemetry,
+                telemetry=self.telemetry, recorder=self.recorder,
             )
             for pid, dp in self._program.device_programs().items()
         }
@@ -252,6 +299,7 @@ class StreamServer:
             default_depth=self._opts["default_depth"],
             max_execs_per_invoke=self._opts["max_execs_per_invoke"],
             carry_state=carry,
+            recorder=self.recorder,
         )
 
     def _engine_main(self) -> None:
@@ -319,6 +367,7 @@ class StreamServer:
                 n = s.pipeline.drain_egress()
                 if n:
                     self.telemetry.count("tokens_delivered", n)
+                    self._observe_delivery(s, n)
                 moved += n
 
             # 5) session completion
@@ -330,7 +379,7 @@ class StreamServer:
                 ):
                     self._record_links(s.pipeline)
                     s.finished.set()
-                    self.telemetry.count("sessions_closed")
+                    self._session_closed(s)
                     with self._wake:
                         self._wake.notify_all()
 
@@ -431,11 +480,38 @@ class StreamServer:
             )
             self._record_links(s.pipeline)
             s.finished.set()
-            self.telemetry.count("sessions_closed")
+            self._session_closed(s)
             with self._wake:
                 self._wake.notify_all()
             hit = True
         return hit
+
+    def _session_closed(self, s: StreamSession) -> None:
+        self.telemetry.count("sessions_closed")
+        self._g_active.add(-1)
+        if self.recorder is not None:
+            self.recorder.instant(
+                f"session:{s.sid}", "session_close", "session",
+                {"error": bool(s.error)},
+            )
+
+    def _observe_delivery(self, s: StreamSession, n: int) -> None:
+        """Per-session SLO accounting at the moment tokens reach the client
+        buffer: TTFO on the first delivery, inter-block gap on every later
+        one, plus the trace's ``deliver`` instant."""
+        now = time.perf_counter_ns()
+        self._c_delivered.inc(n)
+        if s.first_delivery_ns is None:
+            s.first_delivery_ns = now
+            if s.first_submit_ns is not None:
+                self._h_ttfo.observe((now - s.first_submit_ns) / 1e9)
+        elif s.last_delivery_ns is not None:
+            self._h_interblock.observe((now - s.last_delivery_ns) / 1e9)
+        s.last_delivery_ns = now
+        if self.recorder is not None:
+            self.recorder.instant(
+                f"session:{s.sid}", "deliver", "session", {"tokens": n}
+            )
 
     def _record_links(self, pipeline: SessionPipeline) -> None:
         """Fold a pipeline's per-channel token movement since the last
@@ -444,8 +520,21 @@ class StreamServer:
         does so periodically for live sessions and once more at
         completion/stall/swap."""
         module = pipeline.module
+        rec = self.recorder
         for key, delta in pipeline.take_link_deltas().items():
-            self.telemetry.link_moved(_authored_key(module, key), delta)
+            src, sp, dst, dp = authored_channel_key(module, key)
+            self.telemetry.link_moved((src, sp, dst, dp), delta)
+            if rec is not None:
+                # identical delta + authored key as telemetry, so the trace
+                # replays into the same per-link token totals
+                rec.counter(
+                    "channels", f"{src}.{sp}->{dst}.{dp}", delta,
+                    cat="channel",
+                    args={
+                        "src": src, "src_port": sp,
+                        "dst": dst, "dst_port": dp,
+                    },
+                )
 
     # -- the hot swap ----------------------------------------------------------
     def _do_swap(self) -> None:
@@ -472,4 +561,9 @@ class StreamServer:
             "to": self._program.xcf.assignment(),
             "network": self._program.graph.name,
         })
+        if self.recorder is not None:
+            self.recorder.instant(
+                "engine", "hot_swap", "engine",
+                {"to": self._program.xcf.assignment()},
+            )
         self.notify_work()

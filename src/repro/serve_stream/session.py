@@ -86,6 +86,13 @@ class StreamSession:
         self.pipeline: Optional[SessionPipeline] = None  # set by the server
         self.submitted_tokens = 0
         self.error: Optional[str] = None  # set by the engine on a dead stream
+        # SLO timestamps (perf_counter_ns): TTFO = first delivery − first
+        # submit; inter-block latency = gap between consecutive deliveries.
+        # Written by the client thread (first_submit) and the engine thread
+        # (deliveries) — single writer each, so no lock.
+        self.first_submit_ns: Optional[int] = None
+        self.first_delivery_ns: Optional[int] = None
+        self.last_delivery_ns: Optional[int] = None
 
     # -- client side ---------------------------------------------------------
     def submit(
@@ -142,6 +149,14 @@ class StreamSession:
         q.write(values)
         q.publish_writer()  # make the chunk visible to the engine thread
         self.submitted_tokens += len(values)
+        if self.first_submit_ns is None:
+            self.first_submit_ns = time.perf_counter_ns()
+        rec = getattr(self._server, "recorder", None)
+        if rec is not None:
+            rec.instant(
+                f"session:{self.sid}", "submit", "session",
+                {"chunks": 1, "tokens": len(values), "queued": q.count()},
+            )
         self._server.notify_work(chunks=1, tokens=len(values))
 
     def close(self) -> None:
@@ -329,12 +344,15 @@ class SessionPipeline:
         default_depth: int = 4096,
         max_execs_per_invoke: int = 10_000,
         carry_state: Optional[Dict[str, Dict]] = None,
+        recorder=None,
     ):
         from repro.runtime.fifo import ArrayFifo
 
         self.module = module
         self.session = session
         self.max_execs_per_invoke = max_execs_per_invoke
+        self.recorder = recorder  # streamtrace (None = untraced server)
+        self._track = f"session:{session.sid}"
 
         hw_of = module.hw_assignment()
         devset = set(hw_of)
@@ -487,15 +505,21 @@ class SessionPipeline:
         list so profile ingestion can split the time back over authored
         actors (``core.profiler.profile_from_telemetry``)."""
         execs = 0
+        rec = self.recorder
         for name, inst in self.instances.items():
             t0 = time.perf_counter_ns()
             e = inst.invoke(self.max_execs_per_invoke)
-            if telemetry is not None and e:
-                telemetry.actor_fired(
-                    getattr(inst, "telemetry_key", name),
-                    e,
-                    time.perf_counter_ns() - t0,
-                )
+            if e:
+                dt = time.perf_counter_ns() - t0
+                key = getattr(inst, "telemetry_key", name)
+                if telemetry is not None:
+                    telemetry.actor_fired(key, e, dt)
+                if rec is not None:
+                    # same key/fires/duration as the telemetry record, so a
+                    # trace replay reproduces the live actor-time totals
+                    rec.complete(
+                        self._track, key, "actor", t0, dt, {"fires": e}
+                    )
             execs += e
         return execs
 

@@ -124,6 +124,19 @@ class ServerTelemetry:
             for d in (self._win, self.totals):
                 d[what] += n
 
+    def submitted(self, chunks: int, tokens: int) -> None:
+        """One admission event, both counters under ONE lock acquisition.
+
+        Client threads report submissions; two separate ``count()`` calls
+        would let a concurrent ``snapshot()`` land *between* them and split
+        one submission across windows (chunks in the drained window, its
+        tokens in the next) — a per-window invariant violation the online
+        repartitioner would read as a traffic anomaly."""
+        with self._lock:
+            for d in (self._win, self.totals):
+                d["chunks_submitted"] += chunks
+                d["tokens_submitted"] += tokens
+
     def queue_depth(self, depth: int) -> None:
         with self._lock:
             for d in (self._win, self.totals):
