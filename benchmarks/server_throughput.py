@@ -1,22 +1,35 @@
-"""StreamServe throughput: batched vs sequential device dispatch.
+"""StreamServe throughput: continuous vs sequential device dispatch.
 
 Sweeps concurrent sessions 1 -> 32 over a device-placed network and serves
 an identical per-session token stream through the StreamServer twice: once
-with the batcher packing every session's ready block into ONE batched
-device launch (``DeviceProgram.batched_step``), once dispatching one launch
-per session (the pre-server cost model).  The ratio is the dispatch
-amortization the server buys — the per-launch overhead (trace cache lookup,
-argument staging, XLA dispatch) is paid once per *batch* instead of once
-per *session*.
+with the continuous batcher packing every session's ready block into one
+rolling batched launch per round (``DeviceProgram.batched_step``, ragged
+lane packing, join/leave without draining the in-flight set), once
+dispatching one launch per session (the pre-server cost model).  The ratio
+is the dispatch amortization the server buys — the per-launch overhead
+(trace cache lookup, argument staging, XLA dispatch) is paid once per
+*round* instead of once per *session*.
 
 Emits ``server/{net}/{mode}_B{n}`` rows in µs/token (derived: tokens/s)
-plus a ``speedup_B{n}`` row per swept point; everything lands in
-``BENCH_streams.json`` via the harness (smoke mode shrinks streams ~10x).
+plus a gated ``speedup_B{n}`` ratio row per swept point, and per-session
+SLO percentiles (TTFO + inter-block latency p50/p95/p99) from the serve
+histograms.
+
+A second **scale** scenario serves O(1000) short sessions (BENCH_SMOKE
+shrinks it) *plus one deliberately huge session*: chunked admission splits
+the hog at the admission queue, so the small streams' p95 TTFO stays
+bounded while the hog trickles in.  Emits ``scale_S{n}`` throughput,
+small-session latency percentiles, and the ungated ``hog_fairness`` ratio
+(hog submit wall time over small-session p95 TTFO — how much earlier the
+rest of the fleet sees first output than the hog finishes admission).
+
+Everything lands in ``BENCH_streams.json`` via the harness.
 """
 
 from __future__ import annotations
 
 import os
+import threading
 import time
 
 from _util import emit
@@ -30,9 +43,14 @@ SESSIONS = (1, 2, 4, 8, 16, 32)
 TOTAL_TOKENS = 262144  # per sweep point, split across the sessions — every
 #                        point moves the same work, so small-B runs are not
 #                        drowned in scheduling jitter
+SCALE_SESSIONS = 1000  # the O(1000)-session scenario (one hog on top)
+SCALE_TOKENS = 256     # per small session
+SCALE_BLOCK = 256
+HOG_FACTOR = 64        # hog stream = HOG_FACTOR * SCALE_TOKENS
 if os.environ.get("BENCH_SMOKE"):
     SESSIONS = (1, 2, 4, 8)
     TOTAL_TOKENS = 32768
+    SCALE_SESSIONS = 96
 
 
 def _stream(n: int) -> list:
@@ -74,7 +92,9 @@ def _serve_once(prog, batching: bool, n_sessions: int, stream):
 
 def _warm(prog) -> None:
     """Trace every dispatch variant outside the timed regions: the unbatched
-    step and one batched step per power-of-two bucket the sweep can hit."""
+    step and one batched specialization per sweep width (the continuous
+    batcher memoizes launch widths, and a steady sweep point runs at
+    ``min(n, max_batch)`` live lanes)."""
     import jax
     import jax.numpy as jnp
 
@@ -88,22 +108,98 @@ def _warm(prog) -> None:
     }
     state = {a: dict(s) for a, s in dp.init_state.items()}
     jax.block_until_ready(dp.step(state, pay)[1])
-    b = 1
-    while b <= max(SESSIONS):
+    for b in SESSIONS:
         ins_b = {
             k: (jnp.stack([v[0]] * b), jnp.stack([v[1]] * b))
             for k, v in pay.items()
         }
         st_b = dp.stack_states([dp.init_state] * b)
         jax.block_until_ready(dp.batched_step(b)(st_b, ins_b)[1])
-        b *= 2
+
+
+def _pct(sorted_vals, p: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = round(p / 100 * (len(sorted_vals) - 1))
+    return sorted_vals[min(i, len(sorted_vals) - 1)]
+
+
+def _scale_with_hog() -> None:
+    """O(1000) short sessions plus one hog whose single submission is
+    HOG_FACTOR times a small stream — far beyond the admission queue, so
+    it only fits through chunked admission."""
+    n = SCALE_SESSIONS
+    net, _ = NETWORKS[NET](n=SCALE_TOKENS)
+    prog = repro.compile(net, backend="device", block=SCALE_BLOCK)
+    small = _stream(SCALE_TOKENS)
+    hog_stream = _stream(SCALE_TOKENS * HOG_FACTOR)
+    with prog.serve(
+        batching=True,
+        max_batch=max(SESSIONS),
+        admission_depth=2 * SCALE_BLOCK,
+        admission_chunk=SCALE_BLOCK,
+    ) as server:
+        hog = server.open_session()
+        smalls = [server.open_session() for _ in range(n)]
+        t0 = time.perf_counter()
+        hog_secs = [0.0]
+
+        def run_hog():
+            hog.submit(hog_stream, port="source")
+            hog_secs[0] = time.perf_counter() - t0
+            hog.close()
+
+        th = threading.Thread(target=run_hog)
+        th.start()
+        for s in smalls:
+            s.submit(small, port="source")
+            s.close()
+        th.join()
+        assert server.drain(timeout=900), "scale drain timed out"
+        dt = time.perf_counter() - t0
+        t = server.telemetry.lifetime()
+        assert t.chunks_split >= 1, "the hog submission was never chunked"
+        ttfo = sorted(
+            (s.first_delivery_ns - s.first_submit_ns) / 1e9
+            for s in smalls
+            if s.first_delivery_ns is not None
+        )
+        assert len(ttfo) == n, "a small session never delivered"
+        ib = server.metrics.get("serve_interblock_seconds").summary()
+    total = n * SCALE_TOKENS + len(hog_stream)
+    emit(
+        f"server/{NET}/scale_S{n}",
+        1e6 * dt / total,
+        f"tput={total / dt:.0f}tok/s sessions={n}+hog "
+        f"mean_batch={t.mean_batch:.1f}",
+    )
+    for p in (50, 95, 99):
+        emit(
+            f"server/{NET}/scale_ttfo_p{p}_S{n}",
+            _pct(ttfo, p) * 1e6,
+            f"small-session TTFO, hog chunked ({t.chunks_split} splits)",
+        )
+    for p in ("p50", "p95", "p99"):
+        emit(
+            f"server/{NET}/scale_interblock_{p}_S{n}",
+            ib[p] * 1e6,
+            f"n={int(ib['count'])} max={ib['max'] * 1e6:.0f}us",
+        )
+    # ungated (wall-clock noisy): >> 1 means the fleet saw first output
+    # long before the hog even finished submitting
+    emit(
+        f"server/{NET}/hog_fairness",
+        derived=f"hog admission {hog_secs[0]:.2f}s vs small p95 TTFO "
+                f"{_pct(ttfo, 95) * 1e3:.1f}ms",
+        ratio=hog_secs[0] / max(_pct(ttfo, 95), 1e-9),
+    )
 
 
 def main() -> None:
     net, _ = NETWORKS[NET](n=TOTAL_TOKENS)
     prog = repro.compile(net, backend="device", block=BLOCK)
     full_stream = _stream(TOTAL_TOKENS)
-    # warm the jit caches (unbatched + every batch bucket) and the engine
+    # warm the jit caches (unbatched + every sweep width) and the engine
     # paths outside the timed region
     _warm(prog)
     _serve_once(prog, True, 2, full_stream[: 2 * BLOCK])
@@ -114,7 +210,7 @@ def main() -> None:
         stream = full_stream[:per_session]
         total = n * per_session
         secs = {}
-        for mode, batching in (("batched", True), ("sequential", False)):
+        for mode, batching in (("continuous", True), ("sequential", False)):
             # best-of-3: host load drift must not masquerade as a dispatch
             # effect (same discipline as table1's interleaved device steps)
             dt, ttfo, ib = min(
@@ -127,7 +223,7 @@ def main() -> None:
                 1e6 * dt / total,
                 f"tput={total / dt:.0f}tok/s sessions={n}",
             )
-            if mode == "batched":
+            if mode == "continuous":
                 # per-session SLO percentiles from the serve histograms:
                 # time-to-first-output and the inter-block delivery gap
                 # (seconds -> µs), taken from the best-of-3 run
@@ -140,10 +236,12 @@ def main() -> None:
                         )
         emit(
             f"server/{NET}/speedup_B{n}",
-            derived=f"{secs['sequential'] / secs['batched']:.2f}x batched "
-                    f"over sequential dispatch",
-            ratio=secs["sequential"] / secs["batched"],
+            derived=f"{secs['sequential'] / secs['continuous']:.2f}x "
+                    f"continuous over sequential dispatch",
+            ratio=secs["sequential"] / secs["continuous"],
         )
+
+    _scale_with_hog()
 
 
 if __name__ == "__main__":

@@ -395,6 +395,7 @@ class Program:
     def serve(
         self,
         *,
+        admission_chunk: Optional[int] = None,
         admission_depth: Optional[int] = None,
         batching: bool = True,
         max_batch: int = 32,
@@ -406,11 +407,13 @@ class Program:
 
         ``run()`` executes one stream and exits; ``serve()`` returns a
         ``repro.serve_stream.StreamServer`` that keeps the compiled runtimes
-        resident and multiplexes many client sessions over them — batched
-        device dispatch (B sessions, one launch), bounded admission queues,
-        live telemetry, and optional online repartitioning (pass an
-        ``OnlineRepartitioner``).  Use as a context manager, or pass
-        ``start=True``.  See ``docs/server.md``.
+        resident and multiplexes many client sessions over them — continuous
+        batched device dispatch (sessions join/leave a rolling batch at
+        block boundaries), bounded admission queues with chunked admission
+        (``admission_chunk`` tokens per chunk — large submissions are split
+        so one session cannot starve the rest), live telemetry, and optional
+        online repartitioning (pass an ``OnlineRepartitioner``).  Use as a
+        context manager, or pass ``start=True``.  See ``docs/server.md``.
 
         ``trace=True`` records the server's whole life with streamtrace
         (``server.trace(path)`` exports Chrome-trace JSON; ``server
@@ -421,6 +424,7 @@ class Program:
 
         server = StreamServer(
             self,
+            admission_chunk=admission_chunk,
             admission_depth=admission_depth,
             batching=batching,
             max_batch=max_batch,

@@ -112,10 +112,10 @@ def snapshot_from_trace(
     actor_fires: Dict[str, int] = {}
     actor_time: Dict[str, int] = {}
     channel_tokens: Dict[ChannelKey, int] = {}
-    dispatches = lanes = 0
+    dispatches = lanes = width = lanes_peak = 0
     device_time_ns = 0
     tok_in = tok_out = 0
-    opened = closed = chunks = submitted = delivered = swaps = 0
+    opened = closed = chunks = split = submitted = delivered = swaps = 0
     queue_peak = 0
     t_lo: Optional[float] = None
     t_hi = 0.0
@@ -149,7 +149,10 @@ def snapshot_from_trace(
         elif cat == "device":
             if ev["name"] == "dispatch":
                 dispatches += 1
-                lanes += int(args.get("lanes", 1))
+                ln = int(args.get("lanes", 1))
+                lanes += ln
+                lanes_peak = max(lanes_peak, ln)
+                width += int(args.get("width", 0)) or ln
                 tok_in += int(args.get("tokens_in", 0))
                 device_time_ns += int(args.get("time_ns", 0))
             elif ev["name"] == "retire":
@@ -161,6 +164,8 @@ def snapshot_from_trace(
             if ev["name"] == "dispatch":
                 dispatches += 1
                 lanes += 1
+                width += 1
+                lanes_peak = max(lanes_peak, 1)
                 tok_in += int(args.get("tokens", 0))
             if ev["name"] in ("dispatch", "sync", "retire"):
                 device_time_ns += round(ev.get("dur", 0.0) * 1e3)
@@ -173,6 +178,7 @@ def snapshot_from_trace(
                 closed += 1
             elif ev["name"] == "submit":
                 chunks += int(args.get("chunks", 1))
+                split += int(args.get("split", 0))
                 submitted += int(args.get("tokens", 0))
                 queue_peak = max(queue_peak, int(args.get("queued", 0)))
             elif ev["name"] == "deliver":
@@ -189,12 +195,15 @@ def snapshot_from_trace(
         channel_tokens=channel_tokens,
         device_dispatches=dispatches,
         device_lanes=lanes,
+        device_width=width,
+        lanes_peak=lanes_peak,
         device_time_ns=device_time_ns,
         device_tokens_in=tok_in,
         device_tokens_out=tok_out,
         sessions_opened=opened,
         sessions_closed=closed,
         chunks_submitted=chunks,
+        chunks_split=split,
         tokens_submitted=submitted,
         tokens_delivered=delivered,
         queue_peak=queue_peak,

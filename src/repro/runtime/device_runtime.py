@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.actor import Actor
 from repro.core.graph import ActorGraph, GraphError
@@ -112,8 +113,9 @@ class DeviceProgram:
         fused region, one Pallas launch) instead of B.
 
         One traced-through-vmap callable backs every batch size; jit
-        specializes (and caches) per concrete B, so callers bucket sizes
-        (e.g. powers of two) to bound recompiles.
+        specializes (and caches) per concrete B, so callers memoize the
+        widths they launch (the continuous batcher pads a round up to an
+        already-compiled width within ``LANE_SLACK``) to bound recompiles.
         """
         assert self.raw_step is not None, (
             f"{self.name}: legacy DeviceProgram without raw_step cannot batch"
@@ -145,6 +147,26 @@ class DeviceProgram:
             ),
             self.init_state,
         )
+
+    @staticmethod
+    def pack_lanes(
+        payloads: Sequence[Dict[str, Tuple[Any, Any]]],
+    ) -> Dict[str, Tuple[Any, Any]]:
+        """Per-lane staged payloads -> one batched input dict.
+
+        Each payload maps ``"actor.port" -> (vals, mask)`` host arrays of
+        shape ``(block,)`` (or ``(k, block)`` for megastep programs); the
+        result stacks them along a new leading lane axis, matching the
+        leading batch axis of ``batched_step``/``batched_megastep``.  Lane
+        order is kept — lane *i* of the launch is ``payloads[i]``."""
+        keys = payloads[0].keys()
+        return {
+            k: (
+                jnp.asarray(np.stack([p[k][0] for p in payloads])),
+                jnp.asarray(np.stack([p[k][1] for p in payloads])),
+            )
+            for k in keys
+        }
 
     @staticmethod
     def stack_states(states: Sequence[Dict[str, Any]]) -> Dict[str, Any]:

@@ -20,6 +20,7 @@ Layers (see ``docs/server.md``):
                hot-swaps the XCF at a drained chunk boundary
 """
 
+from repro.serve_stream.admission import DeficitRoundRobin
 from repro.serve_stream.batcher import DeviceBatcher
 from repro.serve_stream.engine import StreamServer
 from repro.serve_stream.repartition import OnlineRepartitioner
@@ -32,6 +33,7 @@ from repro.serve_stream.telemetry import ServerTelemetry, TelemetrySnapshot
 
 __all__ = [
     "AdmissionFull",
+    "DeficitRoundRobin",
     "DeviceBatcher",
     "OnlineRepartitioner",
     "ServeError",

@@ -1,32 +1,46 @@
-"""Batched device dispatch — B sessions, one launch.
+"""Continuous batched device dispatch — a rolling batch, one launch per round.
 
 The sequential path costs one XLA dispatch (and one Pallas launch inside
-each fused region) *per session per block*.  The batcher stacks the staged
-blocks and device states of every session with work into a single
-``DeviceProgram.batched_step`` call: lanes are vmapped, so each session's
-lane is bit-identical to its own sequential dispatch while the launch
-overhead is paid once.
+each fused region) *per session per block*.  The batcher packs the staged
+blocks of many sessions into a single ``DeviceProgram`` launch: lanes are
+vmapped, so each session's lane is bit-identical to its own sequential
+dispatch while the launch overhead is paid once.
 
-Mechanics:
+Unlike the original drain-per-block batcher (power-of-two buckets, each
+session riding at most one in-flight batch), dispatch is *continuous*:
 
-  * **bucketing** — batch sizes are rounded up to the next power of two
-    (capped at ``max_batch``) and padded by repeating the last lane, so jit
-    specializes O(log B) programs instead of one per session count; padded
-    lanes are discarded on retire.
-  * **double buffering** — up to two batches may be in flight (a session
-    rides at most one), so the engine stages and stacks the next batch's
-    host-side arrays while the device chews on the previous one, and a
-    fresh launch goes out the moment the older batch retires.
-  * **sequential mode** — ``mode="sequential"`` dispatches one ``step`` per
+  * **rolling rounds** — sessions join and leave the batch at block
+    boundaries without draining the in-flight set.  A session's device
+    state is never round-tripped to host between rounds: each launch
+    immediately rebinds ``stage.state`` to that lane's slice of the
+    launch's output-state *future*, so the same session can ride the very
+    next round while the previous one is still computing — XLA chains the
+    launches through the state dependency.  Retire only moves *outputs*
+    back to host FIFOs, oldest round first, preserving per-session order.
+  * **ragged lane packing** — a round's batch width is the live lane
+    count, not a power-of-two bucket.  When reusing an already-compiled
+    width saves a retrace (within ``LANE_SLACK`` waste), the round is
+    padded with *masked* lanes — init state, all-False masks, outputs
+    discarded — instead of duplicating the last real lane's state and
+    payload.  jit caches one specialization per width actually used,
+    bounded by ``max_batch``.
+  * **fairness** — the engine hands ``launch`` a fairness-ordered stage
+    list (``serve_stream.admission.DeficitRoundRobin``); everything past
+    ``max_batch`` waits for the next round and the rotation guarantees it
+    gets one.
+  * **sequential mode** — ``mode="sequential"`` dispatches one launch per
     session instead; it exists as the benchmark baseline
-    (``benchmarks/server_throughput.py``) and a debugging aid.
+    (``benchmarks/server_throughput.py``) and a debugging aid.  State
+    chaining works the same way, so even sequential sessions ride
+    back-to-back launches.
 """
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,12 +48,11 @@ import numpy as np
 
 from repro.serve_stream.session import DeviceStage
 
-
-def _bucket(n: int, cap: int) -> int:
-    b = 1
-    while b < n:
-        b *= 2
-    return min(b, cap)
+# A round may be padded with masked lanes up to this factor over the live
+# lane count when that reuses an already-compiled width — bounds wasted
+# lanes at ~1/3 (the power-of-two buckets it replaces wasted up to 2x,
+# *and* computed a duplicated real lane instead of a masked no-op).
+LANE_SLACK = 4 / 3
 
 
 def _tree_ready(tree) -> bool:
@@ -51,11 +64,14 @@ def _tree_ready(tree) -> bool:
 
 
 @dataclass
-class _Inflight:
-    stages: List[DeviceStage]          # one per real lane, in lane order
-    result: Tuple                      # (state', outs, idle) — batched or not
+class _Round:
+    """One in-flight launch: ``riders`` are the real lanes (lane index ==
+    list position); padded mask-only lanes are never retired."""
+
+    riders: List[DeviceStage]
+    outs: Dict                         # {port: (vals, mask)} — batched or not
+    width: int                         # launch width (>= len(riders))
     batched: bool
-    lanes: int                         # real lanes (≤ padded batch size)
     t_launch_ns: int = 0
 
 
@@ -66,13 +82,15 @@ class DeviceBatcher:
         self,
         program,
         *,
-        mode: str = "batched",      # "batched" | "sequential"
+        mode: str = "continuous",   # "continuous" | "sequential"
         max_batch: int = 32,
-        depth: int = 2,             # in-flight batches (double buffering)
+        depth: int = 2,             # in-flight rounds (double buffering)
         telemetry=None,
         recorder=None,
     ):
-        if mode not in ("batched", "sequential"):
+        if mode == "batched":       # legacy alias for the rolling batcher
+            mode = "continuous"
+        if mode not in ("continuous", "sequential"):
             raise ValueError(f"DeviceBatcher mode {mode!r}")
         self.program = program
         self.mode = mode
@@ -83,17 +101,48 @@ class DeviceBatcher:
         self._track = "batch:" + (
             getattr(program, "partition", "") or program.name
         )
-        self.inflight: List[_Inflight] = []
+        self.inflight: List[_Round] = []
+        self._widths: set = set()  # batch widths already traced
+        self._pad_payload = None   # zero (vals, mask) arrays, built lazily
 
-    def _traced_dispatch(self, lanes: int, tokens_in: int) -> None:
+    # -- width selection ------------------------------------------------------
+    def _width(self, live: int) -> int:
+        """Smallest already-compiled width within ``LANE_SLACK`` of the live
+        lane count, else exactly the live count (and remember it)."""
+        cap = min(math.ceil(live * LANE_SLACK), self.max_batch)
+        reuse = [w for w in self._widths if live <= w <= cap]
+        w = min(reuse) if reuse else live
+        self._widths.add(w)
+        return w
+
+    def _pad(self) -> Dict[str, Tuple[np.ndarray, np.ndarray]]:
+        """The masked no-op payload one pad lane contributes: zeros with an
+        all-False mask, so the vmapped step treats the lane as dead work."""
+        if self._pad_payload is None:
+            from repro.runtime.plink import _np_dtype
+
+            k = max(1, getattr(self.program, "megastep_k", 1))
+            shape = (
+                (k, self.program.block) if k > 1 else (self.program.block,)
+            )
+            self._pad_payload = {
+                f"{a}.{p}": (
+                    np.zeros(shape, _np_dtype(dt)),
+                    np.zeros(shape, bool),
+                )
+                for (a, p, dt) in self.program.in_ports
+            }
+        return self._pad_payload
+
+    def _traced_dispatch(self, lanes: int, tokens_in: int, width: int) -> None:
         """Mirror one ``device_dispatched`` telemetry record into the trace
         (same lanes/token counts, so replay is exact)."""
         if self.telemetry is not None:
-            self.telemetry.device_dispatched(lanes, tokens_in)
+            self.telemetry.device_dispatched(lanes, tokens_in, width=width)
         if self.recorder is not None:
             self.recorder.instant(
                 self._track, "dispatch", "device",
-                {"lanes": lanes, "tokens_in": tokens_in},
+                {"lanes": lanes, "tokens_in": tokens_in, "width": width},
             )
 
     # -- launch --------------------------------------------------------------
@@ -101,106 +150,104 @@ class DeviceBatcher:
         return len(self.inflight) < self.depth
 
     def launch(self, stages: List[DeviceStage]) -> int:
-        """Dispatch the staged blocks of ``stages`` (each must have just
-        produced a payload via ``stage()``); returns lanes launched."""
+        """Dispatch one round over up to ``max_batch`` of ``stages`` (in the
+        given order — the engine's fairness ordering); returns lanes
+        launched.  Stages already riding an earlier round may join: their
+        state is the previous round's output future and XLA serializes the
+        launches through it."""
         payloads = []
         live: List[DeviceStage] = []
         for st in stages:
+            if len(live) >= self.max_batch:
+                break
             staged = st.stage()
             if staged is not None:
                 payloads.append(staged)
                 live.append(st)
         if not live:
             return 0
-        mark = len(self.inflight)
         t0 = time.perf_counter_ns()
-        if self.mode == "sequential" or len(live) == 1:
+        if self.mode == "sequential":
             # one dispatch per session — the per-session baseline.  launch()
             # routes to the megastep when the program runs k>1 iterations
             # per dispatch (payloads are (k, block) chunk stacks).
             for st, staged in zip(live, payloads):
+                tokens = sum(int(m.sum()) for _, m in staged.values())
                 ins = {
                     k: (jnp.asarray(v), jnp.asarray(m))
                     for k, (v, m) in staged.items()
                 }
-                res = self.program.launch(st.state, ins)
+                state, outs, _idle = self.program.launch(st.state, ins)
+                st.state = state  # the donated chain: next launch feeds here
+                st.inflight += 1
                 self.inflight.append(
-                    _Inflight([st], res, batched=False, lanes=1)
+                    _Round([st], outs, width=1, batched=False)
                 )
-                self._traced_dispatch(
-                    1, sum(int(m.sum()) for _, m in staged.values())
-                )
+                self._traced_dispatch(1, tokens, width=1)
         else:
-            for i in range(0, len(live), self.max_batch):
-                c_live = live[i:i + self.max_batch]
-                c_pay = payloads[i:i + self.max_batch]
-                b = _bucket(len(c_live), self.max_batch)
-                padded = c_pay + [c_pay[-1]] * (b - len(c_live))
-                pad_states = [st.state for st in c_live]
-                pad_states += [c_live[-1].state] * (b - len(c_live))
-                state_b = self.program.stack_states(pad_states)
-                ins_b = {
-                    k: (
-                        jnp.asarray(np.stack([p[k][0] for p in padded])),
-                        jnp.asarray(np.stack([p[k][1] for p in padded])),
-                    )
-                    for k in padded[0]
-                }
-                batched_fn = (
-                    self.program.batched_megastep(b)
-                    if getattr(self.program, "megastep_k", 1) > 1
-                    else self.program.batched_step(b)
-                )
-                res = batched_fn(state_b, ins_b)
-                self.inflight.append(
-                    _Inflight(c_live, res, batched=True, lanes=len(c_live))
-                )
-                self._traced_dispatch(
-                    len(c_live),
-                    sum(
-                        int(m.sum())
-                        for p in c_pay
-                        for _, m in p.values()
-                    ),
-                )
+            tokens = sum(
+                int(m.sum()) for p in payloads for _, m in p.values()
+            )
+            width = self._width(len(live))
+            padded = payloads + [self._pad()] * (width - len(live))
+            states = [st.state for st in live]
+            states += [self.program.init_state] * (width - len(live))
+            state_b = self.program.stack_states(states)
+            ins_b = self.program.pack_lanes(padded)
+            batched_fn = (
+                self.program.batched_megastep(width)
+                if getattr(self.program, "megastep_k", 1) > 1
+                else self.program.batched_step(width)
+            )
+            state_b, outs, _idle = batched_fn(state_b, ins_b)
+            for lane, st in enumerate(live):
+                # rebind each rider to its lane's output-state future so it
+                # can ride the NEXT round before this one retires
+                st.state = self.program.unstack_state(state_b, lane)
+                st.inflight += 1
+            self.inflight.append(
+                _Round(live, outs, width=width, batched=True)
+            )
+            self._traced_dispatch(len(live), tokens, width=width)
         dt = time.perf_counter_ns() - t0
-        new = self.inflight[mark:]
+        new = self.inflight[-1:] if self.mode != "sequential" else (
+            self.inflight[-len(live):]
+        )
         for entry in new:  # split the call's wall time across its dispatches
             entry.t_launch_ns = dt // len(new)
         return len(live)
 
     # -- retire --------------------------------------------------------------
     def poll(self, block: bool = False) -> int:
-        """Retire completed batches (oldest first, preserving per-session
+        """Retire completed rounds (oldest first, preserving per-session
         order); ``block=True`` forces the oldest to completion.  Returns
         tokens moved back into host FIFOs."""
         moved = 0
         while self.inflight:
             head = self.inflight[0]
-            if not block and not _tree_ready(head.result):
+            if not block and not _tree_ready(head.outs):
                 break
             moved += self._retire(head)
             self.inflight.pop(0)
             block = False  # only force the oldest
         return moved
 
-    def _retire(self, entry: _Inflight) -> int:
+    def _retire(self, entry: _Round) -> int:
         t0 = time.perf_counter_ns()
-        state, outs, _idle = entry.result
         moved = 0
         if entry.batched:
             outs_np = {
-                k: (np.asarray(v), np.asarray(m)) for k, (v, m) in outs.items()
+                k: (np.asarray(v), np.asarray(m))
+                for k, (v, m) in entry.outs.items()
             }
-            for lane, st in enumerate(entry.stages):
-                lane_state = self.program.unstack_state(state, lane)
+            for lane, st in enumerate(entry.riders):
                 lane_outs = {
                     k: (v[lane], m[lane]) for k, (v, m) in outs_np.items()
                 }
-                moved += st.retire(lane_state, lane_outs)
+                moved += st.retire(lane_outs)
         else:
-            (st,) = entry.stages
-            moved += st.retire(state, outs)
+            (st,) = entry.riders
+            moved += st.retire(entry.outs)
         dt = time.perf_counter_ns() - t0
         if self.telemetry is not None:
             self.telemetry.device_retired(moved, dt + entry.t_launch_ns)
@@ -212,7 +259,7 @@ class DeviceBatcher:
                 self._track, "retire", "device", t0, dt,
                 {
                     "tokens_out": moved,
-                    "lanes": entry.lanes,
+                    "lanes": len(entry.riders),
                     "time_ns": dt + entry.t_launch_ns,
                 },
             )

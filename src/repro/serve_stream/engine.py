@@ -7,9 +7,12 @@ with one engine thread driving cooperative rounds:
 
   admission pump   sessions' bounded queues -> ingress FIFOs (backpressure)
   host round       every session's host actor machines fire round-robin
-  device dispatch  the batcher packs ready blocks from many sessions into
-                   ONE batched device launch (``DeviceProgram.batched_step``,
-                   double-buffered) — B sessions, one dispatch
+  device dispatch  the continuous batcher packs ready blocks from many
+                   sessions into ONE rolling device launch per round —
+                   sessions join/leave at block boundaries without draining
+                   the in-flight set, lane order decided by a deficit
+                   round-robin with a TTFO-histogram boost
+                   (``serve_stream.admission.DeficitRoundRobin``)
   egress drain     result FIFOs -> per-session output buffers
   repartition      telemetry feeds the online repartitioner; an accepted
                    XCF is hot-swapped at a fully drained chunk boundary
@@ -36,6 +39,7 @@ from repro.observability.metrics import MetricsRegistry
 from repro.observability.recorder import TraceRecorder
 from repro.observability.trace_profile import authored_channel_key
 from repro.runtime.scheduler import AdaptiveBackoff
+from repro.serve_stream.admission import DeficitRoundRobin
 from repro.serve_stream.batcher import DeviceBatcher
 from repro.serve_stream.session import (
     ServeError,
@@ -63,6 +67,7 @@ class StreamServer:
         program,
         *,
         admission_depth: Optional[int] = None,
+        admission_chunk: Optional[int] = None,
         batching: Union[bool, str] = True,
         max_batch: int = 32,
         repartitioner=None,  # OnlineRepartitioner (or None)
@@ -106,11 +111,17 @@ class StreamServer:
         self.admission_depth = admission_depth or max(
             2 * self._opts["block"], 4096
         )
-        self.mode = (
+        # oversized submissions are split into chunks of at most this many
+        # tokens at admission (None = one admission queue's worth)
+        self.admission_chunk = admission_chunk
+        mode = (
             batching if isinstance(batching, str)
-            else ("batched" if batching else "sequential")
+            else ("continuous" if batching else "sequential")
         )
+        self.mode = "continuous" if mode == "batched" else mode
         self.max_batch = max_batch
+        self._sched = DeficitRoundRobin()
+        self._ttfo_p95 = 0.0  # cached from the histogram every few rounds
         self.repartitioner = repartitioner
         if repartitioner is not None:
             repartitioner.bind(self)
@@ -241,12 +252,14 @@ class StreamServer:
         return self.metrics.expose_text()
 
     # -- engine plumbing (called from session/client threads) ----------------
-    def notify_work(self, chunks: int = 0, tokens: int = 0) -> None:
+    def notify_work(
+        self, chunks: int = 0, tokens: int = 0, split: int = 0
+    ) -> None:
         if chunks or tokens:
             # both counters under one telemetry lock: a snapshot() racing
             # this client thread must never split one submission's chunk
             # and token counts across two windows
-            self.telemetry.submitted(chunks, tokens)
+            self.telemetry.submitted(chunks, tokens, split=split)
         with self._wake:
             self._wake.notify_all()
 
@@ -330,6 +343,11 @@ class StreamServer:
                 active = [s for s in self._sessions if not s.finished.is_set()]
                 swapping = self._pending_xcf is not None
             moved = 0
+            self._round += 1
+            if self._round % 128 == 1:
+                # refresh the scheduler's view of the TTFO tail — the
+                # histogram walk is too costly to run every round
+                self._ttfo_p95 = self._h_ttfo.percentile(95)
 
             # 1) admission pump (paused while a swap is draining)
             if not swapping:
@@ -344,22 +362,33 @@ class StreamServer:
                 moved += s.pipeline.host_round(self.telemetry)
 
             # 3) device lanes: per partition, retire what finished, then
-            # launch what is ready — lanes are independent, so partition A's
-            # next batch goes out while partition B's is still in flight
+            # launch one continuous round from whatever is ready — riding an
+            # in-flight round does not disqualify a stage (state chains
+            # through the launch's output future), and the deficit
+            # round-robin decides who gets the max_batch lanes.  Partitions
+            # are independent, so partition A's next round goes out while
+            # partition B's is still in flight.
             pending_device = False
+            now_ns = time.perf_counter_ns()
             for pid, batcher in self._batchers.items():
                 moved += batcher.poll()
-                ready = []
+                cands = []
                 for s in active:
                     stage = s.pipeline.stages.get(pid)
-                    if (
-                        stage is not None
-                        and not stage.pending
-                        and stage.ready_tokens() > 0
-                    ):
-                        ready.append(stage)
-                if ready and batcher.can_launch():
-                    moved += batcher.launch(ready)
+                    if stage is not None and stage.ready_tokens() > 0:
+                        cands.append((s, stage))
+                if cands and batcher.can_launch():
+                    ordered = self._sched.order(
+                        cands, now_ns=now_ns, ttfo_p95_s=self._ttfo_p95
+                    )
+                    before = [
+                        (s, st, st.tokens_staged) for s, st in ordered
+                    ]
+                    moved += batcher.launch([st for _s, st in ordered])
+                    for s, st, t0 in before:
+                        d = st.tokens_staged - t0
+                        if d:
+                            self._sched.charge(s.sid, d, self._round)
                 pending_device = pending_device or batcher.pending
 
             # 4) egress
@@ -391,7 +420,6 @@ class StreamServer:
             if self.repartitioner is not None and not swapping:
                 # flush live sessions' link deltas into the window first, so
                 # the MILP sees channel traffic from still-open streams too
-                self._round += 1
                 if self._round % 32 == 0:
                     for s in active:
                         self._record_links(s.pipeline)
@@ -421,6 +449,25 @@ class StreamServer:
         # shutdown: flush anything still in flight so state stays consistent
         for batcher in self._batchers.values():
             batcher.drain()
+        # ...and flush egress: the drain above retires tokens into FIFOs
+        # *behind* the egress drain of the loop's last round, possibly with
+        # host actors still between them — without this, tokens retired
+        # during stop would never reach session output buffers
+        with self._lock:
+            sessions = list(self._sessions)
+        progressed = True
+        while progressed:
+            progressed = False
+            for s in sessions:
+                if s.pipeline is None:
+                    continue
+                if s.pipeline.host_round(self.telemetry):
+                    progressed = True
+                n = s.pipeline.drain_egress()
+                if n:
+                    self.telemetry.count("tokens_delivered", n)
+                    self._observe_delivery(s, n)
+                    progressed = True
 
     def _stall_check(
         self, active: List[StreamSession], swapping: bool
@@ -488,6 +535,7 @@ class StreamServer:
 
     def _session_closed(self, s: StreamSession) -> None:
         self.telemetry.count("sessions_closed")
+        self._sched.forget(s.sid)
         self._g_active.add(-1)
         if self.recorder is not None:
             self.recorder.instant(

@@ -103,11 +103,18 @@ class StreamSession:
         block: bool = True,
         timeout: Optional[float] = None,
     ) -> None:
-        """Enqueue one input chunk, with admission backpressure.
+        """Enqueue one input submission, with admission backpressure.
 
-        ``port`` may be omitted for single-ingress programs.  When the queue
-        lacks space: ``block=True`` waits (engine drains it), ``block=False``
-        raises ``AdmissionFull`` — the client's cue to slow down.
+        ``port`` may be omitted for single-ingress programs.  A submission
+        larger than the admission chunk (``server.admission_chunk``, default
+        the queue capacity) is *split at admission*: chunks enter the queue
+        one at a time under backpressure, so one huge submission trickles in
+        while the engine keeps serving every other stream — it can no
+        longer park a whole stream's tokens ahead of everyone else's.
+
+        When the queue lacks space: ``block=True`` waits (engine drains
+        it), ``block=False`` raises ``AdmissionFull`` unless the *entire*
+        submission fits right now — the client's cue to slow down.
         """
         if self.closed:
             raise ServeError(f"session {self.sid}: submit after close()")
@@ -126,38 +133,53 @@ class StreamSession:
                 f"(have {sorted(self.queues)})"
             ) from None
         values = list(values)
-        if len(values) > q.capacity:
-            raise ServeError(
-                f"session {self.sid}: chunk of {len(values)} exceeds the "
-                f"admission queue ({q.capacity}); split the chunk or raise "
-                f"admission_depth"
-            )
-        deadline = None if timeout is None else time.perf_counter() + timeout
-        q.snapshot_writer()  # see the engine's latest published reads
-        while q.space() < len(values):
-            if not block:
-                raise AdmissionFull(
-                    f"session {self.sid}: admission queue {port!r} full "
-                    f"({q.capacity} tokens)"
-                )
-            if not self._server.wait_for_space(deadline):
-                raise AdmissionFull(
-                    f"session {self.sid}: submit timed out after {timeout}s "
-                    f"waiting for admission space on {port!r}"
-                )
-            q.snapshot_writer()
-        q.write(values)
-        q.publish_writer()  # make the chunk visible to the engine thread
-        self.submitted_tokens += len(values)
+        # TTFO stamps BEFORE any admission wait: the SLO clock starts when
+        # the client handed us tokens, so queueing delay under backpressure
+        # is part of what the histogram measures, not silently excluded
         if self.first_submit_ns is None:
             self.first_submit_ns = time.perf_counter_ns()
-        rec = getattr(self._server, "recorder", None)
-        if rec is not None:
-            rec.instant(
-                f"session:{self.sid}", "submit", "session",
-                {"chunks": 1, "tokens": len(values), "queued": q.count()},
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        q.snapshot_writer()  # see the engine's latest published reads
+        if not block and q.space() < len(values):
+            raise AdmissionFull(
+                f"session {self.sid}: admission queue {port!r} full "
+                f"({q.capacity} tokens)"
             )
-        self._server.notify_work(chunks=1, tokens=len(values))
+        step = min(
+            q.capacity,
+            getattr(self._server, "admission_chunk", None) or q.capacity,
+        )
+        for i in range(0, max(len(values), 1), step):
+            chunk = values[i:i + step]
+            while q.space() < len(chunk):
+                if not self._server.wait_for_space(deadline):
+                    # the deadline and the engine freeing space can race:
+                    # re-check before failing a submit that would now fit
+                    q.snapshot_writer()
+                    if q.space() >= len(chunk):
+                        break
+                    raise AdmissionFull(
+                        f"session {self.sid}: submit timed out after "
+                        f"{timeout}s waiting for admission space on "
+                        f"{port!r}"
+                    )
+                q.snapshot_writer()
+            q.write(chunk)
+            q.publish_writer()  # make the chunk visible to the engine thread
+            self.submitted_tokens += len(chunk)
+            split = 1 if len(values) > step and i == 0 else 0
+            rec = getattr(self._server, "recorder", None)
+            if rec is not None:
+                rec.instant(
+                    f"session:{self.sid}", "submit", "session",
+                    {
+                        "chunks": 1, "tokens": len(chunk),
+                        "queued": q.count(), "split": split,
+                    },
+                )
+            self._server.notify_work(
+                chunks=1, tokens=len(chunk), split=split,
+            )
 
     def close(self) -> None:
         """Mark end-of-stream; the session finishes once fully drained."""
@@ -223,7 +245,7 @@ class DeviceStage:
         self.dtypes: Dict[str, object] = {
             f"{a}.{p}": _np_dtype(dt) for (a, p, dt) in program.in_ports
         }
-        self.pending = False  # riding in an in-flight batch
+        self.inflight = 0  # rounds this stage is riding right now
         self.tokens_staged = 0
         self.tokens_retired = 0
         # megastep: payloads are (k, block) chunk stacks when the program
@@ -231,12 +253,18 @@ class DeviceStage:
         self.k = max(1, getattr(program, "megastep_k", 1))
         shape = (self.k, program.block) if self.k > 1 else (program.block,)
         # preallocated staging buffers, reused across launches — safe
-        # because ``stage()`` refuses to repack while ``pending`` (the
-        # previous payload may still be riding an in-flight batch)
+        # because the batcher copies them (``pack_lanes`` stacks, the
+        # sequential path ``jnp.asarray``s) inside the same ``launch`` call
+        # that staged them, before any other stage() can repack
         self._bufs: Dict[str, Tuple[np.ndarray, np.ndarray]] = {
             key: (np.zeros(shape, dt), np.zeros(shape, bool))
             for key, dt in self.dtypes.items()
         }
+
+    @property
+    def pending(self) -> bool:
+        """Riding at least one in-flight round (legacy name)."""
+        return self.inflight > 0
 
     def _plan(self) -> Dict[str, int]:
         """Tokens stageable per boundary port right now (whole granules,
@@ -259,10 +287,10 @@ class DeviceStage:
 
     def stage(self) -> Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]]:
         """Drain up to ``k`` blocks per port into the reused staging
-        buffers; None when nothing to do (or while the previous payload is
-        still in flight — the buffers must not be repacked under it)."""
-        if self.pending:
-            return None
+        buffers; None when nothing to do.  Riding an in-flight round does
+        NOT block staging the next one — the continuous batcher chains
+        rounds through the device-state future, so a session streams
+        back-to-back launches without a drain barrier."""
         plan = self._plan()
         if not plan:
             return None
@@ -299,12 +327,14 @@ class DeviceStage:
                 break
         staged = {key: self._bufs[key] for key in self.quantum}
         self.tokens_staged += total
-        self.pending = True
         return staged
 
-    def retire(self, state, outs) -> int:
-        """Write one lane's outputs back to the host FIFOs (PLink §III-D)."""
-        self.state = state
+    def retire(self, outs) -> int:
+        """Write one lane's outputs back to the host FIFOs (PLink §III-D).
+
+        State is NOT written back here: the batcher rebinds ``self.state``
+        to the launch's output-state future at dispatch time, which is what
+        lets the next round launch before this one retires."""
         moved = 0
         for key, (vals, mask) in outs.items():
             vals = np.asarray(vals)
@@ -314,12 +344,12 @@ class DeviceStage:
                 # queues the array itself
                 self.out_eps[key].write(keep)
                 moved += int(keep.size)
-        self.pending = False
+        self.inflight -= 1
         self.tokens_retired += moved
         return moved
 
     def idle(self) -> bool:
-        return not self.pending and not self._plan()
+        return not self.inflight and not self._plan()
 
 
 # ---------------------------------------------------------------------------
@@ -545,8 +575,7 @@ class SessionPipeline:
         """Tokens anywhere inside the pipeline (excludes admission queues)."""
         toks = sum(f.occupancy() for f in self.fifos.values())
         for stage in self.stages.values():
-            if stage.pending:
-                toks += 1  # an in-flight device block counts as occupancy
+            toks += stage.inflight  # in-flight rounds count as occupancy
         return toks
 
     def quiescent(self) -> bool:

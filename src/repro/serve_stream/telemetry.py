@@ -33,12 +33,15 @@ class TelemetrySnapshot:
     channel_tokens: Dict[ChannelKey, int]        # tokens moved per link
     device_dispatches: int                       # batched launches
     device_lanes: int                            # session lanes across launches
+    device_width: int                            # launch widths incl. pad lanes
+    lanes_peak: int                              # most live lanes in one launch
     device_time_ns: int                          # host-observed dispatch+retire
     device_tokens_in: int
     device_tokens_out: int
     sessions_opened: int
     sessions_closed: int
     chunks_submitted: int
+    chunks_split: int                            # submissions chunked at admission
     tokens_submitted: int
     tokens_delivered: int
     queue_peak: int                              # deepest admission queue seen
@@ -47,6 +50,12 @@ class TelemetrySnapshot:
     @property
     def mean_batch(self) -> float:
         return self.device_lanes / max(self.device_dispatches, 1)
+
+    @property
+    def pad_fraction(self) -> float:
+        """Fraction of launched lanes that were masked padding (ragged
+        packing reuses a compiled width within ``LANE_SLACK``)."""
+        return 1.0 - self.device_lanes / max(self.device_width, 1)
 
     def throughput(self) -> float:
         """Delivered tokens per second over the window."""
@@ -76,10 +85,12 @@ class ServerTelemetry:
     def _zero() -> Dict:
         return dict(
             actor_fires={}, actor_time_ns={}, channel_tokens={},
-            device_dispatches=0, device_lanes=0, device_time_ns=0,
+            device_dispatches=0, device_lanes=0, device_width=0,
+            lanes_peak=0, device_time_ns=0,
             device_tokens_in=0, device_tokens_out=0,
             sessions_opened=0, sessions_closed=0,
-            chunks_submitted=0, tokens_submitted=0, tokens_delivered=0,
+            chunks_submitted=0, chunks_split=0,
+            tokens_submitted=0, tokens_delivered=0,
             queue_peak=0, swaps=0,
         )
 
@@ -104,12 +115,15 @@ class ServerTelemetry:
                 )
 
     def device_dispatched(
-        self, lanes: int, tokens_in: int, time_ns: int = 0
+        self, lanes: int, tokens_in: int, time_ns: int = 0, width: int = 0
     ) -> None:
         with self._lock:
             for d in (self._win, self.totals):
                 d["device_dispatches"] += 1
                 d["device_lanes"] += lanes
+                d["device_width"] += width or lanes
+                if lanes > d["lanes_peak"]:
+                    d["lanes_peak"] = lanes
                 d["device_tokens_in"] += tokens_in
                 d["device_time_ns"] += time_ns
 
@@ -124,18 +138,20 @@ class ServerTelemetry:
             for d in (self._win, self.totals):
                 d[what] += n
 
-    def submitted(self, chunks: int, tokens: int) -> None:
+    def submitted(self, chunks: int, tokens: int, split: int = 0) -> None:
         """One admission event, both counters under ONE lock acquisition.
 
         Client threads report submissions; two separate ``count()`` calls
         would let a concurrent ``snapshot()`` land *between* them and split
         one submission across windows (chunks in the drained window, its
         tokens in the next) — a per-window invariant violation the online
-        repartitioner would read as a traffic anomaly."""
+        repartitioner would read as a traffic anomaly.  ``split`` counts
+        submissions larger than the admission chunk that were broken up."""
         with self._lock:
             for d in (self._win, self.totals):
                 d["chunks_submitted"] += chunks
                 d["tokens_submitted"] += tokens
+                d["chunks_split"] += split
 
     def queue_depth(self, depth: int) -> None:
         with self._lock:
@@ -157,10 +173,11 @@ class ServerTelemetry:
             **{
                 k: d[k]
                 for k in (
-                    "device_dispatches", "device_lanes", "device_time_ns",
+                    "device_dispatches", "device_lanes", "device_width",
+                    "lanes_peak", "device_time_ns",
                     "device_tokens_in", "device_tokens_out",
                     "sessions_opened", "sessions_closed",
-                    "chunks_submitted", "tokens_submitted",
+                    "chunks_submitted", "chunks_split", "tokens_submitted",
                     "tokens_delivered", "queue_peak", "swaps",
                 )
             },

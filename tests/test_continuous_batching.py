@@ -1,0 +1,302 @@
+"""Continuous batching: sessions join/leave a rolling device batch at
+block boundaries (no drain barriers) bitwise-equal to sequential runs,
+ragged lane packing, chunked admission keeping a hog from starving other
+streams, deficit round-robin ordering, and this PR's three serving
+bugfixes (TTFO stamped before backpressure, timeout/space race re-check,
+shutdown egress flush)."""
+
+import threading
+import time
+
+import pytest
+
+import repro
+from repro.apps.streams import NETWORKS
+from repro.serve_stream import AdmissionFull, DeficitRoundRobin
+from repro.serve_stream.batcher import DeviceBatcher
+
+from helpers import drain_source
+from test_multi_partition import _halves, split_xcf
+
+BLOCK = 256
+
+SIZES = {  # three per-session workload sizes each (staggered on purpose)
+    "TopFilter": [900, 1200, 600],
+    "FIR32": [400, 600, 500],
+    "Bitonic8": [32, 48, 40],
+    "IDCT8": [32, 48, 40],
+    "ZigZag": [6, 9, 7],
+}
+EGRESS = {"FIR32": "sink"}  # FIR also has the x-forward xsink
+
+
+def _build(name, size):
+    builder = NETWORKS[name]
+    return builder(size) if name != "FIR32" else builder(n=size)
+
+
+def _refs(name, sizes, **compile_kw):
+    """Sequential per-stream references + the exact input streams."""
+    refs, streams = [], []
+    for sz in sizes:
+        net, got = _build(name, sz)
+        prog = repro.compile(net, backend="device", block=BLOCK, **compile_kw)
+        streams.append(drain_source(prog.graph))
+        prog.run()
+        refs.append(list(got))
+    return refs, streams
+
+
+def _staggered_join_leave(server, streams):
+    """Three sessions joining and leaving the rolling batch at staggered
+    times: s0 streams throughout, s1 joins mid-flight and fully *finishes*
+    while s0 is still open (its lane leaves without draining anyone), and
+    s2 only joins after s1 has left."""
+    s0 = server.open_session()
+    half = max(len(streams[0]) // 2, 1)
+    s0.submit(streams[0][:half])
+    s1 = server.open_session()          # joins while s0 rides the batch
+    s1.submit(streams[1])
+    s1.close()
+    assert s1.join(timeout=120)         # leaves mid-batch: s0 still open
+    s2 = server.open_session()          # joins after s1 left
+    s2.submit(streams[2])
+    s0.submit(streams[0][half:])
+    s0.close()
+    s2.close()
+    assert server.drain(timeout=120)
+    return [s0, s1, s2]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: join/leave mid-batch bitwise, incl. megastep + multi-partition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_join_leave_mid_batch_bitwise(name):
+    refs, streams = _refs(name, SIZES[name])
+    net, _ = _build(name, SIZES[name][0])
+    prog = repro.compile(net, backend="device", block=BLOCK)
+    with prog.serve(batching="continuous") as server:
+        sessions = _staggered_join_leave(server, streams)
+        for s, ref in zip(sessions, refs):
+            assert s.output(EGRESS.get(name)) == ref  # bitwise
+        t = server.telemetry.lifetime()
+    # ragged packing: width counts pad lanes, never fewer than live lanes
+    assert t.device_width >= t.device_lanes > 0
+    assert 1 <= t.lanes_peak <= server.max_batch
+
+
+def test_join_leave_mid_batch_bitwise_megastep():
+    refs, streams = _refs("FIR32", SIZES["FIR32"], megastep=3)
+    net, _ = _build("FIR32", SIZES["FIR32"][0])
+    prog = repro.compile(net, backend="device", block=BLOCK, megastep=3)
+    assert prog.device_program().megastep_k > 1
+    with prog.serve(batching="continuous") as server:
+        sessions = _staggered_join_leave(server, streams)
+        for s, ref in zip(sessions, refs):
+            assert s.output("sink") == ref  # bitwise
+
+
+def test_join_leave_mid_batch_bitwise_multi_partition():
+    refs, streams = _refs("ZigZag", SIZES["ZigZag"])
+    net, _ = _build("ZigZag", SIZES["ZigZag"][0])
+    g = net.graph()
+    prog = repro.compile(net, split_xcf(g, *_halves(g)), block=BLOCK)
+    assert len(prog.hw_partitions) == 2
+    with prog.serve(batching="continuous") as server:
+        sessions = _staggered_join_leave(server, streams)
+        for s, ref in zip(sessions, refs):
+            assert s.output() == ref  # bitwise across both partitions
+
+
+# ---------------------------------------------------------------------------
+# Ragged lane packing (width memoization under LANE_SLACK)
+# ---------------------------------------------------------------------------
+
+
+def test_width_memoization_is_ragged_not_pow2():
+    net, _ = _build("FIR32", 64)
+    prog = repro.compile(net, backend="device", block=64)
+    b = DeviceBatcher(prog.device_program(), max_batch=32)
+    assert b._width(3) == 3        # first sighting: exactly the live count
+    assert b._width(3) == 3        # reuse
+    assert b._width(4) == 4        # 3 < 4: no compiled width fits — new one
+    assert b._width(31) == 31
+    assert b._width(24) == 31      # ceil(24*4/3)=32 ≥ 31: pad 7 masked lanes
+    assert b._width(10) == 10      # 31 > ceil(10*4/3): padding too wasteful
+    assert b._width(32) == 32      # capped at max_batch
+    assert b._widths == {3, 4, 10, 31, 32}
+
+
+# ---------------------------------------------------------------------------
+# Chunked admission: a hog cannot starve the other streams
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_admission_hog_does_not_starve_smalls():
+    hog_sizes = [4096]
+    small_sizes = [256, 256, 256]
+    (hog_ref,), (hog_stream,) = _refs("TopFilter", hog_sizes)
+    small_refs, small_streams = _refs("TopFilter", small_sizes)
+
+    net, _ = _build("TopFilter", hog_sizes[0])
+    prog = repro.compile(net, backend="device", block=128)
+    with prog.serve(
+        admission_depth=256, admission_chunk=128, batching="continuous"
+    ) as server:
+        hog = server.open_session()
+        smalls = [server.open_session() for _ in small_streams]
+        hog_done_ns = [None]
+
+        def run_hog():
+            # one submission >> admission_depth: split into chunks at
+            # admission, trickling in under backpressure
+            hog.submit(hog_stream)
+            hog_done_ns[0] = time.perf_counter_ns()
+            hog.close()
+
+        th = threading.Thread(target=run_hog)
+        th.start()
+        for s, st in zip(smalls, small_streams):
+            s.submit(st)
+            s.close()
+        th.join(timeout=120)
+        assert hog_done_ns[0] is not None
+        assert server.drain(timeout=120)
+        # correctness first: nobody's stream was torn by the chunking
+        assert hog.output() == hog_ref
+        for s, ref in zip(smalls, small_refs):
+            assert s.output() == ref
+        # fairness: every small stream got its first output while the hog
+        # was still trickling through admission
+        for s in smalls:
+            assert s.first_delivery_ns is not None
+            assert s.first_delivery_ns < hog_done_ns[0]
+        t = server.telemetry.lifetime()
+    assert t.chunks_split >= 1          # the hog really was split
+    assert t.chunks_submitted > len(small_streams) + 1
+
+
+# ---------------------------------------------------------------------------
+# Deficit round-robin ordering
+# ---------------------------------------------------------------------------
+
+
+class _S:
+    """Stub with the session fields the scheduler reads."""
+
+    def __init__(self, sid):
+        self.sid = sid
+        self.first_submit_ns = None
+        self.first_delivery_ns = None
+
+
+def test_drr_rotation_and_deficit_tiebreak():
+    drr = DeficitRoundRobin()
+    a, b, c = _S(1), _S(2), _S(3)
+    cands = [(c, None), (a, None), (b, None)]
+    # never-scheduled sessions: stable sid order
+    assert [s.sid for s, _ in drr.order(cands, now_ns=0)] == [1, 2, 3]
+    drr.charge(1, 100, round_no=1)
+    # least-recently-scheduled first: a rotates to the back
+    assert [s.sid for s, _ in drr.order(cands, now_ns=0)] == [2, 3, 1]
+    drr.charge(2, 10, round_no=1)
+    drr.charge(3, 40, round_no=1)
+    # same round for all: least attained service breaks the tie
+    assert [s.sid for s, _ in drr.order(cands, now_ns=0)] == [2, 3, 1]
+    drr.charge(2, 1000, round_no=2)
+    assert [s.sid for s, _ in drr.order(cands, now_ns=0)] == [3, 1, 2]
+    assert drr.served(2) == 1010
+    drr.forget(2)
+    assert drr.served(2) == 0
+    # forgotten = never-scheduled again
+    assert [s.sid for s, _ in drr.order(cands, now_ns=0)] == [2, 3, 1]
+
+
+def test_drr_ttfo_boost_jumps_rotation():
+    drr = DeficitRoundRobin()
+    starved, fresh = _S(1), _S(2)
+    starved.first_submit_ns = 0            # waited 2s, nothing delivered
+    drr.charge(1, 10_000, round_no=9)      # heavily served AND recent —
+    cands = [(starved, None), (fresh, None)]
+    now = int(2e9)
+    # — so without the boost the rotation puts it last...
+    assert [s.sid for s, _ in
+            drr.order(cands, now_ns=now, ttfo_p95_s=None)] == [2, 1]
+    # ...but past the live TTFO p95 it outranks everything
+    assert [s.sid for s, _ in
+            drr.order(cands, now_ns=now, ttfo_p95_s=1.0)] == [1, 2]
+    # sessions that already delivered never get the boost
+    starved.first_delivery_ns = 1
+    assert [s.sid for s, _ in
+            drr.order(cands, now_ns=now, ttfo_p95_s=1.0)] == [2, 1]
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions
+# ---------------------------------------------------------------------------
+
+
+def _full_queue_session(admission_depth=128):
+    net, _ = _build("TopFilter", 512)
+    prog = repro.compile(net, backend="device", block=128)
+    server = prog.serve(admission_depth=admission_depth)  # engine NOT started
+    s = server.open_session()
+    q = next(iter(s.queues.values()))
+    q.write([0.0] * q.capacity)  # fill WITHOUT submit(): no TTFO stamp yet
+    q.publish_writer()
+    return server, s, q
+
+
+def test_first_submit_stamped_before_backpressure_wait():
+    """TTFO must include admission queueing delay: the stamp lands before
+    the submit blocks, not after space frees up."""
+    server, s, _q = _full_queue_session()
+    assert s.first_submit_ns is None
+    seen = []
+    server.wait_for_space = lambda deadline: (
+        seen.append(s.first_submit_ns), False
+    )[1]
+    with pytest.raises(AdmissionFull):
+        s.submit([1.0] * 8, timeout=0.01)
+    assert seen and seen[0] is not None  # stamped before the first wait
+
+
+def test_submit_timeout_rechecks_space_before_raising():
+    """The deadline and the engine freeing space race: when the wait times
+    out but the queue now fits the chunk, submit must succeed."""
+    server, s, q = _full_queue_session()
+
+    def wait_frees_space_then_times_out(deadline):
+        q.snapshot_reader()
+        q.read(q.count())        # the "engine" drains the whole queue...
+        q.publish_reader()
+        return False             # ...exactly as the deadline passes
+
+    server.wait_for_space = wait_frees_space_then_times_out
+    s.submit([1.0] * 8, timeout=0.01)    # must NOT raise
+    q.snapshot_reader()
+    assert q.count() == 8
+
+
+def test_shutdown_flushes_egress_to_results():
+    """stop() without drain(): tokens retired by the final batcher drain
+    must still reach session result buffers, never be stranded in egress
+    FIFOs."""
+    net, _ = _build("TopFilter", 2048)
+    prog = repro.compile(net, backend="device", block=128)
+    stream = drain_source(prog.graph)
+    for _ in range(3):  # a few races at different engine phases
+        net2, _ = _build("TopFilter", 2048)
+        prog2 = repro.compile(net2, backend="device", block=128)
+        server = prog2.serve(start=True)
+        s = server.open_session()
+        s.submit(stream)
+        s.close()
+        server.stop()  # no drain(): the engine dies mid-flight
+        for _sink, fifo in s.pipeline.egress:
+            assert fifo.count() == 0  # flushed, not stranded
+        delivered = server.telemetry.lifetime().tokens_delivered
+        assert delivered == sum(len(v) for v in s.results.values())

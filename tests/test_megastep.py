@@ -261,12 +261,17 @@ def test_device_stage_reuses_staging_buffers():
     pay1 = stage.stage()
     assert pay1 is not None
     assert pay1["dev.IN"][0].shape == (2, BLOCK)
-    # while pending, stage() must refuse to repack the shared buffers
+    # everything queued was drained into the buffers: nothing to repack
     assert stage.stage() is None
     state, outs, _ = prog.launch(stage.state, {
         kk: (np.asarray(v), np.asarray(m)) for kk, (v, m) in pay1.items()
     })
-    stage.retire(state, outs)
+    # what the batcher does at launch/retire: rebind the state future,
+    # count the in-flight round, then retire outputs only
+    stage.state = state
+    stage.inflight += 1
+    stage.retire(outs)
+    assert stage.inflight == 0
     fin.write([float(i) for i in range(BLOCK)])
     pay2 = stage.stage()
     # identical buffer objects: preallocated, reused, not reallocated
