@@ -44,8 +44,14 @@ _UNGATED = ("error", "frac", "worst_fraction", "milp", "hw_vs_single",
 # absolute floors checked on the *current* run, independent of baseline
 # drift: these ratios carry a hard promise, not a trajectory.  The tracing
 # overhead row is untraced/traced wall time — 0.95 is the documented "<5%
-# overhead when tracing is on" guarantee (docs/observability.md).
+# overhead when tracing is on" guarantee (docs/observability.md).  The
+# reliability rows are fidelity bits: a kill-and-recover (or a chaos run
+# with injected transient faults) either reassembles the exact stream or
+# the recovery contract is broken (docs/reliability.md) — no drift allowed.
 _FLOORS = {"observability/trace_overhead": 0.95}
+for _net in ("TopFilter", "FIR32", "Bitonic8", "IDCT8", "ZigZag"):
+    _FLOORS[f"reliability/{_net}/recovered_bitwise"] = 1.0
+    _FLOORS[f"reliability/{_net}/chaos_completed"] = 1.0
 
 
 def _ratio_rows(payload: Dict) -> Iterator[Tuple[str, str, float]]:

@@ -41,6 +41,8 @@ SUITES = [
     #                                          executor vs per-token interp
     ("observability", "observability"),      # streamtrace: overhead gate +
     #                                          trace artifact validation
+    ("reliability", "reliability"),          # kill-and-recover fidelity +
+    #                                          chaos fault-injection overhead
 ]
 
 JSON_PATH = Path(os.environ.get("BENCH_JSON", "BENCH_streams.json"))

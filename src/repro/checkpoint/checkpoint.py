@@ -4,11 +4,16 @@ Layout:  <dir>/step_<n>/  manifest.json  +  one .npy per leaf (flattened key pat
 Writes go to a temp dir and are renamed atomically; a ``latest`` marker file is
 updated last, so a crash mid-write can never corrupt the restore point — the
 fault-tolerance contract (a killed run restarts from the last complete step).
+``runtime.chaos`` sites (``ckpt:leaf``, ``ckpt:commit``) let tests kill a save
+at any point and assert exactly that.
 
 Arrays are saved *unsharded* (gathered), so a restore may target a different mesh
 or rule set than the save (elastic scaling): restore() device_puts each leaf with
-the target sharding.  AsyncCheckpointer runs saves on a background thread — the
-paper's non-blocking PLink discipline applied to the checkpoint writer.
+the target sharding.  Object-dtype leaves (pickled Python values — the serve
+recovery path's token streams and actor states, which need exact scalar-type
+round-trips for bit-identity) pass through np.save's pickle path and are never
+coerced.  AsyncCheckpointer runs saves on a background thread — the paper's
+non-blocking PLink discipline applied to the checkpoint writer.
 """
 
 from __future__ import annotations
@@ -25,12 +30,18 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.runtime import chaos as chaos_mod
+
 PyTree = Any
 _SEP = "/"
+_NATIVE_DTYPES = (
+    "float64", "float32", "float16", "int64", "int32", "int16",
+    "int8", "uint8", "uint16", "uint32", "uint64", "bool",
+)
 
 
 def _flatten(tree: PyTree) -> Dict[str, Any]:
-    flat = {}
+    flat: Dict[str, Any] = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_part_name(p) for p in path)
         flat[key] = leaf
@@ -55,28 +66,40 @@ def save(
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
-    flat = _flatten(tree)
-    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
-    for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
-        logical_dtype = str(arr.dtype)
-        if arr.dtype.kind == "V" or logical_dtype not in (
-            "float64", "float32", "float16", "int64", "int32", "int16",
-            "int8", "uint8", "uint16", "uint32", "uint64", "bool",
-        ):
-            arr = arr.astype(np.float32)  # exotic dtypes (bf16, fp8) via f32
-        fname = hashlib.md5(key.encode()).hexdigest()[:16] + ".npy"
-        np.save(tmp / fname, arr)
-        manifest["leaves"][key] = {
-            "file": fname,
-            "shape": list(arr.shape),
-            "dtype": logical_dtype,
+    try:
+        flat = _flatten(tree)
+        manifest: Dict[str, Any] = {
+            "step": step, "leaves": {}, "extra": extra or {},
         }
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    final = ckpt_dir / f"step_{step}"
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
+        for key, leaf in flat.items():
+            chaos_mod.poke("ckpt:leaf")
+            arr = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(arr.dtype)
+            if arr.dtype == object:
+                # pickled Python payloads: np.save handles them natively;
+                # load_flat/restore re-enable allow_pickle for exactly
+                # these leaves
+                logical_dtype = "object"
+            elif arr.dtype.kind == "V" or logical_dtype not in _NATIVE_DTYPES:
+                arr = arr.astype(np.float32)  # exotic dtypes (bf16, fp8) via f32
+            fname = hashlib.md5(key.encode()).hexdigest()[:16] + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": logical_dtype,
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        chaos_mod.poke("ckpt:commit")
+        final = ckpt_dir / f"step_{step}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+    except BaseException:
+        # torn write: leave no temp litter, and — critically — leave
+        # ``latest`` untouched, still naming the previous complete step
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     (ckpt_dir / "latest").write_text(str(step))  # updated last: commit point
     _gc(ckpt_dir, keep)
     return final
@@ -102,6 +125,23 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return step
 
 
+def load_flat(ckpt_dir, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Raw flattened view of one step: ``{key path: stored array}`` plus the
+    manifest ``extra`` dict.  No ``like`` tree needed — the serve recovery
+    path reconstructs structure from its own metadata.  Arrays come back
+    exactly as stored (the manifest records the logical dtype when an
+    exotic one was widened to float32)."""
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat = {
+        key: np.load(
+            d / info["file"], allow_pickle=info["dtype"] == "object"
+        )
+        for key, info in manifest["leaves"].items()
+    }
+    return flat, manifest["extra"]
+
+
 def restore(
     ckpt_dir, step: int, like: PyTree, *, shardings: Optional[PyTree] = None,
 ) -> Tuple[PyTree, Dict]:
@@ -115,8 +155,11 @@ def restore(
     for key, want in flat_like.items():
         info = manifest["leaves"].get(key)
         assert info is not None, f"checkpoint missing leaf {key}"
-        arr = np.load(d / info["file"])
+        arr = np.load(d / info["file"], allow_pickle=info["dtype"] == "object")
         assert tuple(arr.shape) == tuple(want.shape), (key, arr.shape, want.shape)
+        if info["dtype"] == "object":
+            out_flat[key] = arr  # pickled host payload: no device placement
+            continue
         arr = jax.numpy.asarray(arr).astype(want.dtype)
         sh = flat_sh.get(key)
         out_flat[key] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
@@ -132,7 +175,12 @@ def restore(
 
 class AsyncCheckpointer:
     """Background checkpoint writer: save() returns immediately; the training
-    loop never blocks on IO.  wait() drains pending saves (call before exit)."""
+    loop never blocks on IO.  wait() drains pending saves (call before exit).
+
+    A background save's failure is never silent: the error is re-raised on
+    the *next* ``save()`` or ``wait()`` call (whichever comes first), and
+    the torn step it produced is invisible — ``latest`` still names the
+    previous complete step (the atomic-rename contract above)."""
 
     def __init__(self, ckpt_dir, keep: int = 3):
         self.ckpt_dir = Path(ckpt_dir)
@@ -142,7 +190,7 @@ class AsyncCheckpointer:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
-    def _worker(self):
+    def _worker(self) -> None:
         while True:
             item = self._q.get()
             if item is None:
@@ -150,22 +198,29 @@ class AsyncCheckpointer:
             step, tree, extra = item
             try:
                 save(self.ckpt_dir, step, tree, extra=extra, keep=self.keep)
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # noqa: BLE001 — re-raised on save/wait
                 self._err = e
             finally:
                 self._q.task_done()
 
-    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+    def _raise_pending(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def save(
+        self, step: int, tree: PyTree, extra: Optional[Dict] = None
+    ) -> None:
+        self._raise_pending()  # a swallowed background failure surfaces HERE
         # device_get now so the step's arrays are snapshot before donation reuse
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
         self._q.put((step, host_tree, extra))
 
-    def wait(self):
+    def wait(self) -> None:
         self._q.join()
-        if self._err:
-            raise self._err
+        self._raise_pending()
 
-    def close(self):
+    def close(self) -> None:
         self.wait()
         self._q.put(None)
         self._thread.join(timeout=5)

@@ -21,10 +21,21 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.runtime.chaos import InjectedFault
 
 
-class SimulatedFailure(RuntimeError):
-    """Injected node failure (tests / chaos drills)."""
+class SimulatedFailure(InjectedFault):
+    """Injected node failure (tests / chaos drills).
+
+    Part of the :mod:`repro.runtime.chaos` fault taxonomy so handlers can
+    treat train-loop drills and serve-mode injections uniformly; the
+    message-only constructor is kept for callers that raise it by hand."""
+
+    def __init__(self, message: str = "simulated node failure"):
+        RuntimeError.__init__(self, message)
+        self.site = "train:step"
+        self.occurrence = 0
+        self.rule = None
 
 
 @dataclass

@@ -402,6 +402,11 @@ class Program:
         repartitioner=None,
         start: bool = False,
         trace: bool = False,
+        chaos=None,
+        checkpoint_dir=None,
+        checkpoint_every_s: Optional[float] = None,
+        launch_retries: int = 3,
+        retry_base_s: float = 0.005,
     ):
         """A persistent multi-session streaming server over this placement.
 
@@ -419,6 +424,16 @@ class Program:
         (``server.trace(path)`` exports Chrome-trace JSON; ``server
         .metrics_text()`` exposes TTFO / inter-block latency histograms) —
         see docs/observability.md.
+
+        Reliability knobs (docs/reliability.md): ``chaos`` injects
+        deterministic seeded faults (a ``runtime.chaos.Chaos``, a spec
+        string, or a rule list; default: the ``REPRO_CHAOS`` env);
+        ``checkpoint_dir`` + ``checkpoint_every_s`` enable periodic
+        per-session snapshots so a killed engine restarts via
+        ``StreamServer.recover(program, checkpoint_dir)``; device launches
+        retry ``launch_retries`` times with exponential backoff from
+        ``retry_base_s`` before the partition is quarantined and sessions
+        degrade to the all-host placement.
         """
         from repro.serve_stream import StreamServer
 
@@ -430,6 +445,11 @@ class Program:
             max_batch=max_batch,
             repartitioner=repartitioner,
             trace=trace,
+            chaos=chaos,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every_s=checkpoint_every_s,
+            launch_retries=launch_retries,
+            retry_base_s=retry_base_s,
         )
         return server.start() if start else server
 

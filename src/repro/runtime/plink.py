@@ -38,6 +38,8 @@ from typing import Any, Deque, Dict, Tuple
 import jax
 import numpy as np
 
+from repro.runtime import chaos as chaos_mod
+
 from repro.observability.recorder import current as _trace_current
 from repro.runtime.device_runtime import DeviceProgram
 from repro.runtime.fifo import ArrayFifo
@@ -396,6 +398,11 @@ class PLink:
             cap = getattr(getattr(ep, "fifo", None), "capacity", None)
             if cap is not None and ep.space() < min(need, cap):
                 return progress
+        # chaos site BEFORE staging: an injected lane death leaves the
+        # host FIFOs untouched (no tokens drained into a launch that will
+        # never happen) — the failure surfaces through the scheduler as a
+        # run error, never as silent token loss
+        chaos_mod.poke(f"plink:{self.name}")
         staged, n_in, slot = self._stage_inputs()
         if n_in == 0 and has_inputs:
             return progress

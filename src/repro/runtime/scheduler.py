@@ -33,6 +33,7 @@ from repro.core.actor_machine import ActorMachine, BasicController, PortEnv
 from repro.core.xcf import make_xcf
 from repro.ir.ir import IRModule
 from repro.observability.recorder import current as _trace_current
+from repro.runtime import chaos as chaos_mod
 from repro.runtime.fifo import ReaderEndpoint, RingFifo, WriterEndpoint
 
 DEFAULT_DEPTH = 4096
@@ -113,6 +114,9 @@ class ThreadPartition:
         execs = 0
         rec = self.rt.recorder
         for inst in self.instances:
+            # chaos site: scheduler-run actor faults (serve-mode pokes the
+            # per-session variant ``actor:<name>@s<sid>`` instead)
+            chaos_mod.poke(f"actor:{inst.actor.name}@{self.name}")
             t0 = time.perf_counter_ns()
             e = inst.invoke(self.rt.max_execs_per_invoke)
             dt = time.perf_counter_ns() - t0

@@ -10,19 +10,24 @@ One compiled ``Program``, many concurrent client streams::
         server.drain()
         a.output()   # bit-identical to a sequential prog.run() over chunk_a
 
-Layers (see ``docs/server.md``):
+Layers (see ``docs/server.md`` and ``docs/reliability.md``):
 
-  engine       ``StreamServer`` — the persistent engine thread
+  engine       ``StreamServer`` — the persistent engine thread; bounded
+               launch retry + graceful degradation to the all-host XCF
   session      ``StreamSession`` + per-session pipelines over the lowered IR
   batcher      ``DeviceBatcher`` — B sessions, ONE batched device launch
   telemetry    ``ServerTelemetry`` — the live profile of real traffic
   repartition  ``OnlineRepartitioner`` — re-solves the MILP online and
                hot-swaps the XCF at a drained chunk boundary
+  recovery     per-session checkpoint/restore — a killed engine restarts
+               via ``StreamServer.recover`` and sessions resume
+               bit-identically
 """
 
 from repro.serve_stream.admission import DeficitRoundRobin
 from repro.serve_stream.batcher import DeviceBatcher
 from repro.serve_stream.engine import StreamServer
+from repro.serve_stream.recovery import RecoveryReport, SessionRecovery
 from repro.serve_stream.repartition import OnlineRepartitioner
 from repro.serve_stream.session import (
     AdmissionFull,
@@ -36,8 +41,10 @@ __all__ = [
     "DeficitRoundRobin",
     "DeviceBatcher",
     "OnlineRepartitioner",
+    "RecoveryReport",
     "ServeError",
     "ServerTelemetry",
+    "SessionRecovery",
     "StreamServer",
     "StreamSession",
     "TelemetrySnapshot",

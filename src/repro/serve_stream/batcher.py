@@ -87,6 +87,7 @@ class DeviceBatcher:
         depth: int = 2,             # in-flight rounds (double buffering)
         telemetry=None,
         recorder=None,
+        chaos=None,
     ):
         if mode == "batched":       # legacy alias for the rolling batcher
             mode = "continuous"
@@ -98,6 +99,7 @@ class DeviceBatcher:
         self.depth = max(1, depth)
         self.telemetry = telemetry
         self.recorder = recorder  # streamtrace (None = untraced server)
+        self.chaos = chaos        # fault injection (None = no chaos)
         self._track = "batch:" + (
             getattr(program, "partition", "") or program.name
         )
@@ -155,6 +157,16 @@ class DeviceBatcher:
         launched.  Stages already riding an earlier round may join: their
         state is the previous round's output future and XLA serializes the
         launches through it."""
+        if self.chaos is not None:
+            # chaos site BEFORE any staging: an injected launch failure
+            # leaves every FIFO and stage untouched, so the engine's
+            # bounded retry replays the identical round with zero token
+            # loss (docs/reliability.md)
+            self.chaos.poke(
+                "launch:"
+                + (getattr(self.program, "partition", "")
+                   or self.program.name)
+            )
         payloads = []
         live: List[DeviceStage] = []
         for st in stages:

@@ -33,11 +33,13 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Union
+import traceback
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.observability.metrics import MetricsRegistry
 from repro.observability.recorder import TraceRecorder
 from repro.observability.trace_profile import authored_channel_key
+from repro.runtime import chaos as chaos_mod
 from repro.runtime.scheduler import AdaptiveBackoff
 from repro.serve_stream.admission import DeficitRoundRobin
 from repro.serve_stream.batcher import DeviceBatcher
@@ -72,6 +74,11 @@ class StreamServer:
         max_batch: int = 32,
         repartitioner=None,  # OnlineRepartitioner (or None)
         trace: bool = False,
+        chaos=None,  # Chaos | spec string | rule list (None: REPRO_CHAOS env)
+        checkpoint_dir=None,
+        checkpoint_every_s: Optional[float] = None,
+        launch_retries: int = 3,
+        retry_base_s: float = 0.005,
     ):
         self._program = program
         self._opts = dict(program.opts)
@@ -108,6 +115,44 @@ class StreamServer:
         self._g_active = self.metrics.gauge(
             "serve_sessions_active", "sessions opened and not yet finished"
         )
+        # fault-path metrics (docs/reliability.md): every transition on the
+        # retry / degrade / recover paths increments one of these, so a
+        # Prometheus scrape sees exactly what the trace instants record
+        self._c_faults = self.metrics.counter(
+            "serve_faults_total",
+            "faults observed while serving: failed device launches, "
+            "per-session actor failures, failed checkpoint writes",
+        )
+        self._c_recoveries = self.metrics.counter(
+            "serve_recoveries_total",
+            "successful recoveries: launch retries that went through, "
+            "partition quarantines that kept sessions alive, sessions "
+            "restored from a checkpoint",
+        )
+        self._g_degraded = self.metrics.gauge(
+            "serve_degraded",
+            "1 while serving on the all-host fallback placement after a "
+            "device partition was quarantined",
+        )
+        # fault injection: explicit knob wins, else the process env
+        # (REPRO_CHAOS / CHAOS_SEED) so chaos smokes need no code changes
+        self.chaos = (
+            chaos_mod.coerce(chaos) if chaos is not None
+            else chaos_mod.from_env()
+        )
+        self.launch_retries = max(0, launch_retries)
+        self.retry_base_s = retry_base_s
+        self._quarantined: set = set()
+        # checkpointing: explicit ``checkpoint()`` requests always work;
+        # checkpoint_dir + checkpoint_every_s adds engine-driven periodic
+        # snapshots (each one drains the device lanes — a real boundary)
+        self._ckpt_dir = checkpoint_dir
+        self._ckpt_every = checkpoint_every_s
+        self._ckpt_request: Optional[Dict] = None
+        self._ckpt_step = 0
+        self._ckpt_last = time.perf_counter()
+        self._killed = False
+        self.recovery = None  # RecoveryReport when built by recover()
         self.admission_depth = admission_depth or max(
             2 * self._opts["block"], 4096
         )
@@ -174,11 +219,111 @@ class StreamServer:
             err, self._engine_error = self._engine_error, None
             raise err
 
+    def kill(self) -> None:
+        """Hard-kill the engine: stop the thread WITHOUT the shutdown flush.
+
+        Simulates a crash for recovery tests and chaos drills — in-flight
+        work is abandoned exactly as a process kill would abandon it, and
+        sessions are left unfinished (a real crash never sets their
+        events).  Recover with ``StreamServer.recover(program, ckpt_dir)``.
+        """
+        with self._wake:
+            self._killed = True
+            self._stop = True
+            self._wake.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
     def __enter__(self) -> "StreamServer":
         return self.start()
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    # -- checkpoint / recover --------------------------------------------------
+    def checkpoint(
+        self,
+        ckpt_dir,
+        *,
+        step: Optional[int] = None,
+        keep: int = 3,
+        timeout: Optional[float] = None,
+    ):
+        """Write a recoverable snapshot of every session at a drained block
+        boundary (client-callable; the engine performs the write between
+        rounds, after force-draining the device lanes).  Returns the
+        checkpoint path.  See ``serve_stream.recovery`` for the layout and
+        ``StreamServer.recover`` for the restore side."""
+        from repro.serve_stream import recovery
+
+        with self._lock:
+            if step is None:
+                self._ckpt_step += 1
+                step = self._ckpt_step
+            else:
+                self._ckpt_step = max(self._ckpt_step, step)
+        if self._thread is None:
+            # engine not running: this thread owns all state — the
+            # boundary is trivially drained
+            for b in self._batchers.values():
+                b.drain()
+            return recovery.write_checkpoint(
+                self, ckpt_dir, step=step, keep=keep
+            )
+        req: Dict = {
+            "dir": ckpt_dir, "step": step, "keep": keep,
+            "event": threading.Event(), "path": None, "error": None,
+        }
+        with self._lock:
+            self._ckpt_request = req
+        self.notify_work()
+        if not req["event"].wait(timeout):
+            raise ServeError(f"checkpoint to {ckpt_dir} timed out")
+        self._check_engine()
+        if req["error"] is not None:
+            raise ServeError(
+                f"checkpoint to {ckpt_dir} failed: {req['error']!r}"
+            ) from req["error"]
+        return req["path"]
+
+    @classmethod
+    def recover(
+        cls,
+        program,
+        ckpt_dir,
+        *,
+        step: Optional[int] = None,
+        start: bool = False,
+        **serve_kwargs,
+    ) -> "StreamServer":
+        """Rebuild a server (and every checkpointed session) from the last
+        complete checkpoint under ``ckpt_dir``.
+
+        Each surviving session resumes bit-identically: admission-queue
+        residue, FIFO fills, host actor machines and per-partition device
+        state are transplanted into fresh pipelines.  The returned server's
+        ``.recovery`` is a ``RecoveryReport`` with the per-session replay
+        bound (tokens the dead engine may have delivered *after* the
+        checkpoint are delivered again — never lost, never reordered).
+        Call ``start()`` (or pass ``start=True``) to resume serving."""
+        from repro.serve_stream import recovery
+
+        server = recovery.recover(
+            program, ckpt_dir, step=step, **serve_kwargs
+        )
+        return server.start() if start else server
+
+    def serve_opts(self) -> Dict:
+        """The construction knobs a recovered server should reuse."""
+        return {
+            "admission_depth": self.admission_depth,
+            "admission_chunk": self.admission_chunk,
+            "batching": self.mode,
+            "max_batch": self.max_batch,
+            "launch_retries": self.launch_retries,
+            "retry_base_s": self.retry_base_s,
+        }
 
     # -- client surface --------------------------------------------------------
     @property
@@ -205,6 +350,19 @@ class StreamServer:
             )
         self.notify_work()
         return session
+
+    def sessions(self) -> List[StreamSession]:
+        """Every session this server knows (recovered ones included)."""
+        with self._lock:
+            return list(self._sessions)
+
+    def session(self, sid: int) -> StreamSession:
+        """Look up one session by id (e.g. after ``recover()``)."""
+        with self._lock:
+            for s in self._sessions:
+                if s.sid == sid:
+                    return s
+        raise ServeError(f"no session {sid}")
 
     def request_repartition(self, xcf) -> None:
         """Ask the engine to hot-swap to ``xcf`` at the next chunk boundary."""
@@ -297,12 +455,16 @@ class StreamServer:
             pid: DeviceBatcher(
                 dp, mode=self.mode, max_batch=self.max_batch,
                 telemetry=self.telemetry, recorder=self.recorder,
+                chaos=self.chaos,
             )
             for pid, dp in self._program.device_programs().items()
         }
 
     def _build_pipeline(
-        self, session: StreamSession, carry: Optional[Dict] = None
+        self,
+        session: StreamSession,
+        carry: Optional[Dict] = None,
+        carry_fifos: Optional[Dict] = None,
     ) -> SessionPipeline:
         return SessionPipeline(
             self._program.module,
@@ -312,13 +474,19 @@ class StreamServer:
             default_depth=self._opts["default_depth"],
             max_execs_per_invoke=self._opts["max_execs_per_invoke"],
             carry_state=carry,
+            carry_fifos=carry_fifos,
             recorder=self.recorder,
+            chaos=self.chaos,
         )
 
     def _engine_main(self) -> None:
         try:
             self._engine_loop()
         except BaseException as e:  # noqa: BLE001 — surfaced to clients
+            # Infrastructure faults ONLY: per-session failures (one actor
+            # raising, one stream's bad input) are isolated inside the loop
+            # by ``_fail_session`` and never reach here — engine death is
+            # reserved for faults no session caused (docs/reliability.md).
             self._engine_error = e
             # fail every waiter loudly rather than hanging them — and make
             # sure output() raises instead of returning a truncated stream
@@ -329,6 +497,10 @@ class StreamServer:
                             f"serving engine died mid-stream: {e!r}"
                         )
                         s.finished.set()
+                req, self._ckpt_request = self._ckpt_request, None
+            if req is not None and req.get("event") is not None:
+                req["error"] = req["error"] or e
+                req["event"].set()
             with self._wake:
                 self._wake.notify_all()
 
@@ -349,17 +521,26 @@ class StreamServer:
                 # histogram walk is too costly to run every round
                 self._ttfo_p95 = self._h_ttfo.percentile(95)
 
-            # 1) admission pump (paused while a swap is draining)
+            # 1) admission pump (paused while a swap is draining).  Every
+            # per-session step is blast-radius isolated: ONE stream's
+            # failure (its actor raising, its bad input) fails that
+            # session — with the captured traceback delivered to its
+            # client — and the engine keeps serving everyone else.
             if not swapping:
                 for s in active:
-                    moved += s.pipeline.pump(self.telemetry)
+                    moved += self._guarded(
+                        s, s.pipeline.pump, "admission pump",
+                        self.telemetry,
+                    )
             if moved:
                 with self._wake:  # free space -> unblock submitters
                     self._wake.notify_all()
 
             # 2) host actors
             for s in active:
-                moved += s.pipeline.host_round(self.telemetry)
+                moved += self._guarded(
+                    s, s.pipeline.host_round, "host round", self.telemetry
+                )
 
             # 3) device lanes: per partition, retire what finished, then
             # launch one continuous round from whatever is ready — riding an
@@ -369,11 +550,19 @@ class StreamServer:
             # are independent, so partition A's next round goes out while
             # partition B's is still in flight.
             pending_device = False
+            degrade: Optional[Tuple[str, BaseException]] = None
             now_ns = time.perf_counter_ns()
             for pid, batcher in self._batchers.items():
-                moved += batcher.poll()
+                try:
+                    moved += batcher.poll()
+                except Exception as e:  # retire failed: rounds are lost
+                    self._poll_failed(pid, batcher, e)
+                    degrade = (pid, e)
+                    break
                 cands = []
                 for s in active:
+                    if s.finished.is_set():
+                        continue
                     stage = s.pipeline.stages.get(pid)
                     if stage is not None and stage.ready_tokens() > 0:
                         cands.append((s, stage))
@@ -384,16 +573,32 @@ class StreamServer:
                     before = [
                         (s, st, st.tokens_staged) for s, st in ordered
                     ]
-                    moved += batcher.launch([st for _s, st in ordered])
+                    lanes, fatal = self._launch_with_retry(
+                        pid, batcher, [st for _s, st in ordered]
+                    )
+                    moved += lanes
                     for s, st, t0 in before:
                         d = st.tokens_staged - t0
                         if d:
                             self._sched.charge(s.sid, d, self._round)
+                    if fatal is not None:
+                        degrade = (pid, fatal)
+                        break
                 pending_device = pending_device or batcher.pending
+            if degrade is not None:
+                # retry exhausted (or retire died): quarantine the
+                # partition and swap every live session to the all-host
+                # placement — serving degrades, it does not die
+                self._degrade(*degrade)
+                continue
 
             # 4) egress
             for s in active:
-                n = s.pipeline.drain_egress()
+                if s.finished.is_set():
+                    continue
+                n = self._guarded(
+                    s, s.pipeline.drain_egress, "egress drain"
+                )
                 if n:
                     self.telemetry.count("tokens_delivered", n)
                     self._observe_delivery(s, n)
@@ -401,6 +606,8 @@ class StreamServer:
 
             # 5) session completion
             for s in active:
+                if s.finished.is_set():
+                    continue
                 if (
                     s.closed
                     and all(s.queued_tokens(n) == 0 for n in s.queues)
@@ -412,12 +619,42 @@ class StreamServer:
                     with self._wake:
                         self._wake.notify_all()
 
-            # 6) swap / repartition bookkeeping
+            # 5b) checkpoint: explicit requests and the periodic schedule
+            # both write at this point — after completion, before swaps —
+            # with the device lanes force-drained first (a real block
+            # boundary; see serve_stream.recovery)
+            with self._lock:
+                req, self._ckpt_request = self._ckpt_request, None
+            if req is None and self._ckpt_dir is not None \
+                    and self._ckpt_every is not None:
+                now = time.perf_counter()
+                if now - self._ckpt_last >= self._ckpt_every:
+                    self._ckpt_last = now
+                    with self._lock:
+                        self._ckpt_step += 1
+                        step = self._ckpt_step
+                    req = {
+                        "dir": self._ckpt_dir, "step": step, "keep": 3,
+                        "event": None, "path": None, "error": None,
+                    }
+            if req is not None:
+                self._write_checkpoint(req)
+
+            # 6) swap / repartition bookkeeping (the repartitioner is
+            # ignored while degraded: the quarantined device must not be
+            # re-proposed by a MILP that cannot see it is dead)
             if swapping and not pending_device:
-                if all(s.pipeline.quiescent() for s in active):
+                if all(
+                    s.pipeline.quiescent()
+                    for s in active if not s.finished.is_set()
+                ):
                     self._do_swap()
                     continue
-            if self.repartitioner is not None and not swapping:
+            if (
+                self.repartitioner is not None
+                and not swapping
+                and not self._quarantined
+            ):
                 # flush live sessions' link deltas into the window first, so
                 # the MILP sees channel traffic from still-open streams too
                 if self._round % 32 == 0:
@@ -446,6 +683,11 @@ class StreamServer:
                 backoff.reset()
                 dev_backoff.reset()
 
+        if self._killed:
+            # hard-kill (crash simulation): no flush, no completion — the
+            # recovery path must work from whatever the last checkpoint
+            # captured, exactly as it would after a process kill
+            return
         # shutdown: flush anything still in flight so state stays consistent
         for batcher in self._batchers.values():
             batcher.drain()
@@ -459,15 +701,171 @@ class StreamServer:
         while progressed:
             progressed = False
             for s in sessions:
-                if s.pipeline is None:
+                if s.pipeline is None or s.error is not None:
                     continue
-                if s.pipeline.host_round(self.telemetry):
+                if self._guarded(
+                    s, s.pipeline.host_round, "shutdown flush",
+                    self.telemetry,
+                ):
                     progressed = True
-                n = s.pipeline.drain_egress()
+                n = self._guarded(
+                    s, s.pipeline.drain_egress, "shutdown flush"
+                )
                 if n:
                     self.telemetry.count("tokens_delivered", n)
                     self._observe_delivery(s, n)
                     progressed = True
+
+    # -- fault paths: isolate, retry, degrade ---------------------------------
+    def _fault_instant(self, name: str, **args) -> None:
+        """Trace instant for one fault-path transition (engine track)."""
+        if self.recorder is not None:
+            self.recorder.instant("engine", name, "engine", args or None)
+
+    def _guarded(self, s: StreamSession, fn, where: str, *args) -> int:
+        """Run one session's round step; a failure fails THAT session."""
+        if s.finished.is_set():
+            return 0
+        try:
+            return fn(*args)
+        except Exception as e:
+            self._fail_session(s, e, where)
+            return 0
+
+    def _fail_session(
+        self, s: StreamSession, exc: BaseException, where: str
+    ) -> None:
+        """Blast-radius isolation: mark one session failed (captured
+        traceback delivered to its client via ``output()``/``error``),
+        keep the engine and every other session running."""
+        if s.finished.is_set():
+            return
+        tb = "".join(
+            traceback.format_exception(type(exc), exc, exc.__traceback__)
+        )
+        s.error = (
+            f"session {s.sid} failed during {where}: {exc!r}\n{tb}"
+        )
+        self._c_faults.inc()
+        self._fault_instant(
+            "session_fault", sid=s.sid, where=where, error=repr(exc)
+        )
+        try:
+            self._record_links(s.pipeline)
+        except Exception:  # noqa: BLE001 — already on the failure path
+            pass
+        s.finished.set()
+        self._session_closed(s)
+        with self._wake:
+            self._wake.notify_all()
+
+    def _launch_with_retry(
+        self, pid: str, batcher: DeviceBatcher, stages: List
+    ) -> Tuple[int, Optional[BaseException]]:
+        """Bounded exponential-backoff retry around one device launch.
+
+        The chaos/fault site sits at launch *entry*, before any staging, so
+        a failed attempt leaves every FIFO and stage untouched and the
+        retry replays the identical round — transient faults cost latency,
+        never tokens.  Returns ``(lanes, None)`` on success or ``(0, err)``
+        when the partition looks persistently dead (degrade next)."""
+        delay = self.retry_base_s
+        for attempt in range(self.launch_retries + 1):
+            try:
+                lanes = batcher.launch(stages)
+            except Exception as e:  # noqa: PERF203 — the retry loop IS the point
+                self._c_faults.inc()
+                self._fault_instant(
+                    "launch_fault", partition=pid, attempt=attempt,
+                    error=repr(e),
+                )
+                if attempt == self.launch_retries:
+                    return 0, e
+                time.sleep(delay)
+                delay = min(delay * 2.0, 0.25)
+            else:
+                if attempt:
+                    # a retry went through: the fault was transient
+                    self._c_recoveries.inc()
+                    self._fault_instant(
+                        "launch_retry_ok", partition=pid, attempt=attempt
+                    )
+                return lanes, None
+        return 0, None  # unreachable; keeps type checkers honest
+
+    def _poll_failed(
+        self, pid: str, batcher: DeviceBatcher, exc: BaseException
+    ) -> None:
+        """A retire failed: the partition's in-flight rounds are gone.
+        Their riders lose tokens — fail those sessions loudly (never
+        silently truncate a stream), then let the caller degrade."""
+        self._c_faults.inc()
+        self._fault_instant(
+            "retire_fault", partition=pid, error=repr(exc),
+            lost_rounds=len(batcher.inflight),
+        )
+        lost = {
+            id(st) for entry in batcher.inflight for st in entry.riders
+        }
+        batcher.inflight.clear()
+        if not lost:
+            return
+        with self._lock:
+            sessions = list(self._sessions)
+        for s in sessions:
+            if s.finished.is_set() or s.pipeline is None:
+                continue
+            if any(
+                id(st) in lost for st in s.pipeline.stages.values()
+            ):
+                st = s.pipeline.stages.get(pid)
+                if st is not None:
+                    st.inflight = 0
+                self._fail_session(
+                    s, exc,
+                    f"device retire on partition {pid!r} (in-flight "
+                    f"tokens lost)",
+                )
+
+    def _degrade(self, pid: str, exc: BaseException) -> None:
+        """Quarantine a persistently failing device partition and hot-swap
+        every live session onto the all-host placement (forced: the dead
+        device cannot drain, so FIFO residue is transplanted by authored
+        channel key instead of waiting for quiescence).  Serving continues
+        degraded — host execution is bit-identical to the device path
+        (the conformance invariant), so clients only see latency."""
+        from repro.frontend.program import synthesize_xcf
+
+        if pid in self._quarantined:
+            return
+        self._quarantined.add(pid)
+        self._g_degraded.set(1.0)
+        self._fault_instant("degrade", partition=pid, error=repr(exc))
+        xcf = synthesize_xcf(self._program.graph, "host")
+        self._do_swap(xcf=xcf, forced=True)
+        # the swap kept every live session's tokens: that is a recovery
+        self._c_recoveries.inc()
+
+    def _write_checkpoint(self, req: Dict) -> None:
+        """Engine-side checkpoint write at a drained boundary."""
+        from repro.serve_stream import recovery
+
+        try:
+            for b in self._batchers.values():
+                b.drain()
+            req["path"] = recovery.write_checkpoint(
+                self, req["dir"], step=req["step"], keep=req["keep"]
+            )
+            self._fault_instant("checkpoint", step=req["step"])
+        except Exception as e:  # noqa: BLE001 — surfaced to the requester
+            self._c_faults.inc()
+            self._fault_instant(
+                "checkpoint_fault", step=req["step"], error=repr(e)
+            )
+            req["error"] = e
+        finally:
+            if req["event"] is not None:
+                req["event"].set()
 
     def _stall_check(
         self, active: List[StreamSession], swapping: bool
@@ -585,10 +983,24 @@ class StreamServer:
                 )
 
     # -- the hot swap ----------------------------------------------------------
-    def _do_swap(self) -> None:
+    def _do_swap(self, xcf=None, forced: bool = False) -> None:
+        """Recompile onto ``xcf`` and rebuild every live pipeline.
+
+        The planned path (``xcf=None``: take the pending request) runs at a
+        fully drained boundary, so actor state is the only thing to
+        transplant.  A **forced** swap (partition quarantine) cannot wait
+        for quiescence — the device that would drain the tokens is the
+        thing that failed — so healthy lanes are force-drained, a dead
+        lane's in-flight rounds are retired if the device still answers
+        (riders fail loudly only when retirement itself raises), and
+        whatever still sits in host-visible FIFOs is transplanted by
+        authored channel key alongside the actor state."""
         with self._lock:
-            xcf = self._pending_xcf
-            self._pending_xcf = None
+            if xcf is None:
+                xcf = self._pending_xcf
+                self._pending_xcf = None
+            else:
+                self._pending_xcf = None  # a forced swap overrides a plan
             if xcf is None:
                 return
             old = self._program
@@ -597,13 +1009,30 @@ class StreamServer:
             for s in self._sessions:
                 if not s.finished.is_set():
                     self._record_links(s.pipeline)
+            if forced:
+                for pid, b in self._batchers.items():
+                    if pid in self._quarantined and b.inflight:
+                        # a quarantined lane's in-flight rounds were already
+                        # dispatched — a partition that stopped *accepting*
+                        # launches usually still retires them, so try that
+                        # first (no tokens lost); fail the riders loudly
+                        # only when retirement itself is broken
+                        try:
+                            b.drain()
+                        except Exception as e:  # noqa: BLE001
+                            self._poll_failed(pid, b, e)
+                    elif pid not in self._quarantined:
+                        b.drain()
             self._program = old.repartition(xcf=xcf)
             self._batchers = self._make_batchers()
             for s in self._sessions:
                 if s.finished.is_set():
                     continue
                 carry = s.pipeline.carry_state()
-                s.pipeline = self._build_pipeline(s, carry=carry)
+                residue = s.pipeline.carry_fifos() if forced else None
+                s.pipeline = self._build_pipeline(
+                    s, carry=carry, carry_fifos=residue
+                )
         self.telemetry.swapped({
             "from": old_assignment,
             "to": self._program.xcf.assignment(),
@@ -612,6 +1041,9 @@ class StreamServer:
         if self.recorder is not None:
             self.recorder.instant(
                 "engine", "hot_swap", "engine",
-                {"to": self._program.xcf.assignment()},
+                {
+                    "to": self._program.xcf.assignment(),
+                    "forced": forced,
+                },
             )
         self.notify_work()

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.actor_machine import ActorMachine, BasicController, PortEnv
 from repro.ir.ir import IRModule
+from repro.observability.trace_profile import authored_channel_key
 from repro.runtime.fifo import ReaderEndpoint, RingFifo, WriterEndpoint
 from repro.runtime.plink import _np_dtype
 
@@ -374,7 +375,9 @@ class SessionPipeline:
         default_depth: int = 4096,
         max_execs_per_invoke: int = 10_000,
         carry_state: Optional[Dict[str, Dict]] = None,
+        carry_fifos: Optional[Dict[Tuple, List]] = None,
         recorder=None,
+        chaos=None,
     ):
         from repro.runtime.fifo import ArrayFifo
 
@@ -382,6 +385,7 @@ class SessionPipeline:
         self.session = session
         self.max_execs_per_invoke = max_execs_per_invoke
         self.recorder = recorder  # streamtrace (None = untraced server)
+        self.chaos = chaos  # fault injection (None = no chaos)
         self._track = f"session:{session.sid}"
 
         hw_of = module.hw_assignment()
@@ -460,11 +464,29 @@ class SessionPipeline:
                 )
             else:
                 readers[ch.dst][ch.dst_port] = ReaderEndpoint(f)
+            # fault-path transplant: a forced swap (partition quarantine) or
+            # a checkpoint restore rebuilds the pipeline *with* residual
+            # tokens still sitting in host-visible FIFOs.  Residue is keyed
+            # by AUTHORED channel key because fusion renames lowered keys
+            # differently across placements (``fusedN``/``member__PORT``).
+            if carry_fifos:
+                residue = carry_fifos.get(
+                    authored_channel_key(module, ch.key)
+                )
+                if residue:
+                    f.write(list(residue))
+                    f.publish_writer()
 
         # per-channel totals already folded into server telemetry — the
         # engine records *deltas* periodically, so long-lived sessions feed
-        # the online repartitioner too, not just finished ones
-        self._link_marks: Dict[Tuple, int] = {}
+        # the online repartitioner too, not just finished ones; transplanted
+        # residue starts past the mark (it was already recorded once by the
+        # pipeline that originally moved it)
+        self._link_marks: Dict[Tuple, int] = {
+            key: f.total_written
+            for key, f in self.fifos.items()
+            if f.total_written
+        }
 
         carry = carry_state or {}
         self.instances: Dict[str, object] = {}
@@ -536,7 +558,12 @@ class SessionPipeline:
         actors (``core.profiler.profile_from_telemetry``)."""
         execs = 0
         rec = self.recorder
+        ch = self.chaos
         for name, inst in self.instances.items():
+            if ch is not None:
+                # chaos site: one occurrence per actor invoke per round —
+                # ``actor:<name>@s<sid>`` targets one session's actors
+                ch.poke(f"actor:{name}@s{self.session.sid}")
             t0 = time.perf_counter_ns()
             e = inst.invoke(self.max_execs_per_invoke)
             if e:
@@ -603,6 +630,23 @@ class SessionPipeline:
         for stage in self.stages.values():
             carry.update(_flatten_device_state(stage))
         return carry
+
+    def carry_fifos(self) -> Dict[Tuple, List]:
+        """Residual tokens per **authored** channel key (non-consuming).
+
+        The fault-path complement of ``carry_state``: a forced swap cannot
+        wait for quiescence (the device that would drain the tokens is the
+        thing that failed), so whatever is still sitting in host-visible
+        FIFOs is peeked here and written into the rebuilt pipeline's FIFOs
+        (`carry_fifos=` on the constructor).  Device-internal channels hold
+        no cross-launch tokens (SDF regions launch whole iterations), so
+        host FIFOs + admission queues are the complete token residue."""
+        out: Dict[Tuple, List] = {}
+        for key, f in self.fifos.items():
+            n = f.count()
+            if n:
+                out[authored_channel_key(self.module, key)] = list(f.peek(n))
+        return out
 
 
 # -- device-state transplant across placements ------------------------------

@@ -221,6 +221,82 @@ def test_differential_conformance(case):
 
 
 # ---------------------------------------------------------------------------
+# crash/restart axis: serve -> checkpoint mid-stream -> kill -> recover
+# ---------------------------------------------------------------------------
+
+
+def _check_crash_restart(case, ckpt_dir):
+    """Serve the generated network, checkpoint mid-stream, kill the engine,
+    recover, submit the rest — the reassembled output must equal the
+    interpreted-host reference token-for-token (the recovery contract:
+    checkpointed prefix restored exactly, deterministic resume)."""
+    from repro.serve_stream import StreamServer
+
+    g, got, _xcf = _build(case)
+    repro.compile(g, backend="host", fuse=False).run()
+    host = list(got)
+    got.clear()
+
+    tokens = [float(v) for v in case["tokens"]]
+    half = len(tokens) // 2
+    g2, _, xcf2 = _build(case)
+    prog = repro.compile(g2, xcf2, block=BLOCK, fuse=True, megastep=False)
+    server = prog.serve(start=True)
+    s = server.open_session()
+    if half:
+        s.submit(tokens[:half])
+    server.checkpoint(ckpt_dir)
+    server.kill()
+
+    g3, _, xcf3 = _build(case)
+    prog3 = repro.compile(g3, xcf3, block=BLOCK, fuse=True, megastep=False)
+    server2 = StreamServer.recover(prog3, ckpt_dir, start=True)
+    try:
+        s2 = server2.session(s.sid)
+        s2.submit(tokens[half:])
+        s2.close()
+        assert server2.drain(timeout=120)
+        out = s2.output()
+    finally:
+        server2.stop()
+    assert out == host, (case, out[:8], host[:8])
+
+
+def test_crash_restart_smoke(tmp_path):
+    """Hand-rolled crash/restart cases — run even without hypothesis."""
+    cases = [
+        {
+            "ops": [("affine", 1, 2, -1), ("negate",), ("clip", -10, 10)],
+            "tokens": list(range(-8, 8)),
+            "n_dev": 2, "n_threads": 2, "place": [2, 3, 2, 0],
+        },
+        {   # chain spread over three device partitions
+            "ops": [("affine", 0, 3, 1), ("clip", -20, 20), ("negate",)],
+            "tokens": [5, -3, 0, 8, -8, 1, 2, -7],
+            "n_dev": 3, "n_threads": 1, "place": [1, 2, 3, 1],
+        },
+    ]
+    for i, case in enumerate(cases):
+        _check_crash_restart(case, tmp_path / f"case{i}")
+
+
+@given(case=case_strategy)
+@settings(max_examples=max(5, MAX_EXAMPLES // 5), deadline=None,
+          derandomize=True)
+def test_conformance_crash_restart(case):
+    """The fuzzer's crash/restart axis: random networks + placements must
+    survive a mid-stream kill-and-recover bit-identically."""
+    import shutil as _shutil
+    import tempfile
+
+    d = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        _check_crash_restart(case, d)
+    finally:
+        _shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
 # seeded-bad networks: streamcheck must reject them with stable codes
 # ---------------------------------------------------------------------------
 
